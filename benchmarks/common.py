@@ -1,0 +1,28 @@
+"""Shared benchmark helpers: CSV emission + timed sims."""
+from __future__ import annotations
+
+import statistics as st
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # microseconds
+
+
+def mean(xs):
+    xs = list(xs)
+    return st.fmean(xs) if xs else 0.0
+
+
+def p99(xs):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(len(xs) * 0.99))] if xs else 0.0

@@ -1,0 +1,41 @@
+"""Fig. 12: sensitivity to (a) workload locality x batch size and
+(b) model-pool size scheduled onto one GPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, mean
+from repro.core import POLICIES, ClusterSim, PAPER_MODELS, generate_trace
+from repro.core.trace import SimModel
+
+
+def run():
+    # (a) locality x batch
+    for loc in ["L1", "L2", "L3", "L4"]:
+        for bs in [1, 16, 64]:
+            trace = generate_trace(n_requests=250, locality=loc,
+                                   mean_interarrival=25.0, batch_size=bs, seed=12)
+            lt, lb = {}, {}
+            for pol in ["sllm", "tangram"]:
+                sim = ClusterSim(PAPER_MODELS, POLICIES[pol], n_workers=1, seed=3)
+                cold = [r for r in sim.run(trace) if not r.warm]
+                lt[pol] = max(mean(r.load_phase for r in cold), 1e-6)
+            emit(f"fig12a.{loc}.bs{bs}", lt["tangram"] * 1e6,
+                 f"sllm_s={lt['sllm']:.2f};speedup={lt['sllm']/lt['tangram']:.2f}x")
+
+    # (b) model pool size sweep: subsets of increasing total bytes, one GPU
+    pool_sorted = sorted(PAPER_MODELS, key=lambda m: m.bytes)
+    for n_models in [2, 4, 6, 8]:
+        models = pool_sorted[:n_models]
+        total_gb = sum(m.bytes for m in models) / 1e9
+        trace = generate_trace(n_requests=250, locality="L3",
+                               mean_interarrival=25.0, seed=13,
+                               models=models)
+        out = {}
+        for pol in ["sllm", "tangram"]:
+            sim = ClusterSim(models, POLICIES[pol], n_workers=1, seed=3)
+            cold = [r for r in sim.run(trace) if not r.warm]
+            out[pol] = max(mean(r.load_phase for r in cold), 1e-6)
+        emit(f"fig12b.pool{total_gb:.0f}GB", out["tangram"] * 1e6,
+             f"sllm_s={out['sllm']:.2f};ratio={out['tangram']/out['sllm']:.2f}")

@@ -1,0 +1,27 @@
+"""Fig. 13: multi-GPU scalability — P99 TTFT vs worker count x request rate,
+Tangram (affinity) vs SLLM-CM (random placement).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, p99
+from repro.core import POLICIES, ClusterSim, PAPER_MODELS, generate_trace
+
+
+def run():
+    for rps in [0.4, 1.6]:
+        for n_workers in [1, 2, 4, 8]:
+            # short interactive outputs keep the fleet below saturation at
+            # the paper's request rates (their Fig. 13 regime)
+            trace = generate_trace(n_requests=300, locality="L3",
+                                   mean_interarrival=1.0 / rps, seed=14,
+                                   max_output_tokens=64)
+            vals = {}
+            for pol in ["sllm-cm", "tangram"]:
+                sim = ClusterSim(PAPER_MODELS, POLICIES[pol],
+                                 n_workers=n_workers, seed=3)
+                res = sim.run(trace)
+                vals[pol] = p99([r.ttft for r in res])
+            red = 100 * (1 - vals["tangram"] / max(vals["sllm-cm"], 1e-9))
+            emit(f"fig13.rps{rps}.gpus{n_workers}", vals["tangram"] * 1e6,
+                 f"sllm_cm_p99={vals['sllm-cm']:.1f}s;"
+                 f"tangram_p99={vals['tangram']:.1f}s;reduction={red:.0f}%")

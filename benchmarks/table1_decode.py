@@ -1,0 +1,85 @@
+"""Table 1: decode throughput with vs without ElasticKV (ODKV overhead).
+
+Two planes:
+  * real: the Engine decodes a smoke model on CPU through the paged-KV path
+    (ElasticKV + E-Attention kernel) vs the plain ring-cache path; the ratio
+    is the measured ODKV overhead (paper: < 3.2% loss).
+  * modeled: per-model decode tok/s from the calibrated memory-bound cost
+    model, with the ElasticKV per-step allocation overhead added.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import SHAPES, all_configs
+from repro.core import PAPER_MODELS, PhaseCosts, paper_l40
+from repro.core.cluster import KV_FREELIST_ALLOC_S, KV_POOL_ALLOC_S
+from repro.models import build_model
+from repro.serving.engine import Engine
+
+
+def run():
+    # ---------------- real CPU measurement on a smoke model ----------------
+    cfg = all_configs()["llama3.2-1b"].smoke()
+    eng = Engine(512 * 1024 * 1024)
+    eng.register("bench", cfg)
+    eng.load("bench")
+    inst = eng.start_instance("bench", num_pages=64)
+    m = build_model(cfg)
+    B, S = 4, 64
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=S, global_batch=B,
+                                kind="prefill")
+    batch = m.make_batch(jax.random.PRNGKey(0), shape)
+    logits = inst.prefill(batch)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # warm both paths
+    params = eng.params_of("bench")
+    _, ring_cache = jax.jit(lambda p, b: m.prefill(p, b, cache_cap=128))(params, batch)
+    rl, ring_cache = jax.jit(m.decode)(params, tok, jnp.full((B,), S, jnp.int32),
+                                       ring_cache)
+    _ = inst.decode(tok)
+
+    n = 12
+    t0 = time.perf_counter()
+    cur = tok
+    for i in range(n):
+        rl, ring_cache = jax.jit(m.decode)(params, cur,
+                                           jnp.full((B,), S + 1 + i, jnp.int32),
+                                           ring_cache)
+        cur = jnp.argmax(rl, -1).astype(jnp.int32)
+    jax.block_until_ready(rl)
+    ring_us = (time.perf_counter() - t0) / n * 1e6
+
+    t0 = time.perf_counter()
+    cur = tok
+    pl = None
+    for i in range(n):
+        pl = inst.decode(cur)
+        cur = jnp.argmax(pl, -1).astype(jnp.int32)
+    jax.block_until_ready(pl)
+    paged_us = (time.perf_counter() - t0) / n * 1e6
+    inst.finish()
+    emit("table1.real.ring_decode", ring_us, f"B={B};steps={n}")
+    emit("table1.real.paged_decode", paged_us,
+         f"overhead={100*(paged_us/ring_us-1):.1f}%_vs_ring(CPU-interpret)")
+
+    # ---------------- modeled per-paper-model throughput -------------------
+    costs = PhaseCosts(paper_l40())
+    batch_size = 16
+    for mm in PAPER_MODELS:
+        step = costs.decode_step_time(mm.bytes)
+        base_tps = batch_size / step
+        # ElasticKV overhead: ~1 freelist alloc per block per step window,
+        # pool fetch amortized over blocks_per_region
+        per_step_overhead = (batch_size * KV_FREELIST_ALLOC_S / 16
+                             + KV_POOL_ALLOC_S / 64)
+        tangram_tps = batch_size / (step + per_step_overhead)
+        emit(f"table1.model.{mm.model_id}", step * 1e6,
+             f"sllm_tps={base_tps:.0f};tangram_tps={tangram_tps:.0f};"
+             f"loss={100*(1-tangram_tps/base_tps):.2f}%")

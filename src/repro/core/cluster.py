@@ -1,0 +1,399 @@
+"""Event-driven cluster simulator: controller + N single-accelerator workers.
+
+This is the *cost plane* (DESIGN.md §2): the Tangram algorithms (Reuse Store,
+MCE+PGP allocation, ElasticKV block accounting, affinity scheduling) execute
+for real and byte-exact; wall-clock latencies for transfer/init/profile/
+prefill/decode come from the calibrated PhaseCosts model.
+
+Policies:
+  sllm      exclusive memory, parallel chunked loading (baseline)
+  sllm-c    + CRIU checkpointing (Init ~ gone)
+  sllm-cm   + Medusa offline profiling (Profile ~ gone)
+  reuse     SLLM + Tangram Reuse Store (Fig. 9 "+Reuse")
+  tangram   reuse + on-demand KV + affinity scheduling (full system)
+Variants toggled via SimPolicy fields for ablations (Fig. 10/12/13).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from collections import defaultdict, deque
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence
+
+from repro.core.costmodel import Hardware, PhaseCosts, paper_l40
+from repro.core.elastic_kv import ElasticKV
+from repro.core.regions import RState
+from repro.core.reuse_store import AllocationError, ReuseStore
+from repro.core.scheduler import affinity_schedule, random_schedule
+from repro.core.trace import Request, SimModel, synthetic_tensor_sizes
+from repro.models.tensors import TensorRecord
+
+
+@dataclass(frozen=True)
+class SimPolicy:
+    name: str
+    criu: bool = False
+    medusa: bool = False
+    reuse: bool = False  # retain tensors across instances (Reuse Store)
+    odkv: bool = False  # on-demand KV allocation
+    affinity: bool = False  # affinity-aware scheduling (else random)
+    alloc_policy: str = "mce+pgp"  # mce+pgp | mce+gm | rand+gm
+    keep_alive: float = 40.0
+    kv_block_tokens: int = 16
+    kv_blocks_per_region: int = 64
+    max_seq_reserve: int = 4096  # non-ODKV worst-case KV reservation
+
+
+POLICIES = {
+    "sllm": SimPolicy("sllm"),
+    "sllm-c": SimPolicy("sllm-c", criu=True),
+    "sllm-cm": SimPolicy("sllm-cm", criu=True, medusa=True),
+    "reuse": SimPolicy("reuse", criu=True, medusa=True, reuse=True),
+    "tangram": SimPolicy("tangram", criu=True, medusa=True, reuse=True,
+                         odkv=True, affinity=True),
+}
+
+
+@dataclass
+class RequestResult:
+    model_id: str
+    arrival: float
+    start: float
+    warm: bool
+    queue_s: float = 0.0
+    init_s: float = 0.0
+    load_s: float = 0.0
+    merge_s: float = 0.0
+    profile_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    kv_overhead_s: float = 0.0
+    reuse_fraction: float = 0.0
+    bytes_transferred: int = 0
+    bytes_merged: int = 0
+
+    @property
+    def ttft(self) -> float:
+        return (self.queue_s + self.init_s + self.load_s + self.merge_s
+                + self.profile_s + self.prefill_s)
+
+    @property
+    def load_phase(self) -> float:
+        return self.load_s + self.merge_s
+
+
+# per-op costs for ElasticKV runtime overhead (Fig. 11b calibration)
+KV_POOL_ALLOC_S = 2.0e-4
+KV_FREELIST_ALLOC_S = 2.0e-6
+
+
+class SimWorker:
+    def __init__(self, wid: str, capacity: int, costs: PhaseCosts,
+                 policy: SimPolicy):
+        self.device_id = wid
+        self.capacity = capacity
+        self.policy = policy
+        self.costs = costs
+        store_policy = policy.alloc_policy if policy.reuse else "none"
+        self.store = ReuseStore(capacity, costs, policy=store_policy)
+        self.busy_model: Optional[str] = None
+        self.idle_model: Optional[str] = None
+        self.queue: deque[Request] = deque()
+        self.kv: Optional[ElasticKV] = None
+        self.kv_reserved_offsets: list[int] = []
+        self.instance_seq = 0
+        self.last_assign = -1.0
+        self.failed = False
+
+    # --------------------------------------------------- DeviceView protocol
+    def can_run(self, model_bytes: int) -> bool:
+        return self.busy_model is None and model_bytes <= self.capacity
+
+    def reusable_bytes(self, records: Sequence[TensorRecord]) -> int:
+        return self.store.reusable_bytes(records)
+
+    # -------------------------------------------------------------- instance
+    def terminate_idle(self):
+        if self.idle_model is None:
+            return
+        if self.policy.reuse:
+            self.store.release(self.idle_model)
+        else:
+            self.store.release(self.idle_model)
+            self.store.drop_model(self.idle_model)
+        if self.kv is not None:
+            self.kv.finish_instance()
+            self.kv = None
+        for off in self.kv_reserved_offsets:
+            self.store.pool.free(off)
+        self.kv_reserved_offsets = []
+        self.idle_model = None
+        self.instance_seq += 1
+
+
+class ClusterSim:
+    def __init__(self, models: Sequence[SimModel], policy: SimPolicy, *,
+                 n_workers: int = 1, hw: Optional[Hardware] = None, seed: int = 0,
+                 pool_bytes: Optional[int] = None):
+        self.hw = hw or paper_l40()
+        self.costs = PhaseCosts(self.hw, criu=policy.criu, medusa=policy.medusa)
+        self.policy = policy
+        self.models = {m.model_id: m for m in models}
+        rng = random.Random(seed + 17)
+        self.records: dict[str, list[TensorRecord]] = {}
+        for m in models:
+            sizes = synthetic_tensor_sizes(m, rng)
+            self.records[m.model_id] = [
+                TensorRecord(name=f"{m.model_id}/t{i}", shape=(s // 2,),
+                             dtype="bfloat16", fingerprint=f"{m.model_id}/t{i}",
+                             nbytes=s)
+                for i, s in enumerate(sizes)
+            ]
+        cap = int(pool_bytes if pool_bytes is not None else self.hw.device_mem)
+        self.workers = [SimWorker(f"gpu{i}", cap, self.costs, policy)
+                        for i in range(n_workers)]
+        self.rng = random.Random(seed)
+        self.results: list[RequestResult] = []
+        self.global_queue: deque[Request] = deque()
+        self._events: list = []
+        self._seq = itertools.count()
+        self.access_counts: dict[str, float] = defaultdict(float)
+
+    # --------------------------------------------------------------- events
+    def _push(self, t: float, kind: str, payload):
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    # ------------------------------------------------------------ scheduling
+    def _update_miss_probs(self):
+        total = sum(self.access_counts.values()) or 1.0
+        probs = {m: c / total for m, c in self.access_counts.items()}
+        for w in self.workers:
+            w.store.miss_prob.update(probs)
+
+    def _try_schedule(self, now: float):
+        if not self.global_queue:
+            return
+        avail = [w for w in self.workers
+                 if w.busy_model is None and not getattr(w, "failed", False)]
+        if not avail:
+            return
+        # LRU candidate order: Algorithm 2 keeps the first device on latency
+        # ties, so presenting least-recently-assigned workers first spreads
+        # no-reuse models across the fleet instead of churning one pool.
+        avail.sort(key=lambda w: w.last_assign)
+        reqs = [(r.model_id, self.records[r.model_id],
+                 self.models[r.model_id].bytes) for r in self.global_queue]
+        if self.policy.affinity:
+            schedules, _ = affinity_schedule(reqs, avail, self.hw)
+        else:
+            schedules, _ = random_schedule(reqs, avail, self.rng)
+        chosen = {s.model_id: s.device_id for s in schedules}
+        assigned = []
+        byid = {w.device_id: w for w in self.workers}
+        remaining = deque()
+        used = set()
+        for r in self.global_queue:
+            dev = chosen.get(r.model_id)
+            if dev is not None and dev not in used and r.model_id not in used:
+                used.add(dev)
+                used.add(r.model_id)
+                assigned.append((r, byid[dev]))
+            else:
+                remaining.append(r)
+        self.global_queue = remaining
+        for r, w in assigned:
+            self._start_on_worker(now, r, w)
+
+    # --------------------------------------------------------- instance start
+    def _start_on_worker(self, now: float, req: Request, w: SimWorker):
+        model = self.models[req.model_id]
+        warm = w.idle_model == req.model_id
+        if not warm:
+            w.terminate_idle()
+        w.last_assign = now
+        res = RequestResult(model_id=req.model_id, arrival=req.time, start=now,
+                            warm=warm, queue_s=now - req.time)
+        if warm:
+            w.store.activate(req.model_id)
+            w.idle_model = None
+            res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
+                                                    req.batch_size)
+        else:
+            res.init_s = self.costs.init_time(model.bytes)
+            try:
+                rep = w.store.load_model(req.model_id, self.records[req.model_id],
+                                         now=now)
+            except AllocationError:
+                # model cannot fit: drop KV reservations then retry once
+                w.terminate_idle()
+                rep = w.store.load_model(req.model_id, self.records[req.model_id],
+                                         now=now)
+            res.load_s, res.merge_s = rep.load_seconds, rep.merge_seconds
+            res.reuse_fraction = rep.reuse_fraction
+            res.bytes_transferred = rep.bytes_transferred
+            res.bytes_merged = rep.bytes_merged
+            res.profile_s = self.costs.profile_time(model.bytes)
+            res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
+                                                    req.batch_size)
+
+        # ---- KV cache setup
+        # engines cap sequence memory at what the device can actually hold
+        # (vLLM's max_num_batched_tokens); same cap applies to every policy.
+        kv_budget = max(0, w.capacity - self.models[req.model_id].bytes)
+        token_cap = int(0.9 * kv_budget / max(model.kv_bytes_per_token, 1)
+                        / max(req.batch_size, 1))
+        prompt_tokens = max(8, min(req.prompt_tokens, token_cap // 2))
+        output_tokens = max(4, min(req.output_tokens, token_cap - prompt_tokens))
+        total_tokens = prompt_tokens + output_tokens
+        if self.policy.odkv:
+            if w.kv is None or w.kv.model_id != req.model_id:
+                if w.kv is not None:
+                    w.kv.finish_instance()
+                w.kv = ElasticKV(w.store, req.model_id,
+                                 block_tokens=self.policy.kv_block_tokens,
+                                 kv_bytes_per_token=model.kv_bytes_per_token,
+                                 blocks_per_region=self.policy.kv_blocks_per_region)
+            kv = w.kv
+            p0, f0 = kv.stats.pool_allocs, kv.stats.freelist_allocs
+            # prefill allocation (batched) + per-step growth, amortized here
+            for step_tokens in range(prompt_tokens, total_tokens + 1,
+                                     self.policy.kv_block_tokens):
+                try:
+                    kv.ensure({f"r{id(req)}-{b}": step_tokens
+                               for b in range(req.batch_size)})
+                except MemoryError:
+                    # device genuinely full: sequence is truncated (preemption
+                    # /swap in a real engine); decode proceeds on what fits
+                    output_tokens = max(4, step_tokens - prompt_tokens)
+                    break
+            res.kv_overhead_s = ((kv.stats.pool_allocs - p0) * KV_POOL_ALLOC_S
+                                 + (kv.stats.freelist_allocs - f0) * KV_FREELIST_ALLOC_S)
+            for b in range(req.batch_size):
+                kv.release(f"r{id(req)}-{b}")
+        else:
+            # worst-case reservation (vLLM-style): batch x max-seq KV bytes,
+            # EVICTING inactive resident tensors to make room — this is what
+            # destroys reuse at large batch sizes (Fig. 9/11a)
+            if not w.kv_reserved_offsets:
+                want = (req.batch_size * self.policy.max_seq_reserve
+                        * model.kv_bytes_per_token)
+                want = min(want, w.capacity - self.models[req.model_id].bytes)
+                if want > w.store.free_bytes():
+                    w.store.urgent_reclaim(want)
+                want = min(want, w.store.free_bytes())
+                remaining = want
+                while remaining > 0:
+                    chunk = min(remaining, w.store.pool.largest_free())
+                    if chunk <= 0:
+                        break
+                    reg = w.store.pool.alloc_best_fit(
+                        chunk, RState.KV, f"kvres:{req.model_id}", pinned=True)
+                    if reg is None:
+                        break
+                    w.kv_reserved_offsets.append(reg.offset)
+                    remaining -= chunk
+
+        res.decode_s = (self.costs.decode_time(model.bytes, output_tokens)
+                        + res.kv_overhead_s)
+        w.busy_model = req.model_id
+        done = now + res.ttft - res.queue_s + res.decode_s
+        self.results.append(res)
+        self._push(done, "instance_done", w.device_id)
+
+    # ------------------------------------------------------------- main loop
+    def inject_failure(self, time: float, worker_id: str,
+                       recover_after: Optional[float] = None):
+        """Schedule a node failure: the worker dies (pool wiped, in-flight
+        request re-queued); optionally rejoins after `recover_after` seconds
+        with a COLD pool — the elastic-scaling path."""
+        self._push(time, "fail", (worker_id, recover_after))
+
+    def run(self, trace: Sequence[Request]) -> list[RequestResult]:
+        for r in trace:
+            self._push(r.time, "arrival", r)
+        byid = {w.device_id: w for w in self.workers}
+        while self._events:
+            now, _, kind, payload = heapq.heappop(self._events)
+            if kind == "arrival":
+                req: Request = payload
+                self.access_counts[req.model_id] = (
+                    0.9 * self.access_counts[req.model_id] + 1.0)
+                self._update_miss_probs()
+                # same-model busy worker with an empty queue -> dispatch to
+                # that engine; otherwise let the controller scale out another
+                # instance on a free worker (serverless replica scaling)
+                target = next((w for w in self.workers
+                               if w.busy_model == req.model_id
+                               and not w.queue), None)
+                if target is not None and not any(
+                        w.busy_model is None for w in self.workers):
+                    target.queue.append(req)
+                else:
+                    self.global_queue.append(req)
+                    self._try_schedule(now)
+            elif kind == "instance_done":
+                w = byid[payload]
+                if getattr(w, "failed", False):
+                    continue  # the node died mid-flight; request was re-queued
+                model = w.busy_model
+                w.busy_model = None
+                if self.policy.odkv and w.kv is not None:
+                    pass  # delayed release keeps blocks in the free list
+                if w.queue:  # warm follow-ups for the same model
+                    w.idle_model = model
+                    self._start_on_worker(now, w.queue.popleft(), w)
+                else:
+                    w.idle_model = model
+                    exp_seq = w.instance_seq
+                    self._push(now + self.policy.keep_alive, "idle_expire",
+                               (w.device_id, model, exp_seq))
+                    self._try_schedule(now)
+            elif kind == "fail":
+                wid, recover_after = payload
+                w = byid[wid]
+                # drop device state entirely
+                w.idle_model = None
+                w.busy_model = None
+                w.kv = None
+                w.kv_reserved_offsets = []
+                w.store = ReuseStore(w.capacity, self.costs,
+                                     policy=(self.policy.alloc_policy
+                                             if self.policy.reuse else "none"))
+                self._update_miss_probs()
+                w.failed = True
+                # re-queue whatever the node had pending (its in-flight
+                # instance died with it; accounting rows already recorded)
+                while w.queue:
+                    self.global_queue.append(w.queue.popleft())
+                if recover_after is not None:
+                    self._push(now + recover_after, "recover", wid)
+            elif kind == "recover":
+                byid[payload].failed = False
+                self._try_schedule(now)
+            elif kind == "idle_expire":
+                wid, model, seq = payload
+                w = byid[wid]
+                if (w.idle_model == model and w.busy_model is None
+                        and w.instance_seq == seq):
+                    w.terminate_idle()
+                    self._try_schedule(now)
+        return self.results
+
+
+def summarize(results: Sequence[RequestResult]) -> dict[str, float]:
+    import statistics as st
+
+    if not results:
+        return {}
+    ttfts = sorted(r.ttft for r in results)
+    return {
+        "n": len(results),
+        "ttft_mean": st.fmean(ttfts),
+        "ttft_p50": ttfts[len(ttfts) // 2],
+        "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
+        "load_mean": st.fmean(r.load_phase for r in results),
+        "warm_frac": sum(r.warm for r in results) / len(results),
+        "reuse_frac_mean": st.fmean(r.reuse_fraction for r in results),
+    }

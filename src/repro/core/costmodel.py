@@ -1,0 +1,102 @@
+"""Cost model: transfer bandwidths, phase latencies, eviction cost (Eq. 2),
+and load-time estimation (Eq. 3).
+
+Two hardware profiles:
+  * `paper_l40()` — calibrated to the paper's single-L40 testbed (Fig. 2/8),
+    used by the benchmark simulations so the reproduced figures are comparable.
+  * `tpu_v5e()` — the TPU target this repo adapts the system to; used by the
+    roofline analysis (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI).
+
+All times in seconds, sizes in bytes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    device_mem: float  # usable accelerator memory for the Unified Memory Pool
+    h2d_bw: float  # host cache -> device (paper: PCIe; TPU: host DMA)
+    store_bw: float  # persistent store -> host cache (SSD)
+    d2d_bw: float  # on-device copy bandwidth (merge/compaction)
+    flops: float  # dense bf16 peak
+    hbm_bw: float  # device memory bandwidth
+    ici_bw: float = 0.0  # per-link interconnect (TPU)
+
+
+def paper_l40() -> Hardware:
+    # Effective (not peak) rates, calibrated so SLLM's GPT-20B Load ~= 8 s
+    # and Table-1 decode throughputs land in the reported range.
+    return Hardware(name="l40", device_mem=45e9, h2d_bw=5.0e9, store_bw=3.2e9,
+                    d2d_bw=300e9, flops=90e12, hbm_bw=700e9)
+
+
+def tpu_v5e() -> Hardware:
+    return Hardware(name="tpu_v5e", device_mem=16e9, h2d_bw=25e9, store_bw=3.2e9,
+                    d2d_bw=400e9, flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+@dataclass
+class PhaseCosts:
+    """Multi-phase initialization latencies (§2.2), per optimization level.
+
+    Flags mirror the paper's baselines: criu kills most of Init; medusa
+    (offline materialization) kills Profile; Tangram reuses tensors in Load.
+    """
+
+    hw: Hardware
+    criu: bool = False
+    medusa: bool = False
+
+    # calibration constants (fit to Fig. 2's GPT-20B breakdown)
+    init_base: float = 4.5
+    init_criu: float = 0.55
+    profile_base: float = 1.3
+    profile_per_gb: float = 0.045
+    profile_medusa: float = 0.05
+    kernel_launch: float = 0.45  # lazy CUDA kernel load during Prefill
+    decode_step_overhead: float = 0.020
+
+    # ------------------------------------------------------------- phases
+    def init_time(self, model_bytes: float) -> float:
+        return self.init_criu if self.criu else self.init_base + 0.02 * model_bytes / 1e9
+
+    def load_time(self, missing_bytes: float, *, in_host_cache: bool = True) -> float:
+        """Eq. 3 with the SLLM overlapped pipeline: the slower medium wins."""
+        bw = self.hw.h2d_bw if in_host_cache else min(self.hw.h2d_bw, self.hw.store_bw)
+        return missing_bytes / bw
+
+    def merge_time(self, moved_bytes: float) -> float:
+        return moved_bytes / self.hw.d2d_bw
+
+    def profile_time(self, model_bytes: float) -> float:
+        if self.medusa:
+            return self.profile_medusa
+        return self.profile_base + self.profile_per_gb * model_bytes / 1e9
+
+    def prefill_time(self, model_params: float, prompt_tokens: int,
+                     batch_size: int = 1) -> float:
+        flops = 2.0 * model_params * prompt_tokens * batch_size
+        mfu = 0.4
+        return self.kernel_launch + flops / (self.hw.flops * mfu)
+
+    def decode_step_time(self, model_bytes: float) -> float:
+        """Memory-bound decode: weights streamed once per step + overhead."""
+        return self.decode_step_overhead + model_bytes / self.hw.hbm_bw
+
+    def decode_time(self, model_bytes: float, out_tokens: int) -> float:
+        return out_tokens * self.decode_step_time(model_bytes)
+
+    # --------------------------------------------------- Eq. 2 eviction cost
+    def eviction_cost(self, tensor_bytes: float, miss_prob: float,
+                      alpha: float = 1.0) -> float:
+        return miss_prob * (tensor_bytes / self.hw.h2d_bw) * alpha
+
+
+def estimate_load_time(model_bytes: float, reusable_bytes: float,
+                       hw: Hardware, *, in_host_cache: bool = True) -> float:
+    """Eq. 3: t_load = (S - S') / B with overlapped store->cache->device."""
+    bw = hw.h2d_bw if in_host_cache else min(hw.h2d_bw, hw.store_bw)
+    return max(0.0, model_bytes - reusable_bytes) / bw

@@ -1,0 +1,177 @@
+"""Region list: the Unified Memory Pool's view of the device address space.
+
+The pool is a chain of contiguous regions, each FREE or allocated (TENSOR or
+KV), mirroring §3.2 of the paper.  Regions are kept sorted by offset; freeing
+coalesces with free neighbours.  KV regions belonging to a *running* instance
+are pinned (never moved by compaction) — they act as hard boundaries for
+Partitioned-Gain Packing subspaces.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field, replace
+from enum import Enum
+from typing import Iterable, Optional
+
+
+class RState(str, Enum):
+    FREE = "free"
+    TENSOR = "tensor"
+    KV = "kv"
+
+
+@dataclass
+class Region:
+    offset: int
+    size: int
+    state: RState = RState.FREE
+    owner: Optional[str] = None  # tensor fingerprint or model_id (KV)
+    pinned: bool = False  # immovable (active KV)
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.size
+
+    def __repr__(self):
+        tag = {RState.FREE: "F", RState.TENSOR: "T", RState.KV: "K"}[self.state]
+        pin = "!" if self.pinned else ""
+        return f"[{tag}{pin} {self.offset}+{self.size}]"
+
+
+class RegionList:
+    """Sorted, fully-covering, coalesced region chain over [0, capacity)."""
+
+    def __init__(self, capacity: int):
+        assert capacity > 0
+        self.capacity = capacity
+        self.regions: list[Region] = [Region(0, capacity)]
+
+    # ------------------------------------------------------------- invariants
+    def check(self):
+        assert self.regions[0].offset == 0
+        assert self.regions[-1].end == self.capacity
+        for a, b in zip(self.regions, self.regions[1:]):
+            assert a.end == b.offset, f"gap/overlap at {a} -> {b}"
+            assert not (a.state == RState.FREE and b.state == RState.FREE), \
+                f"uncoalesced free regions {a} {b}"
+        return True
+
+    # ---------------------------------------------------------------- queries
+    def _index_at(self, offset: int) -> int:
+        lo = bisect.bisect_right([r.offset for r in self.regions], offset) - 1
+        assert 0 <= lo < len(self.regions) and self.regions[lo].offset == offset, \
+            f"no region at offset {offset}"
+        return lo
+
+    def free_regions(self) -> list[Region]:
+        return [r for r in self.regions if r.state == RState.FREE]
+
+    def allocated_regions(self) -> list[Region]:
+        return [r for r in self.regions if r.state != RState.FREE]
+
+    def free_bytes(self) -> int:
+        return sum(r.size for r in self.free_regions())
+
+    def used_bytes(self) -> int:
+        return self.capacity - self.free_bytes()
+
+    def largest_free(self) -> int:
+        free = self.free_regions()
+        return max((r.size for r in free), default=0)
+
+    def fragmentation(self) -> float:
+        """1 - largest_free/total_free; 0 = one contiguous free block."""
+        fb = self.free_bytes()
+        return 0.0 if fb == 0 else 1.0 - self.largest_free() / fb
+
+    def find(self, owner: str) -> Optional[Region]:
+        for r in self.regions:
+            if r.owner == owner and r.state != RState.FREE:
+                return r
+        return None
+
+    # ------------------------------------------------------------- allocation
+    def alloc_best_fit(self, size: int, state: RState, owner: str,
+                       pinned: bool = False) -> Optional[Region]:
+        """Smallest free region that fits; splits the remainder off."""
+        best = None
+        for r in self.regions:
+            if r.state == RState.FREE and r.size >= size:
+                if best is None or r.size < best.size:
+                    best = r
+        if best is None:
+            return None
+        return self.alloc_at(best.offset, size, state, owner, pinned)
+
+    def alloc_at(self, offset: int, size: int, state: RState, owner: str,
+                 pinned: bool = False) -> Region:
+        """Carve `size` bytes from the free region starting at `offset`."""
+        i = self._index_at(offset)
+        r = self.regions[i]
+        assert r.state == RState.FREE and r.size >= size, f"bad alloc at {r}"
+        new = Region(offset, size, state, owner, pinned)
+        tail = []
+        if r.size > size:
+            tail = [Region(offset + size, r.size - size)]
+        self.regions[i : i + 1] = [new] + tail
+        return new
+
+    def free(self, offset: int) -> Region:
+        """Free the region starting at `offset`, coalescing neighbours."""
+        i = self._index_at(offset)
+        r = self.regions[i]
+        assert r.state != RState.FREE
+        r.state, r.owner, r.pinned = RState.FREE, None, False
+        # coalesce with right then left
+        if i + 1 < len(self.regions) and self.regions[i + 1].state == RState.FREE:
+            r.size += self.regions[i + 1].size
+            del self.regions[i + 1]
+        if i > 0 and self.regions[i - 1].state == RState.FREE:
+            self.regions[i - 1].size += r.size
+            del self.regions[i]
+            r = self.regions[i - 1]
+        return r
+
+    # -------------------------------------------------------------- compaction
+    def compact_span(self, lo_idx: int, hi_idx: int) -> tuple[int, dict[str, int]]:
+        """Slide all movable allocated regions in regions[lo_idx:hi_idx+1] to the
+        left edge of the span, producing one contiguous free region at the right.
+
+        Returns (bytes_moved, {owner: new_offset}).  Pinned regions must not be
+        inside the span (PGP treats them as subspace boundaries).
+        """
+        span = self.regions[lo_idx : hi_idx + 1]
+        assert all(not r.pinned for r in span), "pinned region inside compaction span"
+        base = span[0].offset
+        total = sum(r.size for r in span)
+        moved = 0
+        relocations: dict[str, int] = {}
+        new_span: list[Region] = []
+        cur = base
+        for r in span:
+            if r.state != RState.FREE:
+                if r.offset != cur:
+                    moved += r.size
+                    relocations[r.owner] = cur
+                new_span.append(Region(cur, r.size, r.state, r.owner, r.pinned))
+                cur += r.size
+        free_size = base + total - cur
+        if free_size:
+            new_span.append(Region(cur, free_size))
+        self.regions[lo_idx : hi_idx + 1] = new_span
+        self.coalesce()
+        return moved, relocations
+
+    def coalesce(self):
+        """Merge any adjacent free regions (O(n), n < ~1e3 per the paper §5.7)."""
+        j = 0
+        while j < len(self.regions) - 1:
+            a, b = self.regions[j], self.regions[j + 1]
+            if a.state == RState.FREE and b.state == RState.FREE:
+                a.size += b.size
+                del self.regions[j + 1]
+            else:
+                j += 1
+
+    def __repr__(self):
+        return " ".join(repr(r) for r in self.regions)

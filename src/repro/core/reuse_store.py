@@ -1,0 +1,237 @@
+"""Reuse Store (§3.1): per-device tensor-level model reuse over the Unified
+Memory Pool.
+
+Maintains the Tensor Map (fingerprint -> resident region), plans loads
+(hits vs misses), runs Stage-1 Minimal-Cost Eviction and Stage-2
+Partitioned-Gain Packing, and returns a LoadReport with the byte/time
+accounting the scheduler and benchmarks consume.
+
+The Reuse Store is the *algorithm plane*: it tracks bytes and addresses
+exactly.  The engine's *data plane* (`serving/engine.py`) holds the actual
+jax.Arrays and consults the store for which tensors are resident.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from repro.core.allocator import (AllocationError, EvictionCandidate, NewTensor,
+                                  apply_plan, global_merge_plan,
+                                  minimal_cost_eviction, partitioned_gain_packing)
+from repro.core.costmodel import Hardware, PhaseCosts
+from repro.core.regions import RegionList, RState
+from repro.models.tensors import TensorRecord
+
+
+@dataclass
+class TensorEntry:
+    record: TensorRecord
+    model_id: str
+    offset: int
+    last_access: float = 0.0
+    hits: int = 0
+
+
+@dataclass
+class LoadReport:
+    model_id: str
+    bytes_total: int = 0
+    bytes_hit: int = 0  # reused, no transfer
+    bytes_transferred: int = 0  # host -> device
+    bytes_evicted: int = 0
+    bytes_merged: int = 0  # device-side compaction copies
+    tensors_hit: int = 0
+    tensors_loaded: int = 0
+    compute_seconds: float = 0.0  # allocator planning wall time
+    load_seconds: float = 0.0  # modeled transfer time
+    merge_seconds: float = 0.0  # modeled compaction time
+
+    @property
+    def reuse_fraction(self) -> float:
+        return self.bytes_hit / self.bytes_total if self.bytes_total else 0.0
+
+    @property
+    def total_seconds(self) -> float:
+        return self.load_seconds + self.merge_seconds + self.compute_seconds
+
+
+class ReuseStore:
+    """One per accelerator (worker GPU / TPU slice)."""
+
+    def __init__(self, capacity: int, costs: PhaseCosts, *,
+                 policy: str = "mce+pgp"):
+        assert policy in ("mce+pgp", "mce+gm", "rand+gm", "none")
+        self.pool = RegionList(capacity)
+        self.costs = costs
+        self.policy = policy
+        self.tensor_map: dict[str, TensorEntry] = {}  # fingerprint -> entry
+        self.active_models: set[str] = set()
+        self.miss_prob: dict[str, float] = {}  # model_id -> p_m (from controller)
+        self.alpha: dict[str, float] = {}  # model_id -> latency sensitivity
+        self._rand_state = 0x9E3779B9
+
+    # ----------------------------------------------------------------- stats
+    def resident_bytes(self, model_id: Optional[str] = None) -> int:
+        return sum(e.record.nbytes for e in self.tensor_map.values()
+                   if model_id is None or e.model_id == model_id)
+
+    def reusable_bytes(self, records: Sequence[TensorRecord]) -> int:
+        """S' in Eq. 3: bytes of `records` already resident here."""
+        return sum(r.nbytes for r in records if r.fingerprint in self.tensor_map)
+
+    def free_bytes(self) -> int:
+        return self.pool.free_bytes()
+
+    # ------------------------------------------------------------- lifecycle
+    def activate(self, model_id: str):
+        self.active_models.add(model_id)
+
+    def release(self, model_id: str):
+        """Instance terminated: tensors STAY resident (the paper's key idea)."""
+        self.active_models.discard(model_id)
+
+    def drop_model(self, model_id: str):
+        """Hard-evict every tensor of a model (baseline behaviour)."""
+        for fp in [fp for fp, e in self.tensor_map.items() if e.model_id == model_id]:
+            self._evict(fp)
+
+    def _evict(self, fp: str) -> int:
+        e = self.tensor_map.pop(fp)
+        self.pool.free(e.offset)
+        return e.record.nbytes
+
+    # ------------------------------------------------------- eviction costs
+    def _candidates(self) -> list[EvictionCandidate]:
+        cands = []
+        for fp, e in self.tensor_map.items():
+            if e.model_id in self.active_models:
+                continue
+            if self.policy == "rand+gm":
+                # pseudo-random cost (baseline "Rand")
+                self._rand_state = (self._rand_state * 1103515245 + 12345) & 0x7FFFFFFF
+                cost = float(self._rand_state)
+            else:
+                cost = self.costs.eviction_cost(
+                    e.record.nbytes,
+                    self.miss_prob.get(e.model_id, 1.0),
+                    self.alpha.get(e.model_id, 1.0))
+            cands.append(EvictionCandidate(fp, e.offset, e.record.nbytes, cost))
+        return cands
+
+    # ------------------------------------------------------------------ load
+    def plan_load(self, records: Sequence[TensorRecord]):
+        hits = [r for r in records if r.fingerprint in self.tensor_map]
+        misses = [r for r in records if r.fingerprint not in self.tensor_map]
+        return hits, misses
+
+    def load_model(self, model_id: str, records: Sequence[TensorRecord], *,
+                   now: float = 0.0, in_host_cache: bool = True) -> LoadReport:
+        """Load a model: reuse hits, evict/pack/transfer misses.  §3.1 + §3.2."""
+        t0 = _time.perf_counter()
+        rep = LoadReport(model_id=model_id,
+                         bytes_total=sum(r.nbytes for r in records))
+        if self.policy == "none":
+            # exclusive baseline (SLLM): nothing resident between instances
+            hits, misses = [], list(records)
+        else:
+            hits, misses = self.plan_load(records)
+
+        for r in hits:
+            e = self.tensor_map[r.fingerprint]
+            e.last_access, e.hits = now, e.hits + 1
+            rep.bytes_hit += r.nbytes
+        rep.tensors_hit = len(hits)
+
+        if misses:
+            need = sum(r.nbytes for r in misses)
+            new_tensors = [NewTensor(r.fingerprint, r.nbytes) for r in misses]
+            placed = self._allocate(model_id, new_tensors, need, rep)
+            for r in misses:
+                self.tensor_map[r.fingerprint] = TensorEntry(
+                    record=r, model_id=model_id, offset=placed[r.fingerprint],
+                    last_access=now, hits=0)
+            rep.bytes_transferred = need
+            rep.tensors_loaded = len(misses)
+
+        self.activate(model_id)
+        rep.compute_seconds = _time.perf_counter() - t0
+        rep.load_seconds = self.costs.load_time(rep.bytes_transferred,
+                                                in_host_cache=in_host_cache)
+        rep.merge_seconds = self.costs.merge_time(rep.bytes_merged)
+        return rep
+
+    def _allocate(self, model_id: str, new_tensors: list[NewTensor], need: int,
+                  rep: LoadReport) -> dict[str, int]:
+        """Stage 1 (MCE) + Stage 2 (PGP or GlobalMerge), with retry-on-fragmentation."""
+        for attempt in range(8):
+            evictions = minimal_cost_eviction(self.pool, self._candidates(),
+                                              need + attempt * (need // 4))
+            for ev in evictions:
+                rep.bytes_evicted += self._evict(ev.fingerprint)
+            try:
+                if self.policy in ("mce+gm", "rand+gm"):
+                    plan = global_merge_plan(self.pool, new_tensors)
+                else:
+                    plan = partitioned_gain_packing(self.pool, new_tensors)
+                moved, relocations, placed = apply_plan(self.pool, plan)
+                rep.bytes_merged += moved
+                for owner, new_off in relocations.items():
+                    if owner in self.tensor_map:
+                        self.tensor_map[owner].offset = new_off
+                return placed
+            except AllocationError:
+                if not self._candidates():
+                    raise
+                continue
+        raise AllocationError(f"could not place {need}B for {model_id}")
+
+    # ------------------------------------------------ urgent KV reclamation
+    def urgent_reclaim(self, need: int) -> int:
+        """§3.3: decode needs KV blocks NOW — MCE-evict without any merging."""
+        try:
+            evictions = minimal_cost_eviction(self.pool, self._candidates(), need)
+        except AllocationError:
+            evictions = self._candidates()  # free everything reachable
+        return sum(self._evict(ev.fingerprint) for ev in evictions)
+
+    def urgent_reclaim_contiguous(self, block_bytes: int) -> bool:
+        """Create one contiguous free hole >= block_bytes for a KV block.
+
+        Pure MCE evicts the *cheapest* (typically smallest) tensors first,
+        which can leave only sub-block holes.  This pass instead picks the
+        sliding window of consecutive (free | evictable-tensor) regions whose
+        total size reaches block_bytes at minimal eviction cost, and evicts
+        exactly that window.  Beyond-paper refinement, documented in DESIGN.md.
+        """
+        cand_cost = {c.fingerprint: c.cost for c in self._candidates()}
+        regions = self.pool.regions
+        best: Optional[tuple[float, int, int]] = None  # (cost, i, j)
+        n = len(regions)
+        i = 0
+        while i < n:
+            size = 0
+            cost = 0.0
+            j = i
+            while j < n:
+                r = regions[j]
+                if r.state == RState.FREE:
+                    size += r.size
+                elif r.state == RState.TENSOR and r.owner in cand_cost:
+                    size += r.size
+                    cost += cand_cost[r.owner]
+                else:
+                    break
+                if size >= block_bytes:
+                    if best is None or cost < best[0]:
+                        best = (cost, i, j)
+                    break
+                j += 1
+            i += 1
+        if best is None:
+            return False
+        _, i, j = best
+        for r in list(regions[i : j + 1]):
+            if r.state == RState.TENSOR and r.owner in cand_cost:
+                self._evict(r.owner)
+        return True

@@ -1,0 +1,77 @@
+"""GPU-Affinity-Aware Scheduler (§3.4, Algorithm 2).
+
+Given queued model requests and the per-device Reuse Store states, route each
+request to the device with the lowest expected load time
+t_load = (S - S') / B (Eq. 3).  Baseline schedulers (random, first-fit) are
+provided for the Fig. 13 comparison.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Protocol, Sequence
+
+from repro.core.costmodel import Hardware, estimate_load_time
+from repro.models.tensors import TensorRecord
+
+
+class DeviceView(Protocol):
+    """What the controller can query about a candidate device (RPC in §5.7)."""
+
+    device_id: str
+
+    def can_run(self, model_bytes: int) -> bool: ...
+    def reusable_bytes(self, records: Sequence[TensorRecord]) -> int: ...
+
+
+@dataclass
+class ScheduleEntry:
+    model_id: str
+    device_id: str
+    expected_load_seconds: float
+    reuse_bytes: int
+
+
+def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]],
+                      devices: list, hw: Hardware,
+                      *, in_host_cache: bool = True) -> tuple[list[ScheduleEntry], list[str]]:
+    """Algorithm 2.  requests: (model_id, tensor_records, model_bytes).
+
+    Returns (schedules, still_queued_model_ids).  Each chosen device is
+    removed from the available pool (one instance per device, as in §2.1).
+    """
+    avail = list(devices)
+    schedules: list[ScheduleEntry] = []
+    queued: list[str] = []
+    for model_id, records, model_bytes in requests:
+        best = None
+        best_lat = float("inf")
+        best_reuse = 0
+        for dev in avail:
+            if not dev.can_run(model_bytes):
+                continue
+            reuse = dev.reusable_bytes(records)
+            lat = estimate_load_time(model_bytes, reuse, hw,
+                                     in_host_cache=in_host_cache)
+            if lat < best_lat:
+                best, best_lat, best_reuse = dev, lat, reuse
+        if best is None:
+            queued.append(model_id)
+        else:
+            schedules.append(ScheduleEntry(model_id, best.device_id, best_lat, best_reuse))
+            avail.remove(best)
+    return schedules, queued
+
+
+def random_schedule(requests, devices, rng) -> tuple[list[ScheduleEntry], list[str]]:
+    """SLLM-CM baseline: random selection among feasible devices (§5.6)."""
+    avail = list(devices)
+    schedules, queued = [], []
+    for model_id, records, model_bytes in requests:
+        feasible = [d for d in avail if d.can_run(model_bytes)]
+        if not feasible:
+            queued.append(model_id)
+            continue
+        dev = feasible[rng.randrange(len(feasible))]
+        schedules.append(ScheduleEntry(model_id, dev.device_id, float("nan"), 0))
+        avail.remove(dev)
+    return schedules, queued

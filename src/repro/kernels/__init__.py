@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: E-Attention.
+
+paged_attention.py  E-Attention -> TPU: paged decode attention over the
+                    Unified Memory Pool's KV slab; scalar-prefetched block
+                    tables drive the BlockSpec index_maps (DMA-level page
+                    indirection, the TPU analogue of physical-address access).
+flash_attention.py  blockwise causal/SWA/GQA prefill attention.
+ops.py              jitted public wrappers (interpret on CPU, native on TPU).
+ref.py              pure-jnp oracles; tests assert allclose across a
+                    shape/dtype sweep (tests/test_kernels.py).
+"""
+from repro.kernels.ops import (flash_attention, flash_attention_ref,  # noqa: F401
+                               paged_attention, paged_attention_ref)

@@ -1,0 +1,46 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On TPU the kernels run natively; elsewhere (this CPU container) they execute
+in interpret mode, which runs the exact kernel body in Python — the BlockSpec
+tiling, scalar prefetch and scratch behaviour is identical, only the backend
+differs.  `auto` resolves per the local backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ref as _ref
+
+
+def _use_interpret(mode: str) -> bool:
+    if mode == "auto":
+        return jax.default_backend() != "tpu"
+    return mode == "interpret"
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *, mode="auto"):
+    """Decode attention over the pool's paged KV slab. q: (B, H, hd)."""
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               interpret=_use_interpret(mode))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "mode"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, mode="auto"):
+    """Prefill attention (causal/SWA/GQA). q: (B, S, H, hd)."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_use_interpret(mode))
+
+
+# Oracles re-exported for tests/benchmarks.
+paged_attention_ref = jax.jit(_ref.paged_attention_ref)
+flash_attention_ref = jax.jit(_ref.flash_attention_ref,
+                              static_argnames=("causal", "window"))

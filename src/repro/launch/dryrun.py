@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract the roofline terms.
+
+  single-pod mesh (16, 16)    = 256 chips  ("data", "model")   -> roofline rows
+  multi-pod mesh (2, 16, 16)  = 512 chips  ("pod", "data", "model") -> proves
+                                            the pod axis shards
+
+Results are written incrementally to dryrun_results.json; cells already
+present are skipped unless --force.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, all_configs, runnable_cells, skipped_cells
+from repro.distributed.steps import make_step
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import HloModule, Roofline, model_flops_for
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "dryrun_results.json")
+
+
+def trip_hints(cfg, shape) -> list[int]:
+    """Plausible scan lengths inside this cell's HLO (see roofline.analysis)."""
+    hints = [rep for _, rep in cfg.segments]
+    hints += [cfg.encoder_layers, cfg.num_layers]
+    if shape.kind in ("train", "prefill") and shape.seq_len > 2048:
+        hints += [shape.seq_len // 512, shape.seq_len // 1024]  # q/kv chunks
+    hints += [shape.seq_len // c for c in (256,) if shape.seq_len % 256 == 0]
+    return sorted({h for h in hints if h and h > 1})
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, step_kwargs=None,
+             pad_heads: bool = False):
+    import dataclasses
+    cfg = all_configs()[arch]
+    if pad_heads and cfg.num_heads % 16:
+        # §Perf: pad query heads to the TP axis (zero-init extras in a real
+        # deployment) so attention shards by head instead of head_dim
+        cfg = dataclasses.replace(cfg, num_heads=-(-cfg.num_heads // 16) * 16)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    bundle = make_step(cfg, mesh, shape, **(step_kwargs or {}))
+    with mesh:
+        lowered = bundle.fn.lower(*bundle.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+
+    mod = HloModule(hlo_text, trip_hints(cfg, shape))
+    costs = mod.entry_cost()
+
+    mem_row = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    roof = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_kind, chips=chips,
+        hlo_flops_per_chip=costs.flops,
+        hlo_bytes_per_chip=costs.dot_bytes,
+        collective_bytes_per_chip=costs.collective_bytes,
+        collectives=costs.collectives,
+        model_flops=model_flops_for(cfg, shape),
+        param_bytes=cfg.param_bytes(),
+        memory_per_chip=mem_row,
+    )
+    row = roof.row()
+    row.update({
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "xla_flops_per_chip_unrolled_once": cost.get("flops") if cost else None,
+        "hlo_bytes_total_note": "dot operands+outputs, while-multiplied",
+        "step_desc": bundle.desc,
+    })
+    return row
+
+
+def load_results(path):
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_PATH))
+    ap.add_argument("--tag", default=None, help="suffix for result keys (perf variants)")
+    ap.add_argument("--moe-impl", default=None, choices=["scatter", "grouped", "gshard"])
+    ap.add_argument("--moe-ep", action="store_true", help="expert-parallel constraint over the model axis")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--pad-heads", action="store_true")
+    ap.add_argument("--seq-shard-kv", action="store_true")
+    args = ap.parse_args()
+
+    step_kwargs = {}
+    if args.moe_impl:
+        step_kwargs["moe_impl"] = args.moe_impl
+    if args.moe_ep:
+        step_kwargs["moe_ep_axis"] = "model"
+    if args.microbatches > 1:
+        step_kwargs["microbatches"] = args.microbatches
+    if args.seq_shard_kv:
+        step_kwargs["seq_shard_kv"] = True
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    cells = [(a, s) for a, s in runnable_cells()
+             if (args.arch is None or a == args.arch)
+             and (args.shape is None or s == args.shape)]
+    results = load_results(args.out)
+
+    failures = 0
+    for arch, shape_name in cells:
+        for mesh_kind in meshes:
+            key = f"{arch}|{shape_name}|{mesh_kind}"
+            if args.tag:
+                key += f"|{args.tag}"
+            if key in results and results[key].get("ok") and not args.force:
+                print(f"[skip] {key} (cached)")
+                continue
+            print(f"[run ] {key} ...", flush=True)
+            t0 = time.time()
+            try:
+                row = run_cell(arch, shape_name, mesh_kind,
+                               step_kwargs=step_kwargs, pad_heads=args.pad_heads)
+                row["variant"] = args.tag or "baseline"
+                row["step_kwargs"] = {**step_kwargs,
+                                      "pad_heads": args.pad_heads}
+                print(f"[ ok ] {key}: compile={row['compile_s']}s "
+                      f"bottleneck={row['bottleneck']} "
+                      f"compute={row['compute_s']*1e3:.1f}ms "
+                      f"mem={row['memory_s']*1e3:.1f}ms "
+                      f"coll={row['collective_s']*1e3:.1f}ms "
+                      f"useful={row['useful_flops_ratio']:.2f}", flush=True)
+            except Exception as e:
+                failures += 1
+                row = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:],
+                       "elapsed_s": round(time.time() - t0, 1)}
+                print(f"[FAIL] {key}: {row['error']}", flush=True)
+            results[key] = row
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    if not args.tag:
+        for arch, shape_name, why in skipped_cells():
+            key = f"{arch}|{shape_name}|skip"
+            results[key] = {"ok": True, "skipped": True, "reason": why}
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok") and not r.get("skipped"))
+    print(f"\ndone: {n_ok} cells ok, {failures} failures this run")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

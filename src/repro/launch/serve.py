@@ -1,0 +1,74 @@
+"""Serving launcher: a Tangram engine worker over the assigned architectures.
+
+Registers the requested models, then serves a model-switching request
+sequence, printing the Tangram load report (reuse fraction, bytes moved) and
+TTFT phases per request — the single-worker real-data-plane version of the
+cluster simulation.
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --models llama3.2-1b,deepseek-7b --smoke --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models import build_model
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="llama3.2-1b,deepseek-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    ap.add_argument("--pool-mb", type=int, default=512)
+    args = ap.parse_args()
+
+    names = args.models.split(",")
+    engine = Engine(args.pool_mb * 1024 * 1024)
+    cfgs = {}
+    for n in names:
+        cfg = get_config(n)
+        if args.smoke:
+            cfg = cfg.smoke()
+        cfgs[n] = cfg
+        engine.register(n, cfg)
+
+    import dataclasses
+    for i, name in zip(range(args.requests), itertools.cycle(names)):
+        t0 = time.time()
+        rep = engine.load(name)
+        load_s = time.time() - t0
+        inst = engine.start_instance(name, num_pages=128)
+        model = build_model(cfgs[name])
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=args.prompt_len,
+                                    global_batch=2, kind="prefill")
+        batch = model.make_batch(jax.random.PRNGKey(i), shape)
+        t1 = time.time()
+        logits = inst.prefill(batch)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        prefill_s = time.time() - t1
+        t2 = time.time()
+        toks = []
+        for _ in range(args.gen_tokens):
+            tok = jnp.argmax(inst.decode(tok), -1).astype(jnp.int32)
+            toks.append(int(tok[0]))
+        decode_s = time.time() - t2
+        inst.finish()
+        print(f"req {i}: {name:16s} reuse={rep.reuse_fraction:4.0%} "
+              f"transferred={rep.bytes_transferred/1e6:6.1f}MB "
+              f"(modeled load {rep.load_seconds*1e3:6.1f}ms, wall {load_s:.2f}s) "
+              f"prefill {prefill_s:.2f}s decode {decode_s/args.gen_tokens*1e3:.0f}ms/tok "
+              f"pool_free={engine.store.free_bytes()/1e6:.0f}MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Unified model API: build any assigned architecture, get its init / loss /
+prefill / decode functions and the ShapeDtypeStruct input specs for every
+assigned input shape (used by smoke tests, the engine, and the dry-run).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.common import F32
+
+# Sequences longer than this use blockwise (online-softmax) attention so the
+# score matrix never materializes.
+CHUNKED_ATTN_THRESHOLD = 2048
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, key, *, max_positions: int = 4096):
+        if self.cfg.family == "audio":
+            return encdec.init_params(key, self.cfg, max_positions=max_positions)
+        return lm.init_params(key, self.cfg)
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, *, remat: bool = True,
+             moe_capacity_factor: float = 1.25,
+             moe_impl: str = "scatter", moe_ep_axis: str = "") -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.loss(params, cfg, batch["tokens"], batch["enc_frames"],
+                               remat=remat)
+        S = batch["tokens"].shape[1]
+        return lm.lm_loss(
+            params, cfg, batch["tokens"],
+            mrope_positions=batch.get("mrope_positions"),
+            vision_embeds=batch.get("vision_embeds"),
+            attn_chunked=S > CHUNKED_ATTN_THRESHOLD,
+            remat=remat, moe_capacity_factor=moe_capacity_factor,
+            moe_impl=moe_impl, moe_ep_axis=moe_ep_axis)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch, *, cache_cap: int = 0, remat: bool = True,
+                moe_capacity_factor: float = 1.25):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.forward(params, cfg, batch["tokens"], batch["enc_frames"],
+                                  make_cache=True, cache_cap=cache_cap, remat=remat)
+        S = batch["tokens"].shape[1]
+        return lm.forward(
+            params, cfg, batch["tokens"],
+            mrope_positions=batch.get("mrope_positions"),
+            vision_embeds=batch.get("vision_embeds"),
+            make_cache=True, cache_cap=cache_cap or S,
+            attn_chunked=S > CHUNKED_ATTN_THRESHOLD, remat=remat,
+            moe_capacity_factor=moe_capacity_factor)
+
+    # ---------------------------------------------------------------- decode
+    def decode(self, params, token, pos, cache):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.decode_step(params, cfg, token, pos, cache)
+        mrope = None
+        if cfg.mrope_sections:
+            # text continuation: all three M-RoPE streams advance together
+            mrope = jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
+        return lm.decode_step(params, cfg, token, pos, cache, mrope_positions=mrope)
+
+    # ----------------------------------------------------------- cache specs
+    def cache_specs(self, batch: int, cap: int):
+        if self.cfg.family == "audio":
+            return encdec.cache_specs(self.cfg, batch, cap)
+        return lm.cache_specs(self.cfg, batch, cap)
+
+    # ------------------------------------------------------------ input specs
+    def input_specs(self, shape: ShapeConfig) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+        train/prefill: the full-sequence batch.  decode: one new token plus the
+        populated cache (capacity = shape.seq_len, ring-bounded per layer kind).
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = cfg.jnp_dtype
+
+        if shape.kind in ("train", "prefill"):
+            specs: dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if cfg.family == "audio":
+                specs["enc_frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), dt)
+            if cfg.family == "vlm":
+                specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_stub_patches, cfg.d_model), dt)
+                specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+            return specs
+
+        # decode: KV context of length S already resident
+        return {
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cache": self.cache_specs(B, S),
+        }
+
+    # ------------------------------------------------- concrete smoke batches
+    def make_batch(self, key, shape: ShapeConfig):
+        """Concrete random inputs matching input_specs (smoke tests / engine)."""
+        specs = self.input_specs(shape)
+        ks = iter(jax.random.split(key, 8))
+
+        def concretize(path, s):
+            pstr = str(path).lower()
+            if s.dtype == jnp.int32:
+                if "mrope" in pstr:
+                    # text-style positions: all three streams advance together
+                    return jnp.broadcast_to(
+                        jnp.arange(s.shape[-1], dtype=jnp.int32), s.shape)
+                if "pos" in pstr:
+                    return jnp.zeros(s.shape, jnp.int32)
+                return jax.random.randint(next(ks), s.shape, 0, self.cfg.vocab_size,
+                                          dtype=jnp.int32)
+            return jax.random.normal(next(ks), s.shape, jnp.float32).astype(s.dtype) * 0.02
+
+        return jax.tree_util.tree_map_with_path(concretize, specs)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

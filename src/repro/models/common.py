@@ -1,0 +1,214 @@
+"""Shared model building blocks: norms, rotary embeddings, attention, MLP.
+
+Everything is a pure function over explicit parameter dicts (no Flax/Haiku) so
+that parameter trees map 1:1 onto Tangram tensor records and shard specs.
+
+Conventions:
+  activations  (B, S, D)           bf16 (cfg.dtype)
+  q/k/v        (B, S, H|K, hd)
+  KV cache     (B, C, K, hd)       C = cache capacity (ring for SWA)
+  softmax/loss accumulate in fp32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------- init
+def uniform_scaled(key, shape, dtype, fan_in: int):
+    bound = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, jnp.float32, -bound, bound).astype(dtype)
+
+
+# --------------------------------------------------------------------------- norm
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(F32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------- rotary
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim // 2, dtype=F32) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float, mrope_sections: tuple[int, ...] = ()):
+    """Rotary embedding.
+
+    x: (B, S, H, hd).  positions: (B, S) int32, or (3, B, S) for M-RoPE where
+    the rows are (temporal, height, width) position streams and the frequency
+    slots are split into `mrope_sections` (sums to hd // 2).
+    """
+    hd = x.shape[-1]
+    inv_freq = rope_freqs(hd, theta)  # (hd/2,)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE expects (3, B, S) position ids"
+        assert sum(mrope_sections) == hd // 2
+        sec_id = jnp.repeat(
+            jnp.arange(len(mrope_sections)),
+            jnp.array(mrope_sections),
+            total_repeat_length=hd // 2,
+        )  # (hd/2,) -> which position stream drives each freq slot
+        pos = positions.astype(F32)  # (3, B, S)
+        angles = pos[sec_id] * inv_freq[:, None, None]  # (hd/2, B, S)
+        angles = jnp.moveaxis(angles, 0, -1)  # (B, S, hd/2)
+    else:
+        angles = positions.astype(F32)[..., None] * inv_freq  # (B, S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- attention
+def _gqa_scores(q, k):
+    """q (B,S,K,G,hd) x k (B,T,K,hd) -> (B,K,G,S,T) fp32 scores."""
+    return jnp.einsum("bskgh,btkh->bkgst", q, k, preferred_element_type=F32)
+
+
+def attention_dense(q, k, v, *, causal: bool, window: int = 0,
+                    q_positions=None, kv_positions=None, kv_valid=None):
+    """Reference dense attention with GQA, causal and sliding-window masking.
+
+    q: (B, S, H, hd); k, v: (B, T, K, hd).  positions default to arange.
+    kv_valid: optional (B, T) bool — entries that hold real tokens (decode ring).
+    Returns (B, S, H, hd) in q.dtype.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qq = q.reshape(B, S, K, G, hd)
+    scores = _gqa_scores(qq, k) * scale  # (B,K,G,S,T) fp32
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    qp = q_positions[:, None, None, :, None]  # (B,1,1,S,1)
+    kp = kv_positions[:, None, None, None, :]  # (B,1,1,1,T)
+    mask = jnp.ones((B, 1, 1, S, T), dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(q.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def attention_chunked(q, k, v, *, causal: bool, window: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 1024):
+    """Memory-bounded blockwise attention (online softmax), pure jnp.
+
+    Functionally identical to `attention_dense`; used for long sequences where
+    the (S, T) score matrix would not fit.  Outer scan over q chunks, inner
+    scan over kv chunks carrying (m, l, acc) online-softmax state.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0
+    nq, nk = S // q_chunk, T // kv_chunk
+
+    qr = q.reshape(B, nq, q_chunk, K, G, hd)
+    kr = k.reshape(B, nk, kv_chunk, K, hd)
+    vr = v.reshape(B, nk, kv_chunk, K, hd)
+
+    q_pos = jnp.arange(S, dtype=jnp.int32).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(T, dtype=jnp.int32).reshape(nk, kv_chunk)
+
+    def one_q_chunk(qi, qc):
+        # qc: (B, q_chunk, K, G, hd)
+        m0 = jnp.full((B, K, G, q_chunk), -jnp.inf, F32)
+        l0 = jnp.zeros((B, K, G, q_chunk), F32)
+        a0 = jnp.zeros((B, K, G, q_chunk, hd), F32)
+
+        def inner(carry, inp):
+            m, l, acc = carry
+            kj, kc, vc, kp = inp
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qc, kc,
+                           preferred_element_type=F32) * scale
+            qp = q_pos[qi][None, None, None, :, None]
+            kpp = kp[None, None, None, None, :]
+            msk = jnp.ones_like(s, dtype=bool)
+            if causal:
+                msk &= kpp <= qp
+            if window > 0:
+                msk &= kpp > qp - window
+            s = jnp.where(msk, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard: fully-masked running max stays -inf -> exp(0)=1 safe via where
+            corr = jnp.where(jnp.isinf(m_new), 0.0, jnp.exp(m - m_new))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk, p, 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(qc.dtype), vc,
+                            preferred_element_type=F32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0), kv_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,K,G,q_chunk,hd)
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (B,q_chunk,K,G,hd)
+
+    outs = jax.lax.map(lambda i: one_q_chunk(i, qr[:, i]), jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, K * G, hd)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, kv_valid):
+    """Single-token decode attention. q: (B, 1, H, hd); caches (B, C, K, hd);
+    kv_valid: (B, C) bool marking live cache slots."""
+    return attention_dense(
+        q, k_cache, v_cache, causal=False,
+        kv_valid=kv_valid,
+    )
+
+
+# --------------------------------------------------------------------------- mlp
+def swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, wg)) * jnp.einsum("bsd,df->bsf", x, wu)
+    return jnp.einsum("bsf,fd->bsd", h, wd)
+
+
+def gelu_mlp(x, wi, bi, wo, bo):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, wi) + bi)
+    return jnp.einsum("bsf,fd->bsd", h, wo) + bo
+
+
+# ------------------------------------------------------------------------- conv1d
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C).
+
+    Training/prefill: state=None, left-pads with zeros; returns (y, new_state)
+    where new_state = last (W-1) inputs.  Decode: x is (B, 1, C), state is
+    (B, W-1, C); returns (y, shifted state).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else jnp.zeros_like(pad)
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,251 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Assignment: the conv/mel frontend is a STUB — `enc_frames` arrives as
+precomputed frame embeddings (B, encoder_seq, d_model).  LayerNorm + GeLU MLP
+(+ biases) per the Whisper architecture; sinusoidal encoder positions, learned
+decoder positions; cross-attention K/V computed once at prefill and cached.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import F32, uniform_scaled
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(F32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * (1.0 + scale) + bias).astype(x.dtype)
+
+
+def _init_mha(key, cfg: ModelConfig):
+    d, hd, H = cfg.d_model, cfg.resolved_head_dim, cfg.num_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    return {
+        "wq": uniform_scaled(ks[0], (d, H, hd), dt, d),
+        "bq": jnp.zeros((H, hd), dt),
+        "wk": uniform_scaled(ks[1], (d, H, hd), dt, d),
+        "wv": uniform_scaled(ks[2], (d, H, hd), dt, d),
+        "bv": jnp.zeros((H, hd), dt),
+        "wo": uniform_scaled(ks[3], (H, hd, d), dt, H * hd),
+        "bo": jnp.zeros((d,), dt),
+    }
+
+
+def _init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    dt = cfg.jnp_dtype
+    return {
+        "wi": uniform_scaled(ks[0], (d, f), dt, d),
+        "bi": jnp.zeros((f,), dt),
+        "wo": uniform_scaled(ks[1], (f, d), dt, f),
+        "bo": jnp.zeros((d,), dt),
+    }
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1_s": jnp.zeros((cfg.d_model,), F32), "ln1_b": jnp.zeros((cfg.d_model,), F32),
+        "attn": _init_mha(ks[0], cfg),
+        "ln2_s": jnp.zeros((cfg.d_model,), F32), "ln2_b": jnp.zeros((cfg.d_model,), F32),
+        "mlp": _init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1_s": jnp.zeros((cfg.d_model,), F32), "ln1_b": jnp.zeros((cfg.d_model,), F32),
+        "self_attn": _init_mha(ks[0], cfg),
+        "ln2_s": jnp.zeros((cfg.d_model,), F32), "ln2_b": jnp.zeros((cfg.d_model,), F32),
+        "cross_attn": _init_mha(ks[1], cfg),
+        "ln3_s": jnp.zeros((cfg.d_model,), F32), "ln3_b": jnp.zeros((cfg.d_model,), F32),
+        "mlp": _init_mlp(ks[2], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig, *, max_positions: int = 4096):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    return {
+        "embed": uniform_scaled(ks[0], (cfg.padded_vocab, d), cfg.jnp_dtype, d),
+        "dec_pos": uniform_scaled(ks[1], (max_positions, d), cfg.jnp_dtype, d),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+            jax.random.split(ks[2], cfg.encoder_layers)),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+            jax.random.split(ks[3], cfg.num_layers)),
+        "enc_ln_s": jnp.zeros((d,), F32), "enc_ln_b": jnp.zeros((d,), F32),
+        "dec_ln_s": jnp.zeros((d,), F32), "dec_ln_b": jnp.zeros((d,), F32),
+    }
+
+
+def _mha(p, xq, xkv, *, causal, q_positions=None, kv_positions=None, kv_valid=None):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"]) + p["bq"]
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"]) + p["bv"]
+    o = common.attention_dense(q, k, v, causal=causal, q_positions=q_positions,
+                               kv_positions=kv_positions, kv_valid=kv_valid)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]) + p["bo"], (k, v)
+
+
+def _sinusoid_pos(S, d, dtype):
+    pos = jnp.arange(S, dtype=F32)[:, None]
+    dim = jnp.arange(d // 2, dtype=F32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def encode(params, cfg: ModelConfig, enc_frames):
+    """enc_frames: (B, Se, D) stub embeddings -> encoder hidden states."""
+    x = enc_frames + _sinusoid_pos(enc_frames.shape[1], cfg.d_model, enc_frames.dtype)
+
+    def body(h, p):
+        a, _ = _mha(p["attn"], layer_norm(h, p["ln1_s"], p["ln1_b"]),
+                    layer_norm(h, p["ln1_s"], p["ln1_b"]), causal=False)
+        h = h + a
+        m = common.gelu_mlp(layer_norm(h, p["ln2_s"], p["ln2_b"]),
+                            p["mlp"]["wi"], p["mlp"]["bi"], p["mlp"]["wo"], p["mlp"]["bo"])
+        return h + m, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layer_norm(x, params["enc_ln_s"], params["enc_ln_b"])
+
+
+def _dec_layer(p, x, enc_out_or_kv, ctx_positions, *, cached_cross=False,
+               self_kv=None, kv_positions=None, kv_valid=None):
+    """One decoder layer. Returns (x, (self_k, self_v), (cross_k, cross_v))."""
+    h = layer_norm(x, p["ln1_s"], p["ln1_b"])
+    if self_kv is None:
+        a, skv = _mha(p["self_attn"], h, h, causal=True, q_positions=ctx_positions,
+                      kv_positions=ctx_positions)
+    else:
+        # decode: caller provides updated cache (k, v) incl. current token
+        q = jnp.einsum("bsd,dhk->bshk", h, p["self_attn"]["wq"]) + p["self_attn"]["bq"]
+        o = common.attention_dense(q, self_kv[0], self_kv[1], causal=False,
+                                   q_positions=ctx_positions, kv_positions=kv_positions,
+                                   kv_valid=kv_valid)
+        a = jnp.einsum("bshk,hkd->bsd", o, p["self_attn"]["wo"]) + p["self_attn"]["bo"]
+        skv = self_kv
+    x = x + a
+
+    h = layer_norm(x, p["ln2_s"], p["ln2_b"])
+    if cached_cross:
+        ck, cv = enc_out_or_kv
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"]) + p["cross_attn"]["bq"]
+        o = common.attention_dense(q, ck, cv, causal=False)
+        c = jnp.einsum("bshk,hkd->bsd", o, p["cross_attn"]["wo"]) + p["cross_attn"]["bo"]
+        ckv = (ck, cv)
+    else:
+        c, ckv = _mha(p["cross_attn"], h, enc_out_or_kv, causal=False)
+    x = x + c
+
+    m = common.gelu_mlp(layer_norm(x, p["ln3_s"], p["ln3_b"]),
+                        p["mlp"]["wi"], p["mlp"]["bi"], p["mlp"]["wo"], p["mlp"]["bo"])
+    return x + m, skv, ckv
+
+
+def forward(params, cfg: ModelConfig, tokens, enc_frames, *, make_cache=False,
+            cache_cap=0, remat=True):
+    """Teacher-forced decode over full token sequence (train / prefill)."""
+    B, S = tokens.shape
+    enc = encode(params, cfg, enc_frames)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"][tokens] + params["dec_pos"][:S][None]
+
+    def body(h, p):
+        y, skv, ckv = _dec_layer(p, h, enc, pos)
+        out = (skv, ckv) if make_cache else None
+        return y, out
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+    x = layer_norm(x, params["dec_ln_s"], params["dec_ln_b"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+    cache = None
+    if make_cache:
+        (sk, sv), (ck, cv) = kvs
+        cap = cache_cap or S
+        # re-pack self-attention KV into a fixed-capacity cache
+        sk = _pad_cache(sk, cap)
+        sv = _pad_cache(sv, cap)
+        kv_pos = jnp.where(jnp.arange(cap) < S, jnp.arange(cap), -1)
+        kv_pos = jnp.broadcast_to(kv_pos, (B, cap)).astype(jnp.int32)
+        cache = {"self_k": sk, "self_v": sv, "kv_pos": kv_pos,
+                 "cross_k": ck, "cross_v": cv}
+    return logits, cache
+
+
+def _pad_cache(kv, cap):
+    # kv: (L, B, S, H, hd) -> (L, B, cap, H, hd)
+    Lc, B, S, H, hd = kv.shape
+    if S >= cap:
+        return kv[:, :, :cap]
+    pad = jnp.zeros((Lc, B, cap - S, H, hd), kv.dtype)
+    return jnp.concatenate([kv, pad], axis=2)
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache):
+    """One decoder token. token: (B,), pos: (B,), cache from forward()."""
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :] + params["dec_pos"][pos][:, None, :]
+    positions = pos[:, None]
+    cap = cache["self_k"].shape[2]
+    b_idx = jnp.arange(B)
+    slot = pos % cap
+    kv_pos = cache["kv_pos"].at[b_idx, slot].set(pos)  # shared across layers
+    kv_valid = kv_pos >= 0
+
+    def body(h, scanned):
+        p, sk, sv, ck, cv = scanned
+        hq = layer_norm(h, p["ln1_s"], p["ln1_b"])
+        nk = jnp.einsum("bsd,dhk->bshk", hq, p["self_attn"]["wk"])
+        nv = jnp.einsum("bsd,dhk->bshk", hq, p["self_attn"]["wv"]) + p["self_attn"]["bv"]
+        sk = sk.at[b_idx, slot].set(nk[:, 0])
+        sv = sv.at[b_idx, slot].set(nv[:, 0])
+        y, _, _ = _dec_layer(p, h, (ck, cv), positions, cached_cross=True,
+                             self_kv=(sk, sv), kv_positions=kv_pos,
+                             kv_valid=kv_valid)
+        return y, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]))
+    x = layer_norm(x, params["dec_ln_s"], params["dec_ln_b"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0]
+    new_cache = {"self_k": sk, "self_v": sv, "kv_pos": kv_pos,
+                 "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    return logits, new_cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cap: int):
+    H, hd, Ld = cfg.num_heads, cfg.resolved_head_dim, cfg.num_layers
+    dt = cfg.jnp_dtype
+    Se = cfg.encoder_seq
+    return {
+        "self_k": jax.ShapeDtypeStruct((Ld, batch, cap, H, hd), dt),
+        "self_v": jax.ShapeDtypeStruct((Ld, batch, cap, H, hd), dt),
+        "kv_pos": jax.ShapeDtypeStruct((batch, cap), jnp.int32),
+        "cross_k": jax.ShapeDtypeStruct((Ld, batch, Se, H, hd), dt),
+        "cross_v": jax.ShapeDtypeStruct((Ld, batch, Se, H, hd), dt),
+    }
+
+
+def loss(params, cfg: ModelConfig, tokens, enc_frames, **kw):
+    logits, _ = forward(params, cfg, tokens, enc_frames, **kw)
+    logits = logits[:, :-1].astype(F32)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,632 @@
+"""Layer-kind implementations: "attn"/"swa" transformer blocks (dense or MoE),
+"ssd" Mamba2 blocks, "rglru" RecurrentGemma blocks.
+
+Each kind exposes:
+  init_<kind>(key, cfg)                          -> params (dict)
+  <kind>_forward(params, x, cfg, ctx)            -> (y, layer_cache | None)
+  <kind>_decode(params, x, cache, cfg, ctx)      -> (y, new_cache)
+  <kind>_cache_spec(cfg, batch, cap)             -> pytree of ShapeDtypeStruct
+
+`ctx` carries sequence-level constants (positions, mrope ids, cache capacity,
+whether to emit a cache).  Caches use ring buffers for windowed attention so
+bounded-state archs stay O(window) at 500k contexts.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import F32, causal_conv1d, rms_norm, uniform_scaled
+
+
+@dataclass
+class SeqCtx:
+    """Per-call sequence context threaded through the layer stack."""
+
+    positions: jnp.ndarray  # (B, S) int32 absolute positions
+    mrope_positions: Optional[jnp.ndarray] = None  # (3, B, S) for M-RoPE
+    make_cache: bool = False  # prefill: emit decode caches
+    cache_cap: int = 0  # KV capacity for full-attention layers
+    attn_chunked: bool = False  # use blockwise attention (long sequences)
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    moe_capacity_factor: float = 1.25
+    moe_impl: str = "scatter"  # scatter | grouped | gshard (§Perf)
+    moe_ep_axis: str = ""  # mesh axis for expert-parallel constraints (gshard)
+
+
+def kv_capacity(cfg: ModelConfig, kind: str, cache_cap: int) -> int:
+    if kind == "swa" and cfg.sliding_window:
+        return min(cfg.sliding_window, cache_cap)
+    return cache_cap
+
+
+# =============================================================== attention block
+def init_attention(key, cfg: ModelConfig, kind: str, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 8)
+    dt = cfg.jnp_dtype
+    p = {
+        "wq": uniform_scaled(ks[0], (d, H, hd), dt, d),
+        "wk": uniform_scaled(ks[1], (d, K, hd), dt, d),
+        "wv": uniform_scaled(ks[2], (d, K, hd), dt, d),
+        "wo": uniform_scaled(ks[3], (H, hd, d), dt, H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((K, hd), dt)
+        p["bv"] = jnp.zeros((K, hd), dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def attention_forward(p, x, cfg: ModelConfig, ctx: SeqCtx, kind: str):
+    """Full-sequence causal attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = common.apply_rope(q, ctx.mrope_positions if cfg.mrope_sections else ctx.positions,
+                          cfg.rope_theta, cfg.mrope_sections)
+    k = common.apply_rope(k, ctx.mrope_positions if cfg.mrope_sections else ctx.positions,
+                          cfg.rope_theta, cfg.mrope_sections)
+    window = cfg.sliding_window if kind == "swa" else 0
+    if ctx.attn_chunked:
+        o = common.attention_chunked(q, k, v, causal=True, window=window,
+                                     q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk)
+    else:
+        o = common.attention_dense(q, k, v, causal=True, window=window,
+                                   q_positions=ctx.positions, kv_positions=ctx.positions)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+    cache = None
+    if ctx.make_cache:
+        cap = kv_capacity(cfg, kind, ctx.cache_cap)
+        cache = _fill_kv_cache(k, v, ctx.positions, cap)
+    return y, cache
+
+
+def _fill_kv_cache(k, v, positions, cap: int):
+    """Scatter the last `cap` tokens into a ring cache keyed by pos % cap."""
+    B, S, K, hd = k.shape
+    take = min(S, cap)
+    kt, vt, pt = k[:, -take:], v[:, -take:], positions[:, -take:]
+    slots = pt % cap  # (B, take)
+    b_idx = jnp.arange(B)[:, None]
+    kc = jnp.zeros((B, cap, K, hd), k.dtype).at[b_idx, slots].set(kt)
+    vc = jnp.zeros((B, cap, K, hd), v.dtype).at[b_idx, slots].set(vt)
+    pos_c = jnp.full((B, cap), -1, jnp.int32).at[b_idx, slots].set(pt)
+    return {"k": kc, "v": vc, "kv_pos": pos_c}
+
+
+def attention_decode(p, x, cache, cfg: ModelConfig, ctx: SeqCtx, kind: str):
+    """Single-token decode. x: (B, 1, D); ctx.positions: (B, 1) current pos."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)
+    pos = ctx.positions  # (B, 1)
+    rope_pos = ctx.mrope_positions if cfg.mrope_sections else pos
+    q = common.apply_rope(q, rope_pos, cfg.rope_theta, cfg.mrope_sections)
+    k = common.apply_rope(k, rope_pos, cfg.rope_theta, cfg.mrope_sections)
+
+    cap = cache["k"].shape[1]
+    slot = (pos[:, 0] % cap).astype(jnp.int32)  # (B,)
+    b_idx = jnp.arange(B)
+    kc = cache["k"].at[b_idx, slot].set(k[:, 0])
+    vc = cache["v"].at[b_idx, slot].set(v[:, 0])
+    kv_pos = cache["kv_pos"].at[b_idx, slot].set(pos[:, 0])
+
+    window = cfg.sliding_window if kind == "swa" else 0
+    valid = kv_pos >= 0
+    if window > 0:
+        valid &= kv_pos[:, :] > pos[:, :1] - window  # ring may hold stale slots
+    o = common.attention_dense(q, kc, vc, causal=False, q_positions=pos,
+                               kv_positions=kv_pos, kv_valid=valid)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return y, {"k": kc, "v": vc, "kv_pos": kv_pos}
+
+
+def attention_cache_spec(cfg: ModelConfig, kind: str, batch: int, cap: int):
+    cap = kv_capacity(cfg, kind, cap)
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = cfg.jnp_dtype
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cap, K, hd), dt),
+        "v": jax.ShapeDtypeStruct((batch, cap, K, hd), dt),
+        "kv_pos": jax.ShapeDtypeStruct((batch, cap), jnp.int32),
+    }
+
+
+# ==================================================================== dense MLP
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.jnp_dtype
+    return {
+        "wg": uniform_scaled(ks[0], (d, f), dt, d),
+        "wu": uniform_scaled(ks[1], (d, f), dt, d),
+        "wd": uniform_scaled(ks[2], (f, d), dt, f),
+    }
+
+
+def mlp_forward(p, x):
+    return common.swiglu(x, p["wg"], p["wu"], p["wd"])
+
+
+# ======================================================================= MoE MLP
+def init_moe(key, cfg: ModelConfig):
+    d, fe, E = cfg.d_model, cfg.expert_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    return {
+        "router": uniform_scaled(ks[0], (d, E), jnp.float32, d),
+        "wg": uniform_scaled(ks[1], (E, d, fe), dt, d),
+        "wu": uniform_scaled(ks[2], (E, d, fe), dt, d),
+        "wd": uniform_scaled(ks[3], (E, fe, d), dt, fe),
+    }
+
+
+def moe_forward(p, x, cfg: ModelConfig, capacity_factor: float,
+                grouped: bool = False):
+    """Top-k expert dispatch with per-expert capacity (scatter-based, EP-shardable).
+
+    Tokens beyond an expert's capacity are dropped (standard Switch behaviour);
+    capacity_factor trades drop rate against dispatch buffer size.
+
+    grouped=True uses GShard-style per-sequence dispatch groups (see
+    moe_forward_grouped) — the §Perf optimization that keeps dispatch local to
+    each data shard instead of scattering across the global token axis.
+    """
+    if grouped:
+        return moe_forward_grouped(p, x, cfg, capacity_factor)
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)  # (T, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(T * k / E * capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)  # round up to x8 for lane alignment
+
+    flat_e = idx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # (T*k,) slot in expert
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)  # dropped tokens land in slot `cap` (discarded)
+
+    xr = jnp.broadcast_to(xf[:, None, :], (T, k, D)).reshape(T * k, D)
+    buf = jnp.zeros((E, cap + 1, D), x.dtype).at[flat_e, slot].set(xr)
+    xe = buf[:, :cap]  # (E, cap, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["wu"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"])  # (E, cap, D)
+
+    ye_pad = jnp.concatenate([ye, jnp.zeros((E, 1, D), ye.dtype)], axis=1)
+    y_tok = ye_pad[flat_e, slot]  # (T*k, D)
+    y_tok = y_tok * (w.reshape(-1, 1) * keep[:, None]).astype(y_tok.dtype)
+    y = y_tok.reshape(T, k, D).sum(axis=1)
+    return y.reshape(B, S, D)
+
+
+def moe_forward_gshard(p, x, cfg: ModelConfig, capacity_factor: float,
+                       ep_axis: Optional[str] = None):
+    """GShard-style one-hot einsum dispatch/combine (§Perf, the winning MoE).
+
+    The scatter/gather dispatch (above) defeats XLA's SPMD partitioner: the
+    multi-dim scatter forces a REPLICATED dispatch buffer (measured: 1.4 TB/
+    chip/step of scatter-add all-reduces on mixtral train) and the expert
+    row-matmul's partial sums are reduced on the capacity-inflated buffer
+    (2.7 TB).  Expressing dispatch and combine as dense one-hot einsums keeps
+    every tensor sharded (batch over data, experts over `ep_axis` when they
+    divide it) and lets the deferred partial-sum surface only at the (B, S, D)
+    combine output — one dense-MLP-sized all-reduce per layer.  Costs ~12%
+    extra FLOPs for the dispatch/combine einsums (E*cap ~ 2.5 S).
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(S * k / E * capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)
+
+    # position of each (token, choice) within its expert, per sequence
+    onehot_e = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (B, S, k, E)
+    flat = onehot_e.reshape(B, S * k, E)
+    pos = (jnp.cumsum(flat, axis=1) * flat).sum(-1).reshape(B, S, k) - 1
+    keep = pos < cap
+
+    # dispatch/combine tensors (B, S, k, E, cap) -> summed over k
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                            dtype=x.dtype)  # (B, S, k, cap); overflow -> zeros
+    disp = jnp.einsum("bske,bskc->bsec", onehot_e.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("bske,bskc,bsk->bsec", onehot_e.astype(F32),
+                      pos_oh.astype(F32), w).astype(x.dtype)
+    if ep_axis is not None:
+        from jax.sharding import PartitionSpec as _P
+        disp = jax.lax.with_sharding_constraint(disp, _P(None, None, ep_axis, None))
+        comb = jax.lax.with_sharding_constraint(comb, _P(None, None, ep_axis, None))
+
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)  # (B, E, cap, D)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["wg"])) * jnp.einsum(
+        "becd,edf->becf", xe, p["wu"])
+    ye = jnp.einsum("becf,efd->becd", h, p["wd"])
+    y = jnp.einsum("bsec,becd->bsd", comb, ye)
+    # name the reduced combine output so a remat policy can SAVE it: the
+    # backward pass then reuses it instead of recomputing the (B,E,cap,D)
+    # partial-sum all-reduce chain (measured ~50% of MoE collectives)
+    from jax.ad_checkpoint import checkpoint_name
+    y = checkpoint_name(y, "moe_y")
+    return y
+
+
+def moe_forward_grouped(p, x, cfg: ModelConfig, capacity_factor: float):
+    """GShard-style grouped dispatch: each sequence is its own dispatch group.
+
+    The global-scatter dispatch above forces XLA to reduce the (E, cap, D)
+    buffers across every data shard per layer (the dominant collective in the
+    mixtral train baseline).  Here routing, position-in-expert, dispatch and
+    combine are all per-sequence einsums — the batch dim stays data-sharded
+    end to end, so the only cross-chip traffic is the tensor-parallel
+    column->row reduce of the expert matmuls themselves.
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(S * k / E * capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)
+
+    flat_e = idx.reshape(B, S * k)  # (B, S*k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (B, S*k, E)
+    pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1  # (B, S*k)
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)
+
+    xr = jnp.broadcast_to(x[:, :, None, :], (B, S, k, D)).reshape(B, S * k, D)
+    b_idx = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E, cap + 1, D), x.dtype).at[b_idx, flat_e, slot].set(xr)
+    xe = buf[:, :, :cap]  # (B, E, cap, D)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["wg"])) * jnp.einsum(
+        "becd,edf->becf", xe, p["wu"])
+    ye = jnp.einsum("becf,efd->becd", h, p["wd"])  # (B, E, cap, D)
+
+    ye_pad = jnp.concatenate([ye, jnp.zeros((B, E, 1, D), ye.dtype)], axis=2)
+    y_tok = ye_pad[b_idx, flat_e, slot]  # (B, S*k, D)
+    y_tok = y_tok * (w.reshape(B, S * k, 1) * keep[..., None]).astype(y_tok.dtype)
+    y = y_tok.reshape(B, S, k, D).sum(axis=2)
+    return y
+
+
+# ============================================================== transformer block
+def init_block(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": init_attention(ks[0], cfg, kind),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    p["mlp"] = init_moe(ks[1], cfg) if cfg.is_moe else init_mlp(ks[1], cfg)
+    return p
+
+
+def block_forward(p, x, cfg: ModelConfig, ctx: SeqCtx, kind: str):
+    a, cache = attention_forward(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                 cfg, ctx, kind)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        m = _moe_dispatch(p["mlp"], h, cfg, ctx, ctx.moe_capacity_factor)
+    else:
+        m = mlp_forward(p["mlp"], h)
+    return x + m, cache
+
+
+def _moe_dispatch(pm, h, cfg, ctx, cf):
+    if ctx.moe_impl == "gshard":
+        return moe_forward_gshard(pm, h, cfg, cf,
+                                  ep_axis=ctx.moe_ep_axis or None)
+    if ctx.moe_impl == "grouped":
+        return moe_forward_grouped(pm, h, cfg, cf)
+    return moe_forward(pm, h, cfg, cf)
+
+
+def block_decode(p, x, cache, cfg: ModelConfig, ctx: SeqCtx, kind: str):
+    a, cache = attention_decode(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                cache, cfg, ctx, kind)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        m = _moe_dispatch(p["mlp"], h, cfg, ctx, ctx.moe_capacity_factor)
+    else:
+        m = mlp_forward(p["mlp"], h)
+    return x + m, cache
+
+
+# ================================================================== Mamba2 (SSD)
+def _ssd_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N  # x, B, C share the causal conv (ngroups = 1)
+    return d_in, nheads, N, conv_dim
+
+
+def init_ssd(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, H, N, conv_dim = _ssd_dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = cfg.jnp_dtype
+    # z / xBC / dt as SEPARATE projections: numerically identical to the fused
+    # in_proj but each output dim is shard-aligned, so TP never reshards
+    # across the split boundaries (§Perf: removed ~28 GB/chip/step of
+    # collective-permutes on mamba2 prefill_32k)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "z_proj": uniform_scaled(ks[0], (d, d_in), dt, d),
+        "xbc_proj": uniform_scaled(ks[4], (d, conv_dim), dt, d),
+        "dt_proj": uniform_scaled(ks[5], (d, H), dt, d),
+        "conv_w": uniform_scaled(ks[1], (cfg.ssm_conv_width, conv_dim), dt, cfg.ssm_conv_width),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2, jnp.float32))),
+        "gnorm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": uniform_scaled(ks[3], (d_in, d), dt, d_in),
+    }
+
+
+def segsum(x):
+    """x: (..., T) -> (..., T, T); out[i, j] = sum_{j < k <= i} x_k (lower-tri)."""
+    T = x.shape[-1]
+    xr = jnp.broadcast_to(x[..., :, None], (*x.shape, T))
+    xr = jnp.where(jnp.tril(jnp.ones((T, T), bool), -1), xr, 0.0)
+    cs = jnp.cumsum(xr, axis=-2)
+    return jnp.where(jnp.tril(jnp.ones((T, T), bool)), cs, -jnp.inf)
+
+
+def ssd_chunked(x, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked state-space-duality scan (Mamba2, arXiv:2405.21060 listing 1).
+
+    x: (b, s, h, p) dt-scaled inputs; A: (b, s, h) = dt * A (negative);
+    Bm, Cm: (b, s, n) (single group, broadcast over heads).
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+    """
+    b, s, h, p_ = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0
+    c = s // chunk
+    xr = x.reshape(b, c, chunk, h, p_).astype(F32)
+    Ar = A.reshape(b, c, chunk, h).transpose(0, 3, 1, 2).astype(F32)  # (b,h,c,l)
+    Br = Bm.reshape(b, c, chunk, n).astype(F32)
+    Cr = Cm.reshape(b, c, chunk, n).astype(F32)
+
+    A_cs = jnp.cumsum(Ar, axis=-1)  # (b,h,c,l)
+    L = jnp.exp(segsum(Ar))  # (b,h,c,l,l)
+
+    # diagonal (intra-chunk) term
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cr, Br, L, xr)
+
+    # per-chunk end states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)  # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Br, decay_states, xr)
+
+    init = (jnp.zeros((b, 1, h, p_, n), F32) if init_state is None
+            else init_state.astype(F32)[:, None])
+    states = jnp.concatenate([init, states], axis=1)  # (b, c+1, h, p, n)
+    chunk_decay = jnp.exp(segsum(jnp.pad(A_cs[..., -1], ((0, 0), (0, 0), (1, 0)))))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", chunk_decay, states)
+    states_in, final_state = new_states[:, :-1], new_states[:, -1]
+
+    state_decay_out = jnp.exp(A_cs)  # (b,h,c,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cr, states_in, state_decay_out)
+    y = (y_diag + y_off).reshape(b, s, h, p_)
+    return y.astype(x.dtype), final_state
+
+
+def _ssd_project(p, x, cfg: ModelConfig):
+    d_in, H, N, conv_dim = _ssd_dims(cfg)
+    z = jnp.einsum("bsd,de->bse", x, p["z_proj"])
+    xbc = jnp.einsum("bsd,de->bse", x, p["xbc_proj"])
+    dt = jnp.einsum("bsd,de->bse", x, p["dt_proj"])
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])  # (B,S,H)
+    return z, xbc, dt
+
+
+def ssd_forward(p, x, cfg: ModelConfig, ctx: SeqCtx):
+    B, S, _ = x.shape
+    d_in, H, N, conv_dim = _ssd_dims(cfg)
+    u = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xbc, dt = _ssd_project(p, u, cfg)
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    chunk = min(cfg.ssm_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # dt = 0 on padded steps -> no decay, no input: final_state stays exact
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xh_p, dt_p, Bm_p, Cm_p = xh, dt, Bm, Cm
+    y, state = ssd_chunked(xh_p * dt_p[..., None].astype(xh_p.dtype),
+                           dt_p * A, Bm_p, Cm_p, chunk)
+    y = y[:, :S]
+    y = y + p["D"][:, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(y.dtype), p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    cache = {"conv": conv_state, "state": state} if ctx.make_cache else None
+    return x + out, cache
+
+
+def ssd_decode(p, x, cache, cfg: ModelConfig, ctx: SeqCtx):
+    B = x.shape[0]
+    d_in, H, N, conv_dim = _ssd_dims(cfg)
+    u = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xbc, dt = _ssd_project(p, u, cfg)  # S = 1
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], state=cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc[:, 0], [d_in, d_in + N], axis=-1)
+    xh = xs.reshape(B, H, cfg.ssm_head_dim).astype(F32)
+    dt1 = dt[:, 0]  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt1 * A)  # (B, H)
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt1, Bm[:, :].astype(F32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(F32), state)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(y.dtype), p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + out, {"conv": conv_state, "state": state}
+
+
+def ssd_cache_spec(cfg: ModelConfig, batch: int):
+    d_in, H, N, conv_dim = _ssd_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, conv_dim), cfg.jnp_dtype),
+        "state": jax.ShapeDtypeStruct((batch, H, cfg.ssm_head_dim, N), F32),
+    }
+
+
+# ================================================================ RG-LRU (Griffin)
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    dt = cfg.jnp_dtype
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "wx": uniform_scaled(ks[0], (d, w), dt, d),
+        "wy": uniform_scaled(ks[1], (d, w), dt, d),
+        "conv_w": uniform_scaled(ks[2], (4, w), dt, 4),
+        "wa": uniform_scaled(ks[3], (w, w), dt, w),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wi": uniform_scaled(ks[4], (w, w), dt, w),
+        "bi": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a = sigmoid(Lambda)^(8r) sits in [0.9, 0.999]
+        "Lambda": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "out": uniform_scaled(ks[5], (w, d), dt, w),
+    }
+
+
+_RG_C = 8.0
+
+
+def _rglru_gates(p, xb):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xb, p["wa"]).astype(F32) + p["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xb, p["wi"]).astype(F32) + p["bi"])
+    log_a = _RG_C * r * jax.nn.log_sigmoid(p["Lambda"])  # (B,S,W) negative
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * xb.astype(F32)
+    return a, b
+
+
+def rglru_forward(p, x, cfg: ModelConfig, ctx: SeqCtx):
+    u = rms_norm(x, p["ln"], cfg.norm_eps)
+    xb = jnp.einsum("bsd,dw->bsw", u, p["wx"])
+    xb, conv_state = causal_conv1d(xb, p["conv_w"])
+    a, b = _rglru_gates(p, xb)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)  # (B,S,W) fp32
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", u, p["wy"]).astype(F32))
+    out = jnp.einsum("bsw,wd->bsd", (h * gate).astype(x.dtype), p["out"])
+    cache = None
+    if ctx.make_cache:
+        cache = {"conv": conv_state, "h": h[:, -1]}
+    return x + out, cache
+
+
+def rglru_decode(p, x, cache, cfg: ModelConfig, ctx: SeqCtx):
+    u = rms_norm(x, p["ln"], cfg.norm_eps)
+    xb = jnp.einsum("bsd,dw->bsw", u, p["wx"])
+    xb, conv_state = causal_conv1d(xb, p["conv_w"], state=cache["conv"])
+    a, b = _rglru_gates(p, xb)  # (B,1,W)
+    h = a[:, 0] * cache["h"] + b[:, 0]  # (B,W)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", u, p["wy"]).astype(F32))
+    out = jnp.einsum("bsw,wd->bsd", (h[:, None] * gate).astype(x.dtype), p["out"])
+    return x + out, {"conv": conv_state, "h": h}
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, 3, w), cfg.jnp_dtype),
+        "h": jax.ShapeDtypeStruct((batch, w), F32),
+    }
+
+
+# ============================================================== kind dispatch
+def init_layer(key, cfg: ModelConfig, kind: str):
+    if kind in ("attn", "swa"):
+        return init_block(key, cfg, kind)
+    if kind == "ssd":
+        return init_ssd(key, cfg)
+    if kind == "rglru":
+        return init_rglru(key, cfg)
+    raise ValueError(kind)
+
+
+def layer_forward(p, x, cfg: ModelConfig, ctx: SeqCtx, kind: str):
+    if kind in ("attn", "swa"):
+        return block_forward(p, x, cfg, ctx, kind)
+    if kind == "ssd":
+        return ssd_forward(p, x, cfg, ctx)
+    if kind == "rglru":
+        return rglru_forward(p, x, cfg, ctx)
+    raise ValueError(kind)
+
+
+def layer_decode(p, x, cache, cfg: ModelConfig, ctx: SeqCtx, kind: str):
+    if kind in ("attn", "swa"):
+        return block_decode(p, x, cache, cfg, ctx, kind)
+    if kind == "ssd":
+        return ssd_decode(p, x, cache, cfg, ctx)
+    if kind == "rglru":
+        return rglru_decode(p, x, cache, cfg, ctx)
+    raise ValueError(kind)
+
+
+def layer_cache_spec(cfg: ModelConfig, kind: str, batch: int, cap: int):
+    if kind in ("attn", "swa"):
+        return attention_cache_spec(cfg, kind, batch, cap)
+    if kind == "ssd":
+        return ssd_cache_spec(cfg, batch)
+    if kind == "rglru":
+        return rglru_cache_spec(cfg, batch)
+    raise ValueError(kind)

@@ -1,0 +1,160 @@
+"""Decoder-only LM assembly covering dense / MoE / SSM / hybrid / VLM families.
+
+The layer stack is organized into scan segments (cfg.segments): each segment is
+a repeating unit of layer kinds whose parameters are stacked along a leading
+`repeat` axis and executed with `jax.lax.scan` (keeps HLO small for 48-64 layer
+models and enables per-unit remat).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import F32, rms_norm, uniform_scaled
+
+
+# ------------------------------------------------------------------------ init
+def init_segment(key, cfg: ModelConfig, unit: tuple[str, ...], repeat: int):
+    def init_unit(k):
+        ks = jax.random.split(k, len(unit))
+        return tuple(L.init_layer(ks[i], cfg, kind) for i, kind in enumerate(unit))
+
+    return jax.vmap(init_unit)(jax.random.split(key, repeat))
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, len(cfg.segments) + 3)
+    params: dict[str, Any] = {
+        "embed": uniform_scaled(ks[0], (cfg.padded_vocab, cfg.d_model), cfg.jnp_dtype,
+                                cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    params["segments"] = [
+        init_segment(ks[2 + i], cfg, unit, repeat)
+        for i, (unit, repeat) in enumerate(cfg.segments)
+    ]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = uniform_scaled(ks[1], (cfg.d_model, cfg.padded_vocab),
+                                           cfg.jnp_dtype, cfg.d_model)
+    return params
+
+
+# -------------------------------------------------------------------- embedding
+def embed_tokens(params, cfg: ModelConfig, tokens, vision_embeds=None):
+    x = params["embed"][tokens]  # (B, S, D)
+    if vision_embeds is not None:
+        # VLM stub frontend: the first `P` positions carry precomputed patch
+        # embeddings (assignment: modality frontend is a stub).
+        P = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+# ---------------------------------------------------------------------- forward
+def _segment_forward(seg_params, x, cfg, ctx, unit, remat: bool):
+    """Scan one segment over its `repeat` axis; collects caches when asked."""
+
+    def body(h, unit_params):
+        caches = []
+        for i, kind in enumerate(unit):
+            h, c = L.layer_forward(unit_params[i], h, cfg, ctx, kind)
+            caches.append(c)
+        return h, tuple(caches) if ctx.make_cache else None
+
+    if remat:
+        # save the (cheap, reduced) MoE combine outputs across the remat
+        # boundary so backward skips the expensive partial-sum recompute
+        policy = jax.checkpoint_policies.save_only_these_names("moe_y")
+        body = jax.checkpoint(body, policy=policy)
+    x, caches = jax.lax.scan(body, x, seg_params)
+    return x, caches
+
+
+def forward(params, cfg: ModelConfig, tokens, *, positions=None,
+            mrope_positions=None, vision_embeds=None, make_cache=False,
+            cache_cap=0, attn_chunked=False, remat=True,
+            moe_capacity_factor=1.25, moe_impl="scatter", moe_ep_axis="",
+            q_chunk=512, kv_chunk=1024):
+    """Full-sequence forward (train / prefill). Returns (logits, caches|None)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ctx = L.SeqCtx(positions=positions, mrope_positions=mrope_positions,
+                   make_cache=make_cache, cache_cap=cache_cap or S,
+                   attn_chunked=attn_chunked, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                   moe_capacity_factor=moe_capacity_factor,
+                   moe_impl=moe_impl, moe_ep_axis=moe_ep_axis)
+    x = embed_tokens(params, cfg, tokens, vision_embeds)
+    caches = []
+    for seg_params, (unit, repeat) in zip(params["segments"], cfg.segments):
+        x, c = _segment_forward(seg_params, x, cfg, ctx, unit, remat)
+        caches.append(c)
+    logits = unembed(params, cfg, x)
+    return logits, (caches if make_cache else None)
+
+
+# ----------------------------------------------------------------------- decode
+def decode_step(params, cfg: ModelConfig, token, pos, caches, *,
+                mrope_positions=None, moe_capacity_factor=4.0):
+    """One decode step. token: (B,) int32; pos: (B,) int32 absolute position;
+    caches: as produced by forward(make_cache=True). Returns (logits, caches)."""
+    B = token.shape[0]
+    positions = pos[:, None]  # (B, 1)
+    ctx = L.SeqCtx(positions=positions, mrope_positions=mrope_positions,
+                   moe_capacity_factor=moe_capacity_factor)
+    x = params["embed"][token][:, None, :]  # (B, 1, D)
+
+    new_caches = []
+    for seg_params, seg_cache, (unit, repeat) in zip(
+            params["segments"], caches, cfg.segments):
+
+        def body(h, scanned):
+            unit_params, unit_cache = scanned
+            new_unit_cache = []
+            for i, kind in enumerate(unit):
+                h, c = L.layer_decode(unit_params[i], h, unit_cache[i], cfg, ctx, kind)
+                new_unit_cache.append(c)
+            return h, tuple(new_unit_cache)
+
+        x, nc = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(nc)
+    logits = unembed(params, cfg, x)[:, 0]  # (B, V)
+    return logits, new_caches
+
+
+# ------------------------------------------------------------------ cache specs
+def cache_specs(cfg: ModelConfig, batch: int, cap: int):
+    """ShapeDtypeStruct pytree matching forward(make_cache=True) output."""
+    segs = []
+    for unit, repeat in cfg.segments:
+        unit_specs = tuple(
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeat, *s.shape), s.dtype),
+                L.layer_cache_spec(cfg, kind, batch, cap),
+            )
+            for kind in unit
+        )
+        segs.append(unit_specs)
+    return segs
+
+
+# -------------------------------------------------------------------------- loss
+def lm_loss(params, cfg: ModelConfig, tokens, **fwd_kwargs):
+    """Next-token cross-entropy (fp32 logsumexp), mean over B*(S-1) tokens."""
+    logits, _ = forward(params, cfg, tokens, **fwd_kwargs)
+    logits = logits[:, :-1].astype(F32)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,74 @@
+"""Bridge between model parameter trees and Tangram tensor records.
+
+Each pytree leaf becomes one named tensor (dozens per model — the paper's
+reuse granularity).  Fingerprints identify a tensor for the Reuse Store; the
+default mode hashes (model_id, name, shape, dtype, shard) — stable across
+restarts of the same registered model.  `content` mode hashes actual bytes,
+enabling cross-model dedup of shared base weights (beyond-paper).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TensorRecord:
+    name: str  # pytree path, e.g. "segments/0/1/attn/wq"
+    shape: tuple[int, ...]
+    dtype: str
+    fingerprint: str
+    nbytes: int
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def fingerprint_of(model_id: str, name: str, shape, dtype, shard: str = "") -> str:
+    h = hashlib.sha1(f"{model_id}|{name}|{tuple(shape)}|{dtype}|{shard}".encode())
+    return h.hexdigest()[:16]
+
+
+def content_fingerprint(arr: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+
+
+def tensor_records(model_id: str, params, *, shard: str = "",
+                   mode: str = "identity") -> list[TensorRecord]:
+    """Flatten a parameter pytree (or ShapeDtypeStruct tree) to tensor records."""
+    recs = []
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in leaves:
+        name = _path_str(path)
+        shape = tuple(leaf.shape)
+        dtype = str(leaf.dtype)
+        nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        if mode == "content" and isinstance(leaf, (np.ndarray, jax.Array)):
+            fp = content_fingerprint(np.asarray(leaf))
+        else:
+            fp = fingerprint_of(model_id, name, shape, dtype, shard)
+        recs.append(TensorRecord(name=f"{model_id}/{name}", shape=shape,
+                                 dtype=dtype, fingerprint=fp, nbytes=nbytes))
+    return recs
+
+
+def spec_records(model_id: str, cfg, *, shard: str = "") -> list[TensorRecord]:
+    """Tensor records from config alone (no allocation) via eval_shape."""
+    from repro.models.api import build_model
+
+    model = build_model(cfg)
+    tree = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    return tensor_records(model_id, tree, shard=shard)

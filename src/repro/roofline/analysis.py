@@ -1,0 +1,356 @@
+"""Roofline analysis from compiled HLO.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, so scanned
+layer stacks (and chunked-attention loops) are undercounted by their trip
+count.  This module walks the optimized HLO text instead:
+
+  * computations are parsed into per-instruction symbol tables;
+  * `while` bodies are multiplied by their trip count, inferred from the
+    leading dims of the loop-carried stacked operands (xs/ys of lax.scan have
+    leading dim == length), disambiguated by caller-provided hints (layer
+    counts, chunk counts, microbatches);
+  * `fusion`/`call` sub-computations are recursed into with multiplicity 1.
+
+Per-op accounting:
+  dot        flops = 2 * prod(out_shape) * prod(contracting dims)
+             bytes = lhs + rhs + out  (upper bound — ignores VMEM reuse within
+             a fused region; parameters are counted once per use)
+  collective bytes = operand sizes (assignment's definition), split by kind.
+
+Roofline terms (seconds) for TPU v5e targets:
+  compute    = flops_global / (chips * 197e12)
+  memory     = bytes_global / (chips * 819e9)
+  collective = collective_bytes_per_chip / 50e9   (per-link ICI)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+)$")
+# header args may contain nested tuple types -> match loosely up to " -> "
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
+
+
+def _parse_shape(text: str):
+    """First shape in `text` -> (dtype, dims) or None.  Tuples: list of shapes."""
+    m = _SHAPE_RE.match(text.strip().lstrip("("))
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _all_shapes(text: str):
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        if m.group(1) not in DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(shape) -> int:
+    dt, dims = shape
+    n = DTYPE_BYTES.get(dt, 4)
+    for d in dims:
+        n *= d
+    return n
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+@dataclass
+class OpCosts:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)  # kind -> bytes
+
+    def __iadd__(self, other: "OpCosts"):
+        self.flops += other.flops
+        self.dot_bytes += other.dot_bytes
+        self.collective_bytes += other.collective_bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "OpCosts":
+        return OpCosts(self.flops * k, self.dot_bytes * k,
+                       self.collective_bytes * k,
+                       {kk: v * k for kk, v in self.collectives.items()})
+
+
+class HloModule:
+    def __init__(self, text: str, trip_hints: Optional[list[int]] = None):
+        self.trip_hints = set(trip_hints or [])
+        self.computations: dict[str, list[str]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: dict[str, OpCosts] = {}
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str):
+        cur = None
+        depth = 0
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if cur is None:
+                m = _COMP_HDR_RE.match(s)
+                if m and " -> " in s and s.endswith("{"):
+                    cur = m.group(1)
+                    self.computations[cur] = [s]
+                    if s_starts_entry(s) or raw.startswith("ENTRY"):
+                        self.entry = cur
+                    depth = 1
+                continue
+            self.computations[cur].append(s)
+            depth += s.count("{") - s.count("}")
+            if depth <= 0:
+                cur = None
+        if self.entry is None:
+            # fall back: computation named like %main
+            for name in self.computations:
+                if "main" in name:
+                    self.entry = name
+                    break
+
+    def _symbols(self, comp: str) -> dict[str, tuple]:
+        """instruction/parameter name -> first shape."""
+        syms: dict[str, tuple] = {}
+        header = self.computations[comp][0]
+        args = header[header.index("(") + 1 : header.rindex(")")]
+        for part in args.split(","):
+            part = part.strip()
+            if ":" in part and not part.startswith("("):
+                nm, ty = part.split(":", 1)
+                sh = _parse_shape(ty)
+                if sh:
+                    syms["%" + nm.strip()] = sh
+        for line in self.computations[comp][1:]:
+            m = _DEF_RE.match(line)
+            if m:
+                sh = _parse_shape(m.group(2))
+                if sh:
+                    syms[m.group(1)] = sh
+        return syms
+
+    # --------------------------------------------------------- trip counts
+    def _trip_count(self, while_line: str) -> int:
+        """Infer from the leading dims of the loop tuple elements."""
+        tup = while_line.split("while(")[0]
+        shapes = _all_shapes(tup)
+        counts: dict[int, int] = {}
+        for dt, dims in shapes:
+            if len(dims) >= 1 and dims[0] > 1:
+                counts[dims[0]] = counts.get(dims[0], 0) + (2 if len(dims) > 1 else 1)
+        if not counts:
+            return 1
+        hinted = {d: c for d, c in counts.items() if d in self.trip_hints}
+        pool = hinted or counts
+        return max(pool, key=lambda d: (pool[d], d))
+
+    # ------------------------------------------------------------- costing
+    def cost_of(self, comp: str) -> OpCosts:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = OpCosts()  # break recursion cycles
+        total = OpCosts()
+        syms = self._symbols(comp)
+        for line in self.computations[comp][1:]:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            out_shape = _parse_shape(rhs)
+
+            head = rhs.split("(")[0].split()
+            if " dot(" in rhs or (head and head[-1] == "dot"):
+                ops = re.search(r"dot\(([^)]*)\)", rhs)
+                lhs_c = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                if ops and out_shape:
+                    operands = [o.strip() for o in ops.group(1).split(",")]
+                    lhs_shape = syms.get(operands[0])
+                    rhs_shape = syms.get(operands[1]) if len(operands) > 1 else None
+                    contract = 1
+                    if lhs_c and lhs_shape:
+                        for d in lhs_c.group(1).split(","):
+                            if d:
+                                contract *= lhs_shape[1][int(d)]
+                    out_count = _prod(out_shape[1]) if isinstance(out_shape, tuple) \
+                        else 1
+                    flops = 2.0 * out_count * contract
+                    nbytes = _nbytes(out_shape)
+                    for o, shp in ((operands[0], lhs_shape),
+                                   (operands[1] if len(operands) > 1 else None,
+                                    rhs_shape)):
+                        if shp:
+                            nbytes += _nbytes(shp)
+                    total += OpCosts(flops=flops, dot_bytes=nbytes)
+                continue
+
+            coll = next((c for c in COLLECTIVES if f" {c}(" in rhs
+                         or rhs.startswith(f"{c}(")), None)
+            if coll and "-start" not in rhs:
+                ops = re.search(re.escape(coll) + r"\(([^)]*)\)", rhs)
+                nbytes = 0
+                if ops:
+                    for o in ops.group(1).split(","):
+                        shp = syms.get(o.strip())
+                        if shp:
+                            nbytes += _nbytes(shp)
+                if nbytes == 0 and out_shape:
+                    nbytes = _nbytes(out_shape)
+                total += OpCosts(collective_bytes=nbytes,
+                                 collectives={coll: float(nbytes)})
+                continue
+
+            if " while(" in rhs:
+                body = re.search(r"body=(%[\w.\-]+)", rhs)
+                if body and body.group(1) in self.computations:
+                    trips = self._trip_count(rhs)
+                    total += self.cost_of(body.group(1)).scaled(trips)
+                continue
+
+            called = re.search(r"calls=(%[\w.\-]+)", rhs)
+            if called and called.group(1) in self.computations:
+                total += self.cost_of(called.group(1))
+                continue
+            if rhs.split("(")[0].endswith("call") and "custom-call" not in rhs:
+                to = re.search(r"to_apply=(%[\w.\-]+)", rhs)
+                if to and to.group(1) in self.computations:
+                    total += self.cost_of(to.group(1))
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> OpCosts:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def s_starts_entry(s: str) -> bool:
+    return s.startswith("ENTRY")
+
+
+# ------------------------------------------------------------------ roofline
+TPU_V5E = {"flops": 197e12, "hbm": 819e9, "ici": 50e9}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collectives: dict
+    model_flops: float  # 6*N*D (or analytic per family), GLOBAL
+    param_bytes: int
+    memory_per_chip: dict  # from compiled.memory_analysis()
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_chip / TPU_V5E["flops"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_chip / TPU_V5E["hbm"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / TPU_V5E["ici"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful model flops per second / peak, at the modeled step time."""
+        if self.step_s == 0:
+            return 0.0
+        achieved = self.model_flops / self.chips / self.step_s
+        return achieved / TPU_V5E["flops"]
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "collectives": self.collectives,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_analysis": self.memory_per_chip,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for
+    inference, + attention term; D = processed tokens."""
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    # attention O(S^2) term (full) or O(S*W) (windowed):
+    hd = cfg.resolved_head_dim
+    attn_mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd(2x) vs fwd
+    for kind in cfg.pattern:
+        if kind == "attn":
+            ctx = shape.seq_len
+        elif kind == "swa":
+            ctx = min(cfg.sliding_window, shape.seq_len)
+        else:
+            continue
+        if shape.kind == "decode":
+            flops += attn_mult * 4.0 * shape.global_batch * ctx * cfg.num_heads * hd
+        else:
+            eff = ctx if kind == "swa" else shape.seq_len / 2
+            flops += (attn_mult * 4.0 * shape.global_batch * shape.seq_len
+                      * eff * cfg.num_heads * hd)
+    return flops
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: only routed experts count)."""
+    total = cfg.param_count()
+    if not cfg.is_moe:
+        return total
+    expert_params = cfg.num_experts * 3 * cfg.d_model * cfg.expert_ff * cfg.num_layers
+    active_expert = expert_params * cfg.experts_per_token / cfg.num_experts
+    return total - expert_params + active_expert

@@ -1,0 +1,265 @@
+"""Single-host serving engine: the *data plane* of Tangram.
+
+Holds real `jax.Array` tensors for pool-resident models (retention of the
+device buffer IS the reuse mechanism under JAX — DESIGN.md §2), a real paged
+KV slab indexed by ElasticKV's physical block numbers, and decodes through the
+E-Attention Pallas kernel.
+
+Architecture support:
+  * homogeneous attention-family models (dense / MoE / VLM): full paged-KV
+    decode via `kernels.ops.paged_attention`;
+  * state-family models (SSM / hybrid / enc-dec): the model's own decode path
+    with its bounded state caches; the pool still accounts for their bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import PhaseCosts, paper_l40
+from repro.core.elastic_kv import ElasticKV
+from repro.core.reuse_store import LoadReport, ReuseStore
+from repro.kernels import ops as kops
+from repro.models import build_model, lm
+from repro.models.common import rms_norm
+from repro.models.tensors import TensorRecord, tensor_records
+
+
+@dataclass
+class RegisteredModel:
+    model_id: str
+    cfg: ModelConfig
+    records: list[TensorRecord]
+    init_fn: Callable[[], Any]  # produces the full param tree (the Model Store)
+
+
+class Engine:
+    """One worker's inference engine over a Unified Memory Pool."""
+
+    def __init__(self, capacity_bytes: int, *, costs: Optional[PhaseCosts] = None,
+                 block_tokens: int = 16):
+        self.store = ReuseStore(capacity_bytes, costs or PhaseCosts(paper_l40()))
+        self.block_tokens = block_tokens
+        self.models: dict[str, RegisteredModel] = {}
+        self._tensors: dict[str, jax.Array] = {}  # fingerprint -> live buffer
+        self._params_cache: dict[str, Any] = {}  # model_id -> assembled tree
+
+    # ------------------------------------------------------------- registry
+    def register(self, model_id: str, cfg: ModelConfig,
+                 init_fn: Optional[Callable[[], Any]] = None):
+        model = build_model(cfg)
+        if init_fn is None:
+            init_fn = lambda: model.init(jax.random.PRNGKey(hash(model_id) & 0xFFFF))
+        tree = jax.eval_shape(init_fn)
+        records = tensor_records(model_id, tree)
+        self.models[model_id] = RegisteredModel(model_id, cfg, records, init_fn)
+
+    # ------------------------------------------------------------------ load
+    def load(self, model_id: str, *, now: float = 0.0) -> LoadReport:
+        """Tensor-level load: only missing tensors are materialized."""
+        reg = self.models[model_id]
+        hits, misses = self.store.plan_load(reg.records)
+        report = self.store.load_model(model_id, reg.records, now=now)
+        if misses or model_id not in self._params_cache:
+            params = reg.init_fn()  # Model Store / host cache read
+            leaves = tensor_records(model_id, params)
+            flat = dict(zip([r.fingerprint for r in leaves],
+                            jax.tree.leaves(params)))
+            miss_fps = {r.fingerprint for r in misses}
+            for fp, arr in flat.items():
+                if fp in miss_fps or fp not in self._tensors:
+                    self._tensors[fp] = arr  # "transfer" = buffer now resident
+            # assemble the param tree from resident buffers
+            treedef = jax.tree.structure(params)
+            self._params_cache[model_id] = jax.tree.unflatten(
+                treedef, [self._tensors[r.fingerprint] for r in leaves])
+        return report
+
+    def release(self, model_id: str):
+        self.store.release(model_id)
+
+    def sync_evictions(self):
+        """Drop data-plane buffers for tensors the store has evicted."""
+        live = set(self.store.tensor_map)
+        for fp in [fp for fp in self._tensors if fp not in live]:
+            del self._tensors[fp]
+        for mid in list(self._params_cache):
+            if any(r.fingerprint not in live for r in self.models[mid].records):
+                del self._params_cache[mid]
+
+    def params_of(self, model_id: str):
+        return self._params_cache[model_id]
+
+    # -------------------------------------------------------------- instance
+    def start_instance(self, model_id: str, *, max_blocks_per_seq: int = 64,
+                       num_pages: int = 128) -> "Instance":
+        reg = self.models[model_id]
+        kv = ElasticKV(self.store, model_id, block_tokens=self.block_tokens,
+                       kv_bytes_per_token=max(reg.cfg.kv_bytes_per_token(), 1),
+                       blocks_per_region=16)
+        return Instance(self, reg, kv, num_pages=num_pages,
+                        max_blocks_per_seq=max_blocks_per_seq)
+
+
+def _is_paged_family(cfg: ModelConfig) -> bool:
+    # full-attention homogeneous stacks decode through the paged kernel;
+    # SWA models use the ring cache (window masking), state models their state
+    return (cfg.family in ("dense", "moe", "vlm")
+            and all(k == "attn" for k in cfg.pattern)
+            and len(cfg.segments) == 1)
+
+
+class Instance:
+    """A running model instance: prefill once, decode with paged KV."""
+
+    def __init__(self, engine: Engine, reg: RegisteredModel, kv: ElasticKV, *,
+                 num_pages: int, max_blocks_per_seq: int):
+        self.engine = engine
+        self.reg = reg
+        self.kv = kv
+        self.model = build_model(reg.cfg)
+        self.paged = _is_paged_family(reg.cfg)
+        self.max_blocks = max_blocks_per_seq
+        cfg = reg.cfg
+        if self.paged:
+            L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+            T = kv.block_tokens
+            self.k_pages = jnp.zeros((L, num_pages, T, K, hd), cfg.jnp_dtype)
+            self.v_pages = jnp.zeros((L, num_pages, T, K, hd), cfg.jnp_dtype)
+        self._cache = None  # state-family fallback cache
+        self._tables: Optional[jnp.ndarray] = None
+        self._lengths: Optional[jnp.ndarray] = None
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(self, batch: dict) -> jnp.ndarray:
+        """Run the prompt; populate paged KV (or state cache). Returns logits
+        of the last position, (B, V)."""
+        params = self.engine.params_of(self.reg.model_id)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cap = -(-S // self.kv.block_tokens) * self.kv.block_tokens
+        logits, cache = self.model.prefill(params, batch,
+                                           cache_cap=max(cap, S),
+                                           remat=False)
+        if not self.paged:
+            self._cache = cache
+            self._lengths = jnp.full((B,), S, jnp.int32)
+            return logits[:, -1]
+
+        # allocate block tables for the prompt, then scatter dense KV -> pages
+        self.kv.ensure({f"seq{b}": S for b in range(B)})
+        T = self.kv.block_tokens
+        nblk = -(-S // T)
+        tables_np = np.zeros((B, self.max_blocks), np.int32)
+        for b in range(B):
+            pbns = self.kv.block_tables[f"seq{b}"]
+            tables_np[b, : len(pbns)] = pbns
+        self._tables = jnp.asarray(tables_np)
+        self._lengths = jnp.full((B,), S, jnp.int32)
+
+        # cache is [segment0][unit0] = {"k": (L, B, cap, K, hd), ...}
+        k_all = cache[0][0]["k"]  # (L, B, cap, K, hd)
+        v_all = cache[0][0]["v"]
+        kc = k_all[:, :, : nblk * T]
+        vc = v_all[:, :, : nblk * T]
+        L = kc.shape[0]
+        kc = kc.reshape(L, B, nblk, T, *kc.shape[3:])
+        vc = vc.reshape(L, B, nblk, T, *vc.shape[3:])
+        kp, vp = self.k_pages, self.v_pages
+        for b in range(B):
+            pbn = self._tables[b, :nblk]
+            kp = kp.at[:, pbn].set(kc[:, b])
+            vp = vp.at[:, pbn].set(vc[:, b])
+        self.k_pages, self.v_pages = kp, vp
+        return logits[:, -1]
+
+    # ----------------------------------------------------------------- decode
+    def decode(self, token: jnp.ndarray) -> jnp.ndarray:
+        """One decode step for every sequence. token: (B,) -> logits (B, V)."""
+        params = self.engine.params_of(self.reg.model_id)
+        B = token.shape[0]
+        pos = self._lengths  # next position = current length
+        if not self.paged:
+            logits, self._cache = self.model.decode(params, token, pos, self._cache)
+            self._lengths = self._lengths + 1
+            return logits
+
+        new_len = int(self._lengths[0]) + 1
+        self.kv.ensure({f"seq{b}": new_len for b in range(B)})
+        T = self.kv.block_tokens
+        tables_np = np.array(self._tables)
+        for b in range(B):
+            pbns = self.kv.block_tables[f"seq{b}"]
+            tables_np[b, : len(pbns)] = pbns
+        self._tables = jnp.asarray(tables_np)
+
+        logits, self.k_pages, self.v_pages = _paged_decode_step(
+            params, self.reg.cfg, token, pos, self._tables, self._lengths,
+            self.k_pages, self.v_pages)
+        self._lengths = self._lengths + 1
+        return logits
+
+    def finish(self):
+        for b in list(self.kv.block_tables):
+            self.kv.release(b)
+        self.kv.finish_instance()
+        self.engine.release(self.reg.model_id)
+
+
+# ---------------------------------------------------------------- paged decode
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(6, 7))
+def _paged_decode_step(params, cfg: ModelConfig, token, pos, tables, lengths,
+                       k_pages, v_pages):
+    """One decode step over paged KV for homogeneous attention models.
+
+    k/v_pages: (L, P, T, K, hd).  New K/V are scattered into the page that
+    ElasticKV mapped for position `pos`; attention runs through the
+    E-Attention Pallas kernel per layer.
+    """
+    from repro.models import layers as Lmod
+
+    B = token.shape[0]
+    T = k_pages.shape[2]
+    x = params["embed"][token][:, None, :]  # (B, 1, D)
+    seg_params = params["segments"][0]
+    kind = cfg.pattern[0]
+    positions = pos[:, None]
+    mrope = (jnp.broadcast_to(pos[None, :, None], (3, B, 1))
+             if cfg.mrope_sections else None)
+    ctx = Lmod.SeqCtx(positions=positions, mrope_positions=mrope,
+                      moe_capacity_factor=4.0)
+
+    lbn = pos // T  # (B,) logical block of the new token
+    slot = pos % T
+    b_idx = jnp.arange(B)
+    pbn = tables[b_idx, lbn]  # (B,) physical page per sequence
+
+    def body(h, scanned):
+        layer_params, kp_l, vp_l = scanned
+        p = layer_params[0]
+        hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        q, knew, vnew = Lmod._project_qkv(p["attn"], hn, cfg)
+        from repro.models import common as cmod
+        rp = mrope if cfg.mrope_sections else positions
+        q = cmod.apply_rope(q, rp, cfg.rope_theta, cfg.mrope_sections)
+        knew = cmod.apply_rope(knew, rp, cfg.rope_theta, cfg.mrope_sections)
+        kp_l = kp_l.at[pbn, slot].set(knew[:, 0])
+        vp_l = vp_l.at[pbn, slot].set(vnew[:, 0])
+        o = kops.paged_attention(q[:, 0], kp_l, vp_l, tables, lengths + 1)
+        a = jnp.einsum("bhk,hkd->bd", o.reshape(B, cfg.num_heads, -1), p["attn"]["wo"])
+        h = h + a[:, None, :]
+        hm = rms_norm(h, p["ln2"], cfg.norm_eps)
+        m = (Lmod.moe_forward(p["mlp"], hm, cfg, 4.0) if cfg.is_moe
+             else Lmod.mlp_forward(p["mlp"], hm))
+        return h + m, (kp_l, vp_l)
+
+    x, (k_pages, v_pages) = jax.lax.scan(body, x, (seg_params, k_pages, v_pages))
+    logits = lm.unembed(params, cfg, x)[:, 0]
+    return logits, k_pages, v_pages

@@ -1,0 +1,144 @@
+"""Tensor-level checkpointing with async save and elastic restore.
+
+Each pytree leaf is saved as one entry of an .npz plus a JSON manifest
+(paths, shapes, dtypes, step) — the same tensor granularity the Reuse Store
+uses, so warm restarts can skip re-reading tensors that are still resident.
+
+Fault-tolerance properties:
+  * atomic: writes to <dir>/tmp-<step> then renames;
+  * async: a background thread does serialization + IO; `wait()` joins;
+  * elastic: `restore(..., shardings=...)` re-device_puts every leaf onto a
+    NEW mesh/sharding, so restarts may change topology (node loss/gain);
+  * bounded: keeps the newest `keep` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.models.tensors import _path_str
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {(_path_str(path) or f"leaf{i}"): leaf
+            for i, (path, leaf) in enumerate(leaves)}
+
+
+def save(directory: str, step: int, tree: Any, *, blocking: bool = True) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp-{step}")
+    final = os.path.join(directory, f"step-{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    named = _flatten(tree)
+    # npz has no bf16: store such leaves as f32 (lossless superset); the true
+    # dtype lives in the manifest and restore() casts back
+    NPZ_SAFE = {"float64", "float32", "float16", "int64", "int32", "int16",
+                "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+
+    def to_np(v):
+        a = np.asarray(v)
+        return a if a.dtype.name in NPZ_SAFE else a.astype(np.float32)
+    arrays = {k: to_np(v) for k, v in named.items()}
+    true_dtypes = {k: str(np.asarray(v).dtype) for k, v in named.items()}
+
+    def _write():
+        np.savez(os.path.join(tmp, "tensors.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "tensors": {k: {"shape": list(a.shape), "dtype": true_dtypes[k]}
+                        for k, a in arrays.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        _write()
+        return final
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("-")[1]) for d in os.listdir(directory)
+             if d.startswith("step-")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Rebuild the pytree of `like` from disk; optionally reshard every leaf
+    onto `shardings` (same treedef) — elastic restart onto a new mesh."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step-{step:08d}")
+    with np.load(os.path.join(path, "tensors.npz")) as z:
+        named = {k: z[k] for k in z.files}
+    flat_like = _flatten(like)
+    assert set(named) == set(flat_like), (
+        f"checkpoint/model mismatch: {set(named) ^ set(flat_like)}")
+    treedef = jax.tree.structure(like)
+    leaves_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    flat_shard = (_flatten(shardings) if shardings is not None else None)
+    for i, (p, leaf) in enumerate(leaves_like):
+        name = _path_str(p) or f"leaf{i}"
+        arr = jax.numpy.asarray(named[name]).astype(leaf.dtype)
+        if flat_shard is not None:
+            arr = jax.device_put(arr, flat_shard[name])
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async, bounded-retention checkpoint manager."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        named = _flatten(tree)
+        arrays = {k: np.asarray(v) for k, v in named.items()}  # capture now
+
+        def _job():
+            tmp_tree = jax.tree.unflatten(
+                jax.tree.structure(tree), list(arrays.values()))
+            save(self.directory, step, tmp_tree, blocking=True)
+            self._gc()
+
+        self._thread = threading.Thread(target=_job, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(int(d.split("-")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step-"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step-{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like, *, shardings=None):
+        self.wait()
+        return restore(self.directory, like, shardings=shardings)

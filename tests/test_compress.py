@@ -1,0 +1,75 @@
+"""int8-compressed DP gradient reduction: correctness vs exact psum, error
+feedback convergence, and s8-on-the-wire verification (subprocess, 8 fake
+devices)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from repro.distributed.compress import compressed_grad_fn, int8_all_reduce
+
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,),
+                         devices=jax.devices())
+
+    def loss_fn(w, batch):
+        x, y = batch["x"], batch["y"]
+        pred = jnp.tanh(x @ w["w1"]) @ w["w2"]
+        return jnp.mean((pred - y) ** 2)
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    params = {"w1": jax.random.normal(ks[0], (16, 32)) * 0.3,
+              "w2": jax.random.normal(ks[1], (32, 4)) * 0.3}
+    batch = {"x": jax.random.normal(ks[2], (64, 16)),
+             "y": jax.random.normal(ks[3], (64, 4))}
+    batch = jax.device_put(batch, NamedSharding(mesh, P("data")))
+    params = jax.device_put(params, NamedSharding(mesh, P()))
+    residual = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    grads_fn = compressed_grad_fn(loss_fn, mesh, ("data",))
+    jitted = jax.jit(grads_fn)
+    g_c, new_res, loss = jitted(params, batch, residual)
+    g_exact = jax.jit(jax.grad(loss_fn))(params, batch)
+
+    rel = max(float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+              for a, b in zip(jax.tree.leaves(g_c), jax.tree.leaves(g_exact)))
+    res_norm = float(sum(jnp.sum(jnp.abs(r)) for r in jax.tree.leaves(new_res)))
+
+    txt = jitted.lower(params, batch, residual).compile().as_text()
+    s8_gather = "s8[" in txt and "all-gather" in txt
+    f32_reduce_of_grads = any(
+        "all-reduce" in l and "f32[16,32]" in l for l in txt.splitlines())
+    print("RESULT" + json.dumps({"rel": rel, "res_norm": res_norm,
+                                 "s8_gather": s8_gather,
+                                 "f32_reduce": f32_reduce_of_grads}))
+""")
+
+
+@pytest.fixture(scope="module")
+def result():
+    out = subprocess.run([sys.executable, "-c", SNIPPET], capture_output=True,
+                         text=True, timeout=600,
+                         env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert "RESULT" in out.stdout, out.stderr[-2000:]
+    return json.loads(out.stdout.split("RESULT")[1])
+
+
+def test_compressed_grads_close_to_exact(result):
+    assert result["rel"] < 0.02, result  # int8 ~= 0.8% quantization error
+
+
+def test_error_feedback_residual_nonzero(result):
+    assert result["res_norm"] > 0  # residual carries quantization error
+
+
+def test_wire_traffic_is_int8(result):
+    assert result["s8_gather"], "gradient payload should cross the wire as s8"
+    assert not result["f32_reduce"], "no f32 all-reduce of the full gradient"

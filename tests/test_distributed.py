@@ -1,0 +1,114 @@
+"""Sharding rules + a real (tiny-mesh) compile in a subprocess.
+
+The production dry-run needs 512 fake devices, which must NOT leak into this
+test process (smoke tests expect 1 device), so the compile test runs in a
+subprocess with its own XLA_FLAGS.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, all_configs
+from repro.distributed.sharding import cache_pspecs, param_spec, params_pspecs
+from repro.models import build_model
+
+
+def test_attention_specs_are_coherent_gqa():
+    cfg = all_configs()["yi-9b"]  # H=32 divisible, K=4 not
+    assert param_spec("segments/0/0/attn/wq", (48, 4096, 32, 128), cfg, 16) == \
+        P(None, None, "model", None)
+    # KV heads replicate (Megatron-GQA) instead of sharding head_dim
+    assert param_spec("segments/0/0/attn/wk", (48, 4096, 4, 128), cfg, 16) == \
+        P(None, None, None, None)
+    assert param_spec("segments/0/0/attn/wo", (48, 32, 128, 4096), cfg, 16) == \
+        P(None, "model", None, None)
+
+
+def test_attention_specs_head_dim_fallback():
+    cfg = all_configs()["qwen2-vl-7b"]  # H=28: neither H nor K divides 16
+    assert param_spec("segments/0/0/attn/wq", (28, 3584, 28, 128), cfg, 16) == \
+        P(None, None, None, "model")
+
+
+def test_moe_expert_sharding():
+    q3 = all_configs()["qwen3-moe-30b-a3b"]  # 128 experts -> EP
+    assert param_spec("segments/0/0/mlp/wg", (48, 128, 2048, 768), q3, 16) == \
+        P(None, "model", None, None)
+    mx = all_configs()["mixtral-8x7b"]  # 8 experts -> shard d_ff instead
+    assert param_spec("segments/0/0/mlp/wg", (32, 8, 4096, 14336), mx, 16) == \
+        P(None, None, None, "model")
+    assert param_spec("segments/0/0/mlp/wd", (32, 8, 14336, 4096), mx, 16) == \
+        P(None, None, "model", None)
+
+
+def test_embed_vocab_parallel():
+    cfg = all_configs()["deepseek-7b"]
+    assert param_spec("embed", (102400, 4096), cfg, 16) == P("model", None)
+
+
+def test_every_param_gets_a_valid_spec():
+    for name, cfg in all_configs().items():
+        model = build_model(cfg)
+        tree = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        from repro.models.tensors import _path_str
+
+        for path, leaf in flat:
+            spec = param_spec(_path_str(path), tuple(leaf.shape), cfg, 16)
+            assert len(spec) == len(leaf.shape), (name, _path_str(path))
+            for dim, s in zip(leaf.shape, spec):
+                if s == "model":
+                    assert dim % 16 == 0, (name, _path_str(path), leaf.shape)
+
+
+def test_cache_specs_shard_or_replicate_legally():
+    for name, cfg in all_configs().items():
+        model = build_model(cfg)
+        specs = model.input_specs(SHAPES["decode_32k"])
+        import repro.launch.mesh  # noqa: F401
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            devices = __import__("numpy").zeros((16, 16))
+
+        tree = cache_pspecs(cfg, specs["cache"], FakeMesh(), batch=128)
+        flat_specs = jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda x: isinstance(x, P))
+        flat_shapes = jax.tree.leaves(specs["cache"])
+        for spec, leaf in zip(flat_specs, flat_shapes):
+            for dim, s in zip(leaf.shape, spec):
+                if s == "model":
+                    assert dim % 16 == 0, (name, leaf.shape, spec)
+
+
+COMPILE_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import jax
+    from repro.configs import SHAPES, all_configs
+    from repro.distributed.steps import make_step
+    from jax.sharding import AxisType
+    import dataclasses
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2,
+                         devices=jax.devices())
+    cfg = all_configs()["llama3.2-1b"].smoke()
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=256, global_batch=8)
+    bundle = make_step(cfg, mesh, shape)
+    with mesh:
+        compiled = bundle.fn.lower(*bundle.args).compile()
+    assert compiled.memory_analysis() is not None
+    print("COMPILED_OK")
+""")
+
+
+def test_small_mesh_compile_subprocess():
+    out = subprocess.run([sys.executable, "-c", COMPILE_SNIPPET],
+                         capture_output=True, text=True, timeout=600,
+                         env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert "COMPILED_OK" in out.stdout, out.stderr[-2000:]

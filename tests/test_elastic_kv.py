@@ -1,0 +1,85 @@
+"""ElasticKV: block tables, free-list delayed release, batched growth,
+urgent reclamation."""
+import pytest
+
+from repro.core.costmodel import PhaseCosts, paper_l40
+from repro.core.elastic_kv import ElasticKV
+from repro.core.regions import RState
+from repro.core.reuse_store import ReuseStore
+from repro.models.tensors import TensorRecord
+
+
+def mkstore(cap=10_000):
+    return ReuseStore(cap, PhaseCosts(paper_l40()))
+
+
+def rec(model, i, size):
+    return TensorRecord(name=f"{model}/t{i}", shape=(size,), dtype="int8",
+                        fingerprint=f"{model}/t{i}", nbytes=size)
+
+
+def test_block_table_growth_and_addressing():
+    store = mkstore()
+    kv = ElasticKV(store, "m", block_tokens=16, kv_bytes_per_token=4,
+                   blocks_per_region=4)
+    kv.ensure({"r1": 20})  # 2 blocks
+    assert len(kv.block_tables["r1"]) == 2
+    addrs = kv.physical_addresses("r1")
+    assert len(set(addrs)) == 2
+    # addresses are block-aligned within their region
+    assert all(a % kv.block_bytes == 0 for a in addrs)
+    kv.ensure({"r1": 33})  # 3 blocks
+    assert len(kv.block_tables["r1"]) == 3
+
+
+def test_free_list_delayed_release():
+    store = mkstore()
+    kv = ElasticKV(store, "m", block_tokens=16, kv_bytes_per_token=4,
+                   blocks_per_region=4)
+    kv.ensure({"r1": 64})
+    pool_allocs_before = kv.stats.pool_allocs
+    kv.release("r1")
+    assert store.pool.free_bytes() < 10_000  # regions NOT returned to pool
+    kv.ensure({"r2": 64})  # served entirely from the free list
+    assert kv.stats.pool_allocs == pool_allocs_before
+    kv.finish_instance()
+    assert store.pool.free_bytes() == 10_000  # collective reclamation
+
+
+def test_batched_allocation_counts():
+    store = mkstore()
+    kv = ElasticKV(store, "m", block_tokens=8, kv_bytes_per_token=2,
+                   blocks_per_region=64)
+    # 8 requests x 8 blocks = 64 blocks -> ONE pool region fetch
+    kv.ensure({f"r{i}": 64 for i in range(8)})
+    assert kv.stats.pool_allocs == 1
+    assert kv.used_blocks() == 64
+
+
+def test_urgent_reclaim_evicts_inactive_tensors():
+    store = mkstore(1_000)
+    store.load_model("cold", [rec("cold", 0, 600)])
+    store.release("cold")
+    kv = ElasticKV(store, "hot", block_tokens=8, kv_bytes_per_token=8,
+                   blocks_per_region=8)  # region = 512B
+    kv.ensure({"r1": 64})  # needs 512B: must evict the cold tensor
+    assert kv.stats.urgent_reclaims >= 1
+    assert store.resident_bytes("cold") == 0
+
+
+def test_kv_regions_are_pinned():
+    store = mkstore()
+    kv = ElasticKV(store, "m", block_tokens=8, kv_bytes_per_token=8,
+                   blocks_per_region=8)
+    kv.ensure({"r1": 8})
+    kv_regions = [r for r in store.pool.regions if r.state == RState.KV]
+    assert kv_regions and all(r.pinned for r in kv_regions)
+
+
+def test_oom_when_truly_full():
+    store = mkstore(100)
+    store.load_model("active", [rec("active", 0, 90)])  # stays active
+    kv = ElasticKV(store, "active", block_tokens=8, kv_bytes_per_token=8,
+                   blocks_per_region=1)
+    with pytest.raises(MemoryError):
+        kv.ensure({"r1": 800})

@@ -1,0 +1,80 @@
+"""Property-based tests (hypothesis) for ElasticKV block-table invariants
+under arbitrary ensure/release interleavings."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.costmodel import PhaseCosts, paper_l40
+from repro.core.elastic_kv import ElasticKV
+from repro.core.regions import RState
+from repro.core.reuse_store import ReuseStore
+
+
+@st.composite
+def kv_ops(draw):
+    """A sequence of (req_id, tokens|None) ops; None = release."""
+    n_reqs = draw(st.integers(1, 5))
+    ops = []
+    lens = {}
+    for _ in range(draw(st.integers(1, 30))):
+        rid = f"r{draw(st.integers(0, n_reqs - 1))}"
+        if draw(st.booleans()) or rid not in lens:
+            grow = draw(st.integers(1, 200))
+            lens[rid] = lens.get(rid, 0) + grow
+            ops.append((rid, lens[rid]))
+        else:
+            del lens[rid]
+            ops.append((rid, None))
+    return ops
+
+
+@settings(max_examples=100, deadline=None)
+@given(kv_ops(), st.sampled_from([8, 16, 32]), st.sampled_from([4, 16]))
+def test_block_table_invariants(ops, block_tokens, blocks_per_region):
+    store = ReuseStore(10_000_000, PhaseCosts(paper_l40()))
+    kv = ElasticKV(store, "m", block_tokens=block_tokens,
+                   kv_bytes_per_token=4, blocks_per_region=blocks_per_region)
+    live_lens: dict[str, int] = {}
+    for rid, tokens in ops:
+        if tokens is None:
+            kv.release(rid)
+            live_lens.pop(rid, None)
+        else:
+            kv.ensure({rid: tokens})
+            live_lens[rid] = tokens
+
+        # INVARIANT 1: every live request has exactly ceil(len/block) blocks
+        for r, t in live_lens.items():
+            assert len(kv.block_tables[r]) == -(-t // block_tokens)
+        # INVARIANT 2: no physical block serves two requests (or the free list)
+        in_tables = [p for tab in kv.block_tables.values() for p in tab]
+        assert len(in_tables) == len(set(in_tables))
+        assert not (set(in_tables) & set(kv.free_list))
+        # INVARIANT 3: every PBN has a unique pool address, block-aligned
+        addrs = [kv.addr[p] for p in in_tables + kv.free_list]
+        assert len(addrs) == len(set(addrs))
+        # INVARIANT 4: pool KV bytes exactly cover the addressable blocks
+        kv_bytes = sum(r.size for r in store.pool.regions
+                       if r.state == RState.KV)
+        assert kv_bytes == len(kv.addr) * kv.block_bytes
+
+    kv.finish_instance()
+    assert store.pool.free_bytes() == 10_000_000
+    store.pool.check()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=20))
+def test_delayed_release_never_grows_pool_usage(growths):
+    """Alternating acquire/release of equal-size tables must reuse the free
+    list: pool regions acquired is monotone but bounded by the peak demand."""
+    store = ReuseStore(10_000_000, PhaseCosts(paper_l40()))
+    kv = ElasticKV(store, "m", block_tokens=16, kv_bytes_per_token=2,
+                   blocks_per_region=8)
+    peak_blocks = 0
+    for i, tokens in enumerate(growths):
+        kv.ensure({f"r{i}": tokens})
+        peak_blocks = max(peak_blocks, kv.blocks_for(tokens))
+        kv.release(f"r{i}")
+        total_blocks = len(kv.addr)
+        # never holds more than peak + one region of slack
+        assert total_blocks <= peak_blocks + kv.blocks_per_region

@@ -1,0 +1,45 @@
+"""Launcher entrypoints run end-to-end in subprocesses (CLI contract)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+@pytest.mark.parametrize("args", [
+    ["-m", "repro.launch.train", "--arch", "llama3.2-1b", "--smoke",
+     "--steps", "4", "--seq-len", "32", "--batch", "2"],
+])
+def test_train_launcher(args):
+    out = subprocess.run([sys.executable] + args, capture_output=True,
+                         text=True, timeout=600, env=ENV)
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "loss" in out.stdout
+
+
+def test_train_launcher_resume(tmp_path):
+    base = ["-m", "repro.launch.train", "--arch", "yi-9b", "--smoke",
+            "--steps", "6", "--seq-len", "32", "--batch", "2",
+            "--ckpt-every", "3", "--ckpt-dir", str(tmp_path)]
+    out1 = subprocess.run([sys.executable] + base, capture_output=True,
+                          text=True, timeout=600, env=ENV)
+    assert out1.returncode == 0, out1.stderr[-1500:]
+    # relaunch with more steps: must resume from the saved step, not step 0
+    args2 = list(base)
+    args2[args2.index("--steps") + 1] = "8"
+    out2 = subprocess.run([sys.executable] + args2, capture_output=True,
+                          text=True, timeout=600, env=ENV)
+    assert out2.returncode == 0, out2.stderr[-1500:]
+    assert "resumed from step 6" in out2.stdout
+
+
+def test_serve_launcher():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--models", "llama3.2-1b", "--requests", "2",
+         "--prompt-len", "16", "--gen-tokens", "4"],
+        capture_output=True, text=True, timeout=600, env=ENV)
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "reuse=100%" in out.stdout  # second request fully reused

@@ -1,0 +1,108 @@
+"""Region-list invariants: coverage, coalescing, best-fit, compaction."""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.regions import Region, RegionList, RState
+
+
+def test_basic_alloc_free():
+    rl = RegionList(100)
+    a = rl.alloc_best_fit(30, RState.TENSOR, "a")
+    b = rl.alloc_best_fit(50, RState.TENSOR, "b")
+    assert a.offset == 0 and b.offset == 30
+    assert rl.free_bytes() == 20
+    rl.check()
+    rl.free(a.offset)
+    assert rl.free_bytes() == 50
+    rl.check()
+    # best-fit picks the 20-byte tail, not the 30-byte hole
+    c = rl.alloc_best_fit(20, RState.TENSOR, "c")
+    assert c.offset == 80
+    rl.check()
+
+
+def test_alloc_failure_returns_none():
+    rl = RegionList(10)
+    assert rl.alloc_best_fit(11, RState.TENSOR, "x") is None
+    assert rl.alloc_best_fit(10, RState.TENSOR, "x") is not None
+    assert rl.alloc_best_fit(1, RState.TENSOR, "y") is None
+
+
+def test_free_coalesces_both_sides():
+    rl = RegionList(30)
+    a = rl.alloc_best_fit(10, RState.TENSOR, "a")
+    b = rl.alloc_best_fit(10, RState.TENSOR, "b")
+    c = rl.alloc_best_fit(10, RState.TENSOR, "c")
+    rl.free(a.offset)
+    rl.free(c.offset)
+    rl.free(b.offset)
+    assert len(rl.regions) == 1 and rl.regions[0].state == RState.FREE
+    rl.check()
+
+
+def test_compact_span_moves_left():
+    rl = RegionList(100)
+    a = rl.alloc_best_fit(20, RState.TENSOR, "a")  # [0,20)
+    b = rl.alloc_best_fit(20, RState.TENSOR, "b")  # [20,40)
+    rl.alloc_best_fit(20, RState.TENSOR, "c")  # [40,60)
+    rl.free(a.offset)
+    # [F20][b][c][F40] -> compact all
+    moved, rel = rl.compact_span(0, len(rl.regions) - 1)
+    assert moved == 40 and rel == {"b": 0, "c": 20}
+    assert rl.largest_free() == 60
+    rl.check()
+
+
+def test_fragmentation_metric():
+    rl = RegionList(100)
+    xs = [rl.alloc_best_fit(10, RState.TENSOR, f"t{i}") for i in range(10)]
+    for x in xs[::2]:
+        rl.free(x.offset)
+    assert rl.free_bytes() == 50
+    assert rl.largest_free() == 10
+    assert rl.fragmentation() == pytest.approx(1 - 10 / 50)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 40)), min_size=1, max_size=60),
+       st.randoms(use_true_random=False))
+def test_random_alloc_free_invariants(ops, rng):
+    """Any alloc/free sequence keeps the list sorted, covering, coalesced."""
+    rl = RegionList(256)
+    live = []
+    for i, (is_alloc, size) in enumerate(ops):
+        if is_alloc or not live:
+            r = rl.alloc_best_fit(size, RState.TENSOR, f"t{i}")
+            if r is not None:
+                live.append(r.offset)
+        else:
+            off = live.pop(rng.randrange(len(live)))
+            rl.free(off)
+        rl.check()
+    used = sum(r.size for r in rl.regions if r.state != RState.FREE)
+    assert used + rl.free_bytes() == 256
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(1, 30), min_size=2, max_size=12), st.integers(0, 10**6))
+def test_compaction_preserves_bytes(sizes, seed):
+    rng = random.Random(seed)
+    rl = RegionList(512)
+    offs = []
+    for i, s in enumerate(sizes):
+        r = rl.alloc_best_fit(s, RState.TENSOR, f"t{i}")
+        if r is not None:
+            offs.append((f"t{i}", r.offset, s))
+    # free a random subset to create fragmentation
+    for name, off, s in offs:
+        if rng.random() < 0.5:
+            rl.free(off)
+    before_used = rl.used_bytes()
+    rl.compact_span(0, len(rl.regions) - 1)
+    rl.check()
+    assert rl.used_bytes() == before_used
+    # after full compaction, free space is contiguous
+    assert rl.fragmentation() == 0.0

@@ -1,0 +1,105 @@
+"""Reuse Store: hit/miss planning, load reports, eviction-cost policy (Eq. 2)."""
+import pytest
+
+from repro.core.allocator import AllocationError
+from repro.core.costmodel import PhaseCosts, paper_l40
+from repro.core.reuse_store import ReuseStore
+from repro.models.tensors import TensorRecord
+
+
+def recs(model, sizes):
+    return [TensorRecord(name=f"{model}/t{i}", shape=(s,), dtype="int8",
+                         fingerprint=f"{model}/t{i}", nbytes=s)
+            for i, s in enumerate(sizes)]
+
+
+def mkstore(cap=1000, policy="mce+pgp"):
+    return ReuseStore(cap, PhaseCosts(paper_l40()), policy=policy)
+
+
+def test_cold_load_then_full_reuse():
+    store = mkstore()
+    r = recs("m1", [100, 200, 50])
+    rep1 = store.load_model("m1", r)
+    assert rep1.bytes_transferred == 350 and rep1.bytes_hit == 0
+    store.release("m1")
+    rep2 = store.load_model("m1", r)  # everything still resident
+    assert rep2.bytes_hit == 350 and rep2.bytes_transferred == 0
+    assert rep2.reuse_fraction == 1.0
+    assert rep2.load_seconds == 0.0
+
+
+def test_partial_reuse_after_pressure_eviction():
+    store = mkstore(1000)
+    m1 = recs("m1", [300, 300])
+    m2 = recs("m2", [300, 200])
+    store.load_model("m1", m1)
+    store.release("m1")
+    rep = store.load_model("m2", m2)  # 600 resident, 500 new: evicts some of m1
+    assert rep.bytes_transferred == 500
+    store.release("m2")
+    rep = store.load_model("m1", m1)
+    assert 0 < rep.bytes_hit <= 600
+    assert rep.bytes_hit + rep.bytes_transferred == 600
+
+
+def test_active_models_never_evicted():
+    store = mkstore(1000)
+    store.load_model("busy", recs("busy", [600]))  # stays active
+    with pytest.raises(AllocationError):
+        store.load_model("m2", recs("m2", [500]))
+    assert store.resident_bytes("busy") == 600
+
+
+def test_eviction_prefers_low_miss_probability():
+    store = mkstore(1000)
+    store.load_model("rare", recs("rare", [400]))
+    store.release("rare")
+    store.load_model("hot", recs("hot", [400]))
+    store.release("hot")
+    store.miss_prob.update({"rare": 0.05, "hot": 0.9})
+    store.load_model("new", recs("new", [300]))
+    assert store.resident_bytes("hot") == 400  # hot survived
+    assert store.resident_bytes("rare") < 400
+
+
+def test_alpha_latency_sensitivity():
+    store = mkstore(1000)
+    store.load_model("a", recs("a", [400]))
+    store.release("a")
+    store.load_model("b", recs("b", [400]))
+    store.release("b")
+    store.miss_prob.update({"a": 0.5, "b": 0.5})
+    store.alpha.update({"a": 0.01, "b": 1.0})  # a tolerates reloads
+    store.load_model("new", recs("new", [300]))
+    assert store.resident_bytes("b") == 400
+    assert store.resident_bytes("a") < 400
+
+
+def test_none_policy_is_exclusive():
+    store = mkstore(policy="none")
+    r = recs("m1", [100])
+    store.load_model("m1", r)
+    store.release("m1")
+    store.drop_model("m1")
+    rep = store.load_model("m1", r)
+    assert rep.bytes_hit == 0 and rep.bytes_transferred == 100
+
+
+def test_load_report_time_model():
+    store = mkstore(10**10)
+    r = recs("m1", [5 * 10**9])
+    rep = store.load_model("m1", r)
+    assert rep.load_seconds == pytest.approx(1.0)  # 5 GB / 5 GB/s calibrated
+
+
+def test_urgent_reclaim_contiguous_window():
+    store = mkstore(1000)
+    # layout: [t0 100][t1 100][t2 100]... with alternating frees -> small holes
+    for i in range(10):
+        store.load_model(f"m{i}", recs(f"m{i}", [100]))
+        store.release(f"m{i}")
+    # all resident; no free space. contiguous reclaim must open a 250B hole
+    assert store.free_bytes() == 0
+    assert store.urgent_reclaim_contiguous(250)
+    assert store.pool.largest_free() >= 250

@@ -1,0 +1,145 @@
+"""Affinity scheduler (Algorithm 2) + cluster simulation end-to-end."""
+import statistics as st
+
+import pytest
+
+from repro.core import (POLICIES, ClusterSim, PhaseCosts, ReuseStore,
+                        affinity_schedule, estimate_load_time, generate_trace,
+                        paper_l40, random_schedule, summarize)
+from repro.core.trace import PAPER_MODELS, access_intervals
+from repro.models.tensors import TensorRecord
+
+
+def recs(model, sizes):
+    return [TensorRecord(name=f"{model}/t{i}", shape=(s,), dtype="int8",
+                         fingerprint=f"{model}/t{i}", nbytes=s)
+            for i, s in enumerate(sizes)]
+
+
+class FakeDevice:
+    def __init__(self, device_id, resident, capacity=10**9):
+        self.device_id = device_id
+        self._resident = resident  # set of fingerprints
+        self.capacity = capacity
+
+    def can_run(self, model_bytes):
+        return model_bytes <= self.capacity
+
+    def reusable_bytes(self, records):
+        return sum(r.nbytes for r in records if r.fingerprint in self._resident)
+
+
+def test_affinity_picks_max_reuse_device():
+    r = recs("m", [100, 200, 300])
+    devs = [FakeDevice("g0", set()),
+            FakeDevice("g1", {"m/t2"}),           # 300 reusable
+            FakeDevice("g2", {"m/t0", "m/t1"})]   # 300 reusable (tie) -> first best kept
+    hw = paper_l40()
+    scheds, queued = affinity_schedule([("m", r, 600)], devs, hw)
+    assert not queued
+    assert scheds[0].device_id in ("g1", "g2")
+    assert scheds[0].reuse_bytes == 300
+    assert scheds[0].expected_load_seconds == pytest.approx(
+        estimate_load_time(600, 300, hw))
+
+
+def test_affinity_queues_when_no_feasible_device():
+    devs = [FakeDevice("g0", set(), capacity=100)]
+    scheds, queued = affinity_schedule([("m", recs("m", [500]), 500)], devs,
+                                       paper_l40())
+    assert queued == ["m"] and not scheds
+
+
+def test_affinity_one_instance_per_device():
+    r1, r2 = recs("a", [100]), recs("b", [100])
+    devs = [FakeDevice("g0", set())]
+    scheds, queued = affinity_schedule([("a", r1, 100), ("b", r2, 100)], devs,
+                                       paper_l40())
+    assert len(scheds) == 1 and queued == ["b"]
+
+
+def test_trace_locality_levels():
+    t_l1 = generate_trace(n_requests=400, locality="L1", seed=3)
+    t_l4 = generate_trace(n_requests=400, locality="L4", seed=3)
+    consec = lambda t: sum(a.model_id == b.model_id for a, b in zip(t, t[1:]))
+    assert consec(t_l1) == 0
+    assert consec(t_l4) > 50
+    iv = access_intervals(t_l4)
+    assert sum(v.count(0) for v in iv.values()) == consec(t_l4)
+
+
+def test_cluster_policy_ladder():
+    """Each added optimization must improve cold-start TTFT on a local trace."""
+    trace = generate_trace(n_requests=250, locality="L3",
+                           mean_interarrival=12.0, seed=7)
+    cold_ttft = {}
+    for pol in ["sllm", "sllm-c", "sllm-cm", "tangram"]:
+        sim = ClusterSim(PAPER_MODELS, POLICIES[pol], n_workers=2, seed=5)
+        res = sim.run(trace)
+        cold = [r for r in res if not r.warm]
+        cold_ttft[pol] = st.fmean(r.ttft for r in cold)
+    assert cold_ttft["sllm-c"] < cold_ttft["sllm"]
+    assert cold_ttft["sllm-cm"] < cold_ttft["sllm-c"]
+    assert cold_ttft["tangram"] < cold_ttft["sllm-cm"]
+
+
+def test_tangram_reduces_load_bytes():
+    trace = generate_trace(n_requests=250, locality="L3",
+                           mean_interarrival=12.0, seed=9)
+    res_b = ClusterSim(PAPER_MODELS, POLICIES["sllm-cm"], n_workers=2, seed=5).run(trace)
+    res_t = ClusterSim(PAPER_MODELS, POLICIES["tangram"], n_workers=2, seed=5).run(trace)
+    bytes_b = sum(r.bytes_transferred for r in res_b)
+    bytes_t = sum(r.bytes_transferred for r in res_t)
+    assert bytes_t < bytes_b * 0.9
+
+
+def test_affinity_beats_random_with_many_workers():
+    trace = generate_trace(n_requests=300, locality="L2",
+                           mean_interarrival=3.0, seed=11)
+    import dataclasses
+    no_aff = dataclasses.replace(POLICIES["tangram"], name="noaff", affinity=False)
+    res_a = ClusterSim(PAPER_MODELS, POLICIES["tangram"], n_workers=6, seed=5).run(trace)
+    res_r = ClusterSim(PAPER_MODELS, no_aff, n_workers=6, seed=5).run(trace)
+    load_a = st.fmean(r.load_phase for r in res_a if not r.warm)
+    load_r = st.fmean(r.load_phase for r in res_r if not r.warm)
+    assert load_a <= load_r * 1.02  # affinity should not be worse
+
+
+def test_decode_results_have_overhead_accounting():
+    trace = generate_trace(n_requests=60, locality="L3", seed=13,
+                           mean_interarrival=25.0, batch_size=4)
+    res = ClusterSim(PAPER_MODELS, POLICIES["tangram"], n_workers=1, seed=5).run(trace)
+    assert all(r.kv_overhead_s >= 0 for r in res)
+    assert all(r.decode_s > 0 for r in res)
+    # ODKV overhead stays tiny relative to decode (paper: < 3.2%)
+    tot_overhead = sum(r.kv_overhead_s for r in res)
+    tot_decode = sum(r.decode_s for r in res)
+    assert tot_overhead / tot_decode < 0.05
+
+
+def test_fault_injection_and_recovery():
+    """A worker dies mid-trace: its state is wiped, requests keep completing
+    on survivors, and the node rejoins cold after recovery."""
+    trace = generate_trace(n_requests=120, locality="L3",
+                           mean_interarrival=10.0, seed=33)
+    sim = ClusterSim(PAPER_MODELS, POLICIES["tangram"], n_workers=3, seed=5)
+    fail_t = trace[40].time + 0.1
+    sim.inject_failure(fail_t, "gpu0", recover_after=200.0)
+    res = sim.run(trace)
+    # the fleet keeps serving: most requests complete despite the failure
+    assert len(res) >= 110
+    dead = next(w for w in sim.workers if w.device_id == "gpu0")
+    assert not dead.failed  # recovered by end of trace
+    assert dead.store.resident_bytes() >= 0  # fresh (cold) pool object
+
+
+def test_failure_without_recovery_shrinks_fleet():
+    trace = generate_trace(n_requests=80, locality="L3",
+                           mean_interarrival=10.0, seed=34)
+    sim = ClusterSim(PAPER_MODELS, POLICIES["tangram"], n_workers=2, seed=5)
+    sim.inject_failure(trace[10].time + 0.1, "gpu1")
+    res = sim.run(trace)
+    assert len(res) >= 60  # survivor handles the load
+    # nothing was ever scheduled onto the dead node afterwards
+    late = [r for r in res if r.start > trace[10].time + 1]
+    assert all(not sim.workers[1].busy_model for _ in late)

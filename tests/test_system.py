@@ -1,0 +1,57 @@
+"""End-to-end behaviour of the full system: the paper's headline claims hold
+on this implementation (cold-start speedup, reuse accounting, overheads)."""
+import statistics as st
+
+import pytest
+
+from repro.core import POLICIES, ClusterSim, PAPER_MODELS, generate_trace
+
+
+@pytest.fixture(scope="module")
+def results():
+    trace = generate_trace(n_requests=300, locality="L3",
+                           mean_interarrival=12.0, seed=42)
+    out = {}
+    for pol in ["sllm", "sllm-cm", "tangram"]:
+        sim = ClusterSim(PAPER_MODELS, POLICIES[pol], n_workers=2, seed=7)
+        out[pol] = sim.run(trace)
+    return out
+
+
+def test_tangram_beats_sllm_cm_ttft(results):
+    cold = {p: [r for r in rs if not r.warm] for p, rs in results.items()}
+    ttft = {p: st.fmean(r.ttft - r.queue_s for r in rs)
+            for p, rs in cold.items()}
+    assert ttft["tangram"] < ttft["sllm-cm"] < ttft["sllm"]
+    reduction = 1 - ttft["tangram"] / ttft["sllm-cm"]
+    assert reduction > 0.10, f"only {reduction:.0%} TTFT reduction"
+
+
+def test_load_phase_speedup_band(results):
+    cold = {p: [r for r in rs if not r.warm] for p, rs in results.items()}
+    load = {p: st.fmean(r.load_phase for r in rs) for p, rs in cold.items()}
+    speedup = load["sllm-cm"] / load["tangram"]
+    assert speedup > 1.3, f"load speedup only {speedup:.2f}x"
+
+
+def test_reuse_only_happens_for_tangram(results):
+    assert all(r.reuse_fraction == 0 for r in results["sllm"])
+    assert any(r.reuse_fraction > 0.5 for r in results["tangram"])
+
+
+def test_decode_overhead_negligible(results):
+    tot_overhead = sum(r.kv_overhead_s for r in results["tangram"])
+    tot_decode = sum(r.decode_s for r in results["tangram"])
+    assert tot_overhead / tot_decode < 0.032  # the paper's own bound
+
+
+def test_conservation_of_bytes(results):
+    """Cold starts transfer exactly (1 - reuse_fraction) x model bytes."""
+    sizes = {m.model_id: m.bytes for m in PAPER_MODELS}
+    for r in results["tangram"]:
+        if r.warm:
+            assert r.bytes_transferred == 0
+        elif r.reuse_fraction < 1:
+            expected = sizes[r.model_id]
+            got = r.bytes_transferred / (1 - r.reuse_fraction)
+            assert abs(got - expected) / expected < 0.01

@@ -1,0 +1,111 @@
+"""Training substrate: optimizer behaviour, data pipeline, checkpointing
+(async, elastic), loss actually decreases on the bigram task."""
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.train.data import BigramStream, DataConfig
+from repro.train.optimizer import AdamWConfig, adamw_update, global_norm, init_opt_state
+
+
+def tiny_model():
+    cfg = dataclasses.replace(
+        get_config("llama3.2-1b"), num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        tie_embeddings=True)
+    return cfg, build_model(cfg)
+
+
+def test_loss_decreases_on_bigram_task():
+    cfg, model = tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    data = BigramStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                   global_batch=8, branching=4))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10)
+    opt_state = init_opt_state(params)
+
+    @jax.jit
+    def step(params, opt_state, tokens):
+        loss, g = jax.value_and_grad(
+            lambda p: model.loss(p, {"tokens": tokens}, remat=False))(params)
+        params, opt_state, _ = adamw_update(params, g, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    losses = []
+    for i in range(60):
+        params, opt_state, loss = step(params, opt_state, data.batch(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+
+def test_grad_clip_bounds_update():
+    cfg, model = tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(grad_clip=0.5)
+    state = init_opt_state(params)
+    big_grads = jax.tree.map(lambda p: jnp.full(p.shape, 100.0, jnp.float32), params)
+    new_params, new_state, metrics = adamw_update(params, big_grads, state, opt_cfg)
+    assert metrics["grad_norm"] > 0.5  # raw norm reported
+    assert int(new_state["step"]) == 1
+
+
+def test_data_determinism_and_sharding():
+    data = BigramStream(DataConfig(vocab_size=128, seq_len=32, global_batch=8))
+    b1 = data.batch(3)
+    b2 = data.batch(3)
+    assert jnp.array_equal(b1, b2)
+    s0 = data.batch(3, shard=0, num_shards=2)
+    s1 = data.batch(3, shard=1, num_shards=2)
+    assert s0.shape == (4, 32)
+    assert not jnp.array_equal(s0, s1)
+    # bigram structure: every transition comes from the table
+    tbl = data.table
+    ok = [int(b1[i, t + 1]) in tbl[int(b1[i, t])].tolist()
+          for i in range(4) for t in range(10)]
+    assert all(ok)
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    cfg, model = tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, {"params": params, "opt": opt})
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 30
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step-"))
+    assert len(kept) == 2  # gc keeps newest 2
+
+    like = {"params": jax.tree.map(jnp.zeros_like, params),
+            "opt": jax.tree.map(jnp.zeros_like, opt)}
+    restored = mgr.restore_latest(like)
+    for a, b in zip(jax.tree.leaves(restored["params"]), jax.tree.leaves(params)):
+        assert jnp.array_equal(a, b)
+
+
+def test_checkpoint_detects_tree_mismatch(tmp_path):
+    cfg, model = tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    save(str(tmp_path), 1, {"params": params})
+    with pytest.raises(AssertionError):
+        restore(str(tmp_path), {"params": params, "extra": jnp.zeros(3)})
+
+
+def test_elastic_restore_with_new_sharding(tmp_path):
+    """Restore re-device_puts every leaf onto provided shardings."""
+    cfg, model = tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    save(str(tmp_path), 5, params)
+    shardings = jax.tree.map(
+        lambda p: jax.sharding.SingleDeviceSharding(jax.devices()[0]), params)
+    restored = restore(str(tmp_path), params, shardings=shardings)
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding == jax.sharding.SingleDeviceSharding(jax.devices()[0])
