@@ -1,0 +1,13 @@
+# Tier-1 gate vs fast inner loop — see ROADMAP.md "Testing".
+PY ?= python
+
+.PHONY: test test-fast bench
+
+test:  ## full tier-1 gate (includes jax compile subprocesses; minutes)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
+
+test-fast:  ## deterministic non-subprocess subset (< 60 s)
+	bash scripts/ci.sh
+
+bench:  ## all paper-figure benchmarks (CSV rows on stdout)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run

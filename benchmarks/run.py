@@ -19,6 +19,8 @@ SUITES = [
     ("fig11", "benchmarks.fig11_odkv", "Fig 11 ODKV space + overhead"),
     ("fig12", "benchmarks.fig12_sensitivity", "Fig 12 locality/pool sensitivity"),
     ("fig13", "benchmarks.fig13_multigpu", "Fig 13 multi-GPU P99 scaling"),
+    ("fig14", "benchmarks.fig14_concurrency",
+     "Fig 14 concurrent multi-instance workers + queueing-aware affinity"),
 ]
 
 

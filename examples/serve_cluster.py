@@ -23,9 +23,9 @@ def main():
                            max_output_tokens=128)
     print(f"trace: {args.requests} requests, {args.rps} rps, {args.locality} "
           f"locality, {args.workers} workers\n")
-    print(f"{'policy':10s} {'mean TTFT':>10s} {'p99 TTFT':>10s} {'cold load':>10s} "
-          f"{'warm%':>6s} {'reuse%':>7s} {'GB moved':>9s}")
-    for pol in ["sllm", "sllm-c", "sllm-cm", "tangram"]:
+    print(f"{'policy':12s} {'mean TTFT':>10s} {'p99 TTFT':>10s} {'cold load':>10s} "
+          f"{'warm%':>6s} {'join%':>6s} {'reuse%':>7s} {'GB moved':>9s}")
+    for pol in ["sllm", "sllm-c", "sllm-cm", "tangram", "tangram-conc"]:
         sim = ClusterSim(PAPER_MODELS, POLICIES[pol], n_workers=args.workers,
                          seed=5)
         res = sim.run(trace)
@@ -33,8 +33,9 @@ def main():
         cold = [r for r in res if not r.warm]
         cold_load = st.fmean(r.load_phase for r in cold) if cold else 0.0
         moved = sum(r.bytes_transferred for r in res) / 1e9
-        print(f"{pol:10s} {s['ttft_mean']:9.2f}s {s['ttft_p99']:9.2f}s "
+        print(f"{pol:12s} {s['ttft_mean']:9.2f}s {s['ttft_p99']:9.2f}s "
               f"{cold_load:9.2f}s {100*s['warm_frac']:5.0f}% "
+              f"{100*s['joined_frac']:5.0f}% "
               f"{100*s['reuse_frac_mean']:6.0f}% {moved:9.1f}")
 
 

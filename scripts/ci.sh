@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Fast CI loop: the deterministic, non-subprocess test subset (< 60 s).
+#
+# This is the inner-loop gate for algorithm-plane work (pool, allocator,
+# ElasticKV, scheduler, cluster sim).  The full tier-1 gate — including the
+# jax compile subprocess tests and kernel/model numerics — is
+# `make test` / `PYTHONPATH=src python -m pytest -x -q` (see ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -q \
+    tests/test_allocator.py \
+    tests/test_regions.py \
+    tests/test_elastic_kv.py \
+    tests/test_elastic_kv_properties.py \
+    tests/test_reuse_store.py \
+    tests/test_scheduler_cluster.py \
+    tests/test_concurrency.py \
+    tests/test_cluster_golden.py \
+    tests/test_configs.py \
+    "$@"

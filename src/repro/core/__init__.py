@@ -9,14 +9,15 @@ from repro.core.allocator import (AllocationError, EvictionCandidate,  # noqa: F
                                   global_merge_plan, minimal_cost_eviction,
                                   partitioned_gain_packing, try_packing)
 from repro.core.cluster import (POLICIES, ClusterSim, RequestResult,  # noqa: F401
-                                SimPolicy, summarize)
+                                SimPolicy, SimWorker, WorkerInstance, summarize)
 from repro.core.costmodel import (Hardware, PhaseCosts, estimate_load_time,  # noqa: F401
                                   paper_l40, tpu_v5e)
 from repro.core.elastic_kv import ElasticKV, KVStats  # noqa: F401
 from repro.core.regions import Region, RegionList, RState  # noqa: F401
 from repro.core.reuse_store import LoadReport, ReuseStore, TensorEntry  # noqa: F401
-from repro.core.scheduler import (ScheduleEntry, affinity_schedule,  # noqa: F401
-                                  random_schedule)
+from repro.core.scheduler import (AFFINITY_POLICIES, ScheduleEntry,  # noqa: F401
+                                  affinity_schedule, random_schedule)
 from repro.core.trace import (DATASETS, LOCALITY, PAPER_MODELS, Request,  # noqa: F401
                               SimModel, access_intervals, generate_trace,
+                              generate_multi_tenant_trace,
                               synthetic_tensor_sizes)

@@ -1,4 +1,4 @@
-"""Event-driven cluster simulator: controller + N single-accelerator workers.
+"""Event-driven cluster simulator: controller + N multi-instance workers.
 
 This is the *cost plane* (DESIGN.md §2): the Tangram algorithms (Reuse Store,
 MCE+PGP allocation, ElasticKV block accounting, affinity scheduling) execute
@@ -11,7 +11,21 @@ Policies:
   sllm-cm   + Medusa offline profiling (Profile ~ gone)
   reuse     SLLM + Tangram Reuse Store (Fig. 9 "+Reuse")
   tangram   reuse + on-demand KV + affinity scheduling (full system)
-Variants toggled via SimPolicy fields for ablations (Fig. 10/12/13).
+  tangram-conc      + concurrent multi-instance workers with queueing-aware
+                      affinity (DESIGN.md §8; beyond-paper)
+  tangram-conc-eq3  concurrent workers but pure Eq.-3 affinity (ablation)
+Variants toggled via SimPolicy fields for ablations (Fig. 10/12/13/14).
+
+Concurrency model (DESIGN.md §8): a worker may keep several model instances
+decoding at once over the shared Unified Memory Pool, each with its own
+ElasticKV accounting.  Requests for an already-decoding model JOIN the
+running instance (continuous batching: no load, no new slot) instead of
+queueing for exclusivity.  Admission control rejects a placement when the
+weights + a per-sequence KV headroom reservation do not fit beside the
+already-pinned instances.  Decode of k co-resident instances shares HBM
+bandwidth: each new request's decode time is scaled by the number of busy
+instances on its device at start (processor-sharing approximation, fixed at
+admission).
 """
 from __future__ import annotations
 
@@ -19,7 +33,7 @@ import heapq
 import itertools
 import random
 from collections import defaultdict, deque
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 from repro.core.costmodel import Hardware, PhaseCosts, paper_l40
@@ -44,6 +58,12 @@ class SimPolicy:
     kv_block_tokens: int = 16
     kv_blocks_per_region: int = 64
     max_seq_reserve: int = 4096  # non-ODKV worst-case KV reservation
+    # ---- concurrent multi-instance workers (DESIGN.md §8)
+    concurrent: bool = False  # several instances may decode on one device
+    max_concurrent: int = 4  # active-instance slots per worker (concurrent)
+    queue_aware: bool = False  # affinity score adds expected_queue_delay
+    max_join_batch: int = 8  # sequences batched onto one running instance
+    admit_kv_tokens: int = 512  # per-sequence KV headroom at admission
 
 
 POLICIES = {
@@ -53,6 +73,12 @@ POLICIES = {
     "reuse": SimPolicy("reuse", criu=True, medusa=True, reuse=True),
     "tangram": SimPolicy("tangram", criu=True, medusa=True, reuse=True,
                          odkv=True, affinity=True),
+    "tangram-conc": SimPolicy("tangram-conc", criu=True, medusa=True,
+                              reuse=True, odkv=True, affinity=True,
+                              concurrent=True, queue_aware=True),
+    "tangram-conc-eq3": SimPolicy("tangram-conc-eq3", criu=True, medusa=True,
+                                  reuse=True, odkv=True, affinity=True,
+                                  concurrent=True, queue_aware=False),
 }
 
 
@@ -62,6 +88,8 @@ class RequestResult:
     arrival: float
     start: float
     warm: bool
+    joined: bool = False  # batched onto an already-decoding instance
+    concurrency: int = 1  # busy instances on the device at start
     queue_s: float = 0.0
     init_s: float = 0.0
     load_s: float = 0.0
@@ -71,6 +99,8 @@ class RequestResult:
     decode_s: float = 0.0
     kv_overhead_s: float = 0.0
     reuse_fraction: float = 0.0
+    bytes_total: int = 0
+    bytes_hit: int = 0
     bytes_transferred: int = 0
     bytes_merged: int = 0
 
@@ -83,10 +113,38 @@ class RequestResult:
     def load_phase(self) -> float:
         return self.load_s + self.merge_s
 
+    @property
+    def done(self) -> float:
+        """Completion wall-clock time of this request."""
+        return self.start + self.ttft - self.queue_s + self.decode_s
+
 
 # per-op costs for ElasticKV runtime overhead (Fig. 11b calibration)
 KV_POOL_ALLOC_S = 2.0e-4
 KV_FREELIST_ALLOC_S = 2.0e-6
+
+
+@dataclass
+class WorkerInstance:
+    """One model instance resident on a worker: weights pinned in the store,
+    its own ElasticKV over the shared pool, and a batch of in-flight
+    sequences (running > 0 while decoding, 0 while idle in keep-alive)."""
+
+    model_id: str
+    weight_bytes: int
+    seq: int  # monotone token: invalidates stale idle_expire timers
+    kv: Optional[ElasticKV] = None
+    kv_reserved: list[tuple[int, int]] = field(default_factory=list)  # (off, size)
+    running: int = 0  # in-flight requests
+    batched_seqs: int = 0  # sequences currently in the decode batch
+    expected_free: float = 0.0  # latest completion among in-flight requests
+    last_used: float = 0.0
+
+    def kv_pinned_bytes(self) -> int:
+        reserved = sum(size for _, size in self.kv_reserved)
+        if self.kv is not None:
+            reserved += self.kv.reserved_bytes()
+        return reserved
 
 
 class SimWorker:
@@ -98,40 +156,119 @@ class SimWorker:
         self.costs = costs
         store_policy = policy.alloc_policy if policy.reuse else "none"
         self.store = ReuseStore(capacity, costs, policy=store_policy)
-        self.busy_model: Optional[str] = None
-        self.idle_model: Optional[str] = None
+        self.slots = policy.max_concurrent if policy.concurrent else 1
+        self.instances: dict[str, WorkerInstance] = {}
+        # waiting room: same-model follow-ups (exclusive) or requests routed
+        # here while their instance's decode batch was full (concurrent)
         self.queue: deque[Request] = deque()
-        self.kv: Optional[ElasticKV] = None
-        self.kv_reserved_offsets: list[int] = []
-        self.instance_seq = 0
+        self.queued_work_s = 0.0  # estimated decode seconds waiting in queue
+        self._seq = itertools.count()
         self.last_assign = -1.0
         self.failed = False
 
+    # ----------------------------------------------------------------- views
+    def busy_instances(self) -> list[WorkerInstance]:
+        return [i for i in self.instances.values() if i.running > 0]
+
+    def idle_instances(self) -> list[WorkerInstance]:
+        return [i for i in self.instances.values() if i.running == 0]
+
+    @property
+    def busy_model(self) -> Optional[str]:
+        """Single-instance compat view: a model currently decoding, if any."""
+        busy = self.busy_instances()
+        return busy[0].model_id if busy else None
+
+    @property
+    def idle_model(self) -> Optional[str]:
+        idle = self.idle_instances()
+        return idle[0].model_id if idle else None
+
+    def has_free_slot(self) -> bool:
+        return len(self.busy_instances()) < self.slots
+
+    def pinned_bytes(self, *, busy_only: bool = False) -> int:
+        """Bytes the pool cannot reclaim right now: weights + KV of resident
+        instances.  Idle instances are terminable, so admission checks pass
+        busy_only=True and rely on LRU termination to make room."""
+        insts = self.busy_instances() if busy_only else self.instances.values()
+        return sum(i.weight_bytes + i.kv_pinned_bytes() for i in insts)
+
     # --------------------------------------------------- DeviceView protocol
     def can_run(self, model_bytes: int) -> bool:
-        return self.busy_model is None and model_bytes <= self.capacity
+        if self.failed or not self.has_free_slot():
+            return False
+        if not self.policy.concurrent:
+            return model_bytes <= self.capacity
+        return self.can_admit(model_bytes, self.policy.admit_kv_tokens)
 
     def reusable_bytes(self, records: Sequence[TensorRecord]) -> int:
         return self.store.reusable_bytes(records)
 
-    # -------------------------------------------------------------- instance
-    def terminate_idle(self):
-        if self.idle_model is None:
-            return
-        if self.policy.reuse:
-            self.store.release(self.idle_model)
-        else:
-            self.store.release(self.idle_model)
-            self.store.drop_model(self.idle_model)
-        if self.kv is not None:
-            self.kv.finish_instance()
-            self.kv = None
-        for off in self.kv_reserved_offsets:
-            self.store.pool.free(off)
-        self.kv_reserved_offsets = []
-        self.idle_model = None
-        self.instance_seq += 1
+    def expected_queue_delay(self, now: float) -> float:
+        """Expected queueing seconds a new instance placement sees here:
+        residual decode work of busy instances plus the decode work already
+        waiting in this worker's queue, spread over the slots (M/G/k-style
+        processor-sharing estimate).  This is the term the pure-Eq.3 score
+        ignores — and why hot devices absorb every request for their
+        resident models under bursts (DESIGN.md §8)."""
+        residual = sum(max(0.0, i.expected_free - now)
+                       for i in self.busy_instances())
+        return (residual + self.queued_work_s) / max(1, self.slots)
 
+    # ------------------------------------------------------ admission control
+    def kv_admit_need(self, model: SimModel, batch_size: int,
+                      admit_tokens: Optional[int] = None) -> int:
+        tokens = (self.policy.admit_kv_tokens if admit_tokens is None
+                  else admit_tokens)
+        return batch_size * tokens * max(model.kv_bytes_per_token, 1)
+
+    def can_admit(self, model_bytes: int, admit_kv_bytes: int = 0) -> bool:
+        """Weights + KV headroom fit beside the busy instances' pinned bytes
+        (inactive resident tensors and idle instances are reclaimable)."""
+        need = model_bytes + admit_kv_bytes
+        return need <= self.capacity - self.pinned_bytes(busy_only=True)
+
+    def can_join(self, model: SimModel, batch_size: int) -> bool:
+        """A request may join this worker's running instance of the model:
+        batch cap not exceeded and KV headroom for the new sequences."""
+        if not self.policy.concurrent:
+            return False  # exclusive baselines serialize same-model requests
+        inst = self.instances.get(model.model_id)
+        if inst is None or inst.running == 0 or self.failed:
+            return False
+        if inst.batched_seqs + batch_size > self.policy.max_join_batch:
+            return False
+        kv_need = self.kv_admit_need(model, batch_size)
+        return kv_need <= self.capacity - self.pinned_bytes()
+
+    def has_waiter_for(self, model_id: str) -> bool:
+        """A request for this model is already parked in the worker queue —
+        fresh arrivals must not batch-join ahead of it (FIFO fairness)."""
+        return any(q.model_id == model_id for q in self.queue)
+
+    # -------------------------------------------------------------- instance
+    def terminate_instance(self, model_id: str):
+        inst = self.instances.pop(model_id)
+        self.store.release(model_id)
+        if not self.policy.reuse:
+            self.store.drop_model(model_id)
+        if inst.kv is not None:
+            inst.kv.finish_instance()
+        for off, _ in inst.kv_reserved:
+            self.store.pool.free(off)
+
+    def terminate_idle(self):
+        for inst in list(self.idle_instances()):
+            self.terminate_instance(inst.model_id)
+
+    def make_room(self, need_bytes: int):
+        """LRU-terminate idle co-tenants until `need_bytes` fits beside the
+        still-pinned instances (warm younger tenants survive)."""
+        for inst in sorted(self.idle_instances(), key=lambda i: i.last_used):
+            if need_bytes <= self.capacity - self.pinned_bytes():
+                return
+            self.terminate_instance(inst.model_id)
 
 class ClusterSim:
     def __init__(self, models: Sequence[SimModel], policy: SimPolicy, *,
@@ -176,7 +313,7 @@ class ClusterSim:
         if not self.global_queue:
             return
         avail = [w for w in self.workers
-                 if w.busy_model is None and not getattr(w, "failed", False)]
+                 if w.has_free_slot() and not w.failed]
         if not avail:
             return
         # LRU candidate order: Algorithm 2 keeps the first device on latency
@@ -186,7 +323,9 @@ class ClusterSim:
         reqs = [(r.model_id, self.records[r.model_id],
                  self.models[r.model_id].bytes) for r in self.global_queue]
         if self.policy.affinity:
-            schedules, _ = affinity_schedule(reqs, avail, self.hw)
+            sched_policy = "eq3+queue" if self.policy.queue_aware else "eq3"
+            schedules, _ = affinity_schedule(reqs, avail, self.hw,
+                                             policy=sched_policy, now=now)
         else:
             schedules, _ = random_schedule(reqs, avail, self.rng)
         chosen = {s.model_id: s.device_id for s in schedules}
@@ -206,56 +345,65 @@ class ClusterSim:
         for r, w in assigned:
             self._start_on_worker(now, r, w)
 
-    # --------------------------------------------------------- instance start
-    def _start_on_worker(self, now: float, req: Request, w: SimWorker):
-        model = self.models[req.model_id]
-        warm = w.idle_model == req.model_id
-        if not warm:
-            w.terminate_idle()
-        w.last_assign = now
-        res = RequestResult(model_id=req.model_id, arrival=req.time, start=now,
-                            warm=warm, queue_s=now - req.time)
-        if warm:
-            w.store.activate(req.model_id)
-            w.idle_model = None
-            res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
-                                                    req.batch_size)
+    # ----------------------------------------------------- per-worker queue
+    def _enqueue_on_worker(self, w: SimWorker, req: Request, *,
+                           front: bool = False):
+        if front:
+            w.queue.appendleft(req)
         else:
-            res.init_s = self.costs.init_time(model.bytes)
-            try:
-                rep = w.store.load_model(req.model_id, self.records[req.model_id],
-                                         now=now)
-            except AllocationError:
-                # model cannot fit: drop KV reservations then retry once
-                w.terminate_idle()
-                rep = w.store.load_model(req.model_id, self.records[req.model_id],
-                                         now=now)
-            res.load_s, res.merge_s = rep.load_seconds, rep.merge_seconds
-            res.reuse_fraction = rep.reuse_fraction
-            res.bytes_transferred = rep.bytes_transferred
-            res.bytes_merged = rep.bytes_merged
-            res.profile_s = self.costs.profile_time(model.bytes)
-            res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
-                                                    req.batch_size)
+            w.queue.append(req)
+        model = self.models[req.model_id]
+        w.queued_work_s += self.costs.decode_time(model.bytes, req.output_tokens)
 
-        # ---- KV cache setup
+    def _dequeue_from_worker(self, w: SimWorker) -> Request:
+        req = w.queue.popleft()
+        model = self.models[req.model_id]
+        w.queued_work_s = max(0.0, w.queued_work_s - self.costs.decode_time(
+            model.bytes, req.output_tokens))
+        return req
+
+    def _drain_worker_queue(self, now: float, w: SimWorker) -> bool:
+        """Serve head-of-line waiting requests that became serviceable: join
+        their running instance once batch slots freed, or start them when an
+        instance slot opened.  Returns whether anything was served."""
+        served = False
+        while w.queue and not w.failed:
+            nxt = w.queue[0]
+            nmodel = self.models[nxt.model_id]
+            ninst = w.instances.get(nxt.model_id)
+            if ninst is not None and ninst.running > 0:
+                if not w.can_join(nmodel, nxt.batch_size):
+                    break  # decode batch still full: keep waiting (FIFO)
+                self._join_instance(now, self._dequeue_from_worker(w), w, ninst)
+            elif w.has_free_slot():
+                if not self._start_on_worker(now, self._dequeue_from_worker(w), w):
+                    break  # placement failed and re-queued: wait for a drain
+            else:
+                break
+            served = True
+        return served
+
+    # ------------------------------------------------------------ KV plumbing
+    def _run_kv(self, req: Request, w: SimWorker, inst: WorkerInstance,
+                res: RequestResult, model: SimModel):
+        """Per-request KV accounting on the instance's ElasticKV (ODKV) or a
+        worst-case reservation (baselines).  Returns the output token count
+        actually decodable (truncated under genuine device pressure)."""
         # engines cap sequence memory at what the device can actually hold
         # (vLLM's max_num_batched_tokens); same cap applies to every policy.
-        kv_budget = max(0, w.capacity - self.models[req.model_id].bytes)
+        kv_budget = max(0, w.capacity - model.bytes)
         token_cap = int(0.9 * kv_budget / max(model.kv_bytes_per_token, 1)
                         / max(req.batch_size, 1))
         prompt_tokens = max(8, min(req.prompt_tokens, token_cap // 2))
         output_tokens = max(4, min(req.output_tokens, token_cap - prompt_tokens))
         total_tokens = prompt_tokens + output_tokens
         if self.policy.odkv:
-            if w.kv is None or w.kv.model_id != req.model_id:
-                if w.kv is not None:
-                    w.kv.finish_instance()
-                w.kv = ElasticKV(w.store, req.model_id,
-                                 block_tokens=self.policy.kv_block_tokens,
-                                 kv_bytes_per_token=model.kv_bytes_per_token,
-                                 blocks_per_region=self.policy.kv_blocks_per_region)
-            kv = w.kv
+            if inst.kv is None:
+                inst.kv = ElasticKV(w.store, req.model_id,
+                                    block_tokens=self.policy.kv_block_tokens,
+                                    kv_bytes_per_token=model.kv_bytes_per_token,
+                                    blocks_per_region=self.policy.kv_blocks_per_region)
+            kv = inst.kv
             p0, f0 = kv.stats.pool_allocs, kv.stats.freelist_allocs
             # prefill allocation (batched) + per-step growth, amortized here
             for step_tokens in range(prompt_tokens, total_tokens + 1,
@@ -276,10 +424,10 @@ class ClusterSim:
             # worst-case reservation (vLLM-style): batch x max-seq KV bytes,
             # EVICTING inactive resident tensors to make room — this is what
             # destroys reuse at large batch sizes (Fig. 9/11a)
-            if not w.kv_reserved_offsets:
+            if not inst.kv_reserved:
                 want = (req.batch_size * self.policy.max_seq_reserve
                         * model.kv_bytes_per_token)
-                want = min(want, w.capacity - self.models[req.model_id].bytes)
+                want = min(want, w.capacity - model.bytes)
                 if want > w.store.free_bytes():
                     w.store.urgent_reclaim(want)
                 want = min(want, w.store.free_bytes())
@@ -292,15 +440,115 @@ class ClusterSim:
                         chunk, RState.KV, f"kvres:{req.model_id}", pinned=True)
                     if reg is None:
                         break
-                    w.kv_reserved_offsets.append(reg.offset)
+                    inst.kv_reserved.append((reg.offset, reg.size))
                     remaining -= chunk
+        return output_tokens
 
+    # --------------------------------------------------------- instance start
+    def _start_on_worker(self, now: float, req: Request, w: SimWorker) -> bool:
+        """Place `req` on `w`: join, start, or (concurrent mode) park it in
+        the worker queue when the decode batch or the pool can't take it yet.
+        Returns False when the request had to wait."""
+        model = self.models[req.model_id]
+        inst = w.instances.get(req.model_id)
+        if inst is not None and inst.running > 0:
+            # scheduler routed a request at a worker already decoding this
+            # model: batch it on if the decode batch has room (and no earlier
+            # same-model request is parked), else wait in the worker's queue
+            # for a batch slot (the queueing delay the eq3+queue affinity
+            # score accounts for)
+            if w.can_join(model, req.batch_size) and not w.has_waiter_for(
+                    req.model_id):
+                self._join_instance(now, req, w, inst)
+                return True
+            self._enqueue_on_worker(w, req)
+            return False
+        warm = inst is not None  # idle same-model instance in keep-alive
+        if not warm:
+            if self.policy.concurrent:
+                kv_need = w.kv_admit_need(model, req.batch_size)
+                w.make_room(model.bytes + kv_need)  # LRU-free idle co-tenants
+            else:
+                w.terminate_idle()
+        w.last_assign = now
+        res = RequestResult(model_id=req.model_id, arrival=req.time, start=now,
+                            warm=warm, queue_s=now - req.time,
+                            concurrency=len(w.busy_instances()) + 1)
+        if warm:
+            w.store.activate(req.model_id)
+            # keep-alive hit: everything resident, nothing transferred.
+            # reuse_fraction stays 0 — it counts tensor-level Reuse Store
+            # hits at LOAD time only (Fig. 9 semantics), not warm starts.
+            res.bytes_total = model.bytes
+            res.bytes_hit = model.bytes
+            res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
+                                                    req.batch_size)
+        else:
+            res.init_s = self.costs.init_time(model.bytes)
+            try:
+                rep = w.store.load_model(req.model_id, self.records[req.model_id],
+                                         now=now)
+            except AllocationError:
+                # model cannot fit: drop idle co-tenants then retry once
+                w.terminate_idle()
+                try:
+                    rep = w.store.load_model(req.model_id,
+                                             self.records[req.model_id], now=now)
+                except AllocationError:
+                    if not self.policy.concurrent:
+                        raise
+                    # busy co-tenants pin too much (fragmented) space for
+                    # this model right now: admission defers the placement
+                    # until an instance drains instead of failing the fleet
+                    self._enqueue_on_worker(w, req, front=True)
+                    return False
+            res.load_s, res.merge_s = rep.load_seconds, rep.merge_seconds
+            res.reuse_fraction = rep.reuse_fraction
+            res.bytes_total = rep.bytes_total
+            res.bytes_hit = rep.bytes_hit
+            res.bytes_transferred = rep.bytes_transferred
+            res.bytes_merged = rep.bytes_merged
+            res.profile_s = self.costs.profile_time(model.bytes)
+            res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
+                                                    req.batch_size)
+            inst = WorkerInstance(req.model_id, model.bytes, next(w._seq))
+            w.instances[req.model_id] = inst
+
+        output_tokens = self._run_kv(req, w, inst, res, model)
         res.decode_s = (self.costs.decode_time(model.bytes, output_tokens)
-                        + res.kv_overhead_s)
-        w.busy_model = req.model_id
+                        * res.concurrency + res.kv_overhead_s)
+        inst.running += 1
+        inst.batched_seqs = req.batch_size
+        inst.last_used = now
         done = now + res.ttft - res.queue_s + res.decode_s
+        inst.expected_free = max(inst.expected_free, done)
         self.results.append(res)
-        self._push(done, "instance_done", w.device_id)
+        self._push(done, "request_done",
+                   (w.device_id, req.model_id, req.batch_size, inst.seq))
+        return True
+
+    def _join_instance(self, now: float, req: Request, w: SimWorker,
+                       inst: WorkerInstance):
+        """Continuous batching: the request's sequences join the model's
+        running decode batch — no load, no init, no new slot."""
+        model = self.models[req.model_id]
+        res = RequestResult(model_id=req.model_id, arrival=req.time, start=now,
+                            warm=True, joined=True, queue_s=now - req.time,
+                            concurrency=len(w.busy_instances()),
+                            bytes_total=model.bytes, bytes_hit=model.bytes)
+        res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
+                                                req.batch_size)
+        output_tokens = self._run_kv(req, w, inst, res, model)
+        res.decode_s = (self.costs.decode_time(model.bytes, output_tokens)
+                        * res.concurrency + res.kv_overhead_s)
+        inst.running += 1
+        inst.batched_seqs += req.batch_size
+        inst.last_used = now
+        done = now + res.ttft - res.queue_s + res.decode_s
+        inst.expected_free = max(inst.expected_free, done)
+        self.results.append(res)
+        self._push(done, "request_done",
+                   (w.device_id, req.model_id, req.batch_size, inst.seq))
 
     # ------------------------------------------------------------- main loop
     def inject_failure(self, time: float, worker_id: str,
@@ -321,43 +569,59 @@ class ClusterSim:
                 self.access_counts[req.model_id] = (
                     0.9 * self.access_counts[req.model_id] + 1.0)
                 self._update_miss_probs()
-                # same-model busy worker with an empty queue -> dispatch to
-                # that engine; otherwise let the controller scale out another
-                # instance on a free worker (serverless replica scaling)
-                target = next((w for w in self.workers
-                               if w.busy_model == req.model_id
-                               and not w.queue), None)
-                if target is not None and not any(
-                        w.busy_model is None for w in self.workers):
-                    target.queue.append(req)
+                if self.policy.concurrent:
+                    # decode batching: join a running instance of the model
+                    # when KV headroom and the batch cap allow it — but never
+                    # ahead of a same-model request already waiting in that
+                    # worker's queue
+                    target = next((w for w in self.workers
+                                   if w.can_join(self.models[req.model_id],
+                                                 req.batch_size)
+                                   and not w.has_waiter_for(req.model_id)),
+                                  None)
+                    if target is not None:
+                        self._join_instance(
+                            now, req, target,
+                            target.instances[req.model_id])
+                    else:
+                        self.global_queue.append(req)
+                        self._try_schedule(now)
                 else:
-                    self.global_queue.append(req)
-                    self._try_schedule(now)
-            elif kind == "instance_done":
-                w = byid[payload]
+                    # same-model busy worker with an empty queue -> dispatch
+                    # to that engine; otherwise let the controller scale out
+                    # another instance on a free worker (replica scaling)
+                    target = next((w for w in self.workers
+                                   if w.busy_model == req.model_id
+                                   and not w.queue), None)
+                    if target is not None and not any(
+                            w.busy_model is None for w in self.workers):
+                        self._enqueue_on_worker(target, req)
+                    else:
+                        self.global_queue.append(req)
+                        self._try_schedule(now)
+            elif kind == "request_done":
+                wid, model_id, batch, seq = payload
+                w = byid[wid]
                 if getattr(w, "failed", False):
                     continue  # the node died mid-flight; request was re-queued
-                model = w.busy_model
-                w.busy_model = None
-                if self.policy.odkv and w.kv is not None:
-                    pass  # delayed release keeps blocks in the free list
-                if w.queue:  # warm follow-ups for the same model
-                    w.idle_model = model
-                    self._start_on_worker(now, w.queue.popleft(), w)
-                else:
-                    w.idle_model = model
-                    exp_seq = w.instance_seq
+                inst = w.instances.get(model_id)
+                if inst is None or inst.seq != seq:
+                    continue  # instance wiped by a failure event (stale done)
+                inst.running = max(0, inst.running - 1)
+                inst.batched_seqs = max(0, inst.batched_seqs - batch)
+                served = self._drain_worker_queue(now, w)
+                # instance may have been terminated/replaced by the drain
+                cur = w.instances.get(model_id)
+                if cur is inst and inst.running == 0:
                     self._push(now + self.policy.keep_alive, "idle_expire",
-                               (w.device_id, model, exp_seq))
+                               (w.device_id, model_id, inst.seq))
+                if not served or self.policy.concurrent:
                     self._try_schedule(now)
             elif kind == "fail":
                 wid, recover_after = payload
                 w = byid[wid]
                 # drop device state entirely
-                w.idle_model = None
-                w.busy_model = None
-                w.kv = None
-                w.kv_reserved_offsets = []
+                w.instances = {}
                 w.store = ReuseStore(w.capacity, self.costs,
                                      policy=(self.policy.alloc_policy
                                              if self.policy.reuse else "none"))
@@ -367,6 +631,7 @@ class ClusterSim:
                 # instance died with it; accounting rows already recorded)
                 while w.queue:
                     self.global_queue.append(w.queue.popleft())
+                w.queued_work_s = 0.0
                 if recover_after is not None:
                     self._push(now + recover_after, "recover", wid)
             elif kind == "recover":
@@ -375,9 +640,10 @@ class ClusterSim:
             elif kind == "idle_expire":
                 wid, model, seq = payload
                 w = byid[wid]
-                if (w.idle_model == model and w.busy_model is None
-                        and w.instance_seq == seq):
-                    w.terminate_idle()
+                inst = w.instances.get(model)
+                if (inst is not None and inst.running == 0
+                        and inst.seq == seq and not w.failed):
+                    w.terminate_instance(model)
                     self._try_schedule(now)
         return self.results
 
@@ -388,6 +654,7 @@ def summarize(results: Sequence[RequestResult]) -> dict[str, float]:
     if not results:
         return {}
     ttfts = sorted(r.ttft for r in results)
+    makespan = max(r.done for r in results) - min(r.arrival for r in results)
     return {
         "n": len(results),
         "ttft_mean": st.fmean(ttfts),
@@ -395,5 +662,8 @@ def summarize(results: Sequence[RequestResult]) -> dict[str, float]:
         "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
         "load_mean": st.fmean(r.load_phase for r in results),
         "warm_frac": sum(r.warm for r in results) / len(results),
+        "joined_frac": sum(r.joined for r in results) / len(results),
         "reuse_frac_mean": st.fmean(r.reuse_fraction for r in results),
+        "makespan": makespan,
+        "throughput_rps": len(results) / makespan if makespan > 0 else 0.0,
     }

@@ -50,6 +50,7 @@ class ElasticKV:
         self.addr: dict[int, int] = {}  # PBN -> pool offset
         self.free_list: list[int] = []
         self.region_offsets: list[int] = []
+        self._region_bytes = 0  # exact pool bytes held (regions vary in size)
         self._next_pbn = 0
         self.stats = KVStats()
 
@@ -58,7 +59,7 @@ class ElasticKV:
         return -(-tokens // self.block_tokens)
 
     def reserved_bytes(self) -> int:
-        return len(self.region_offsets) * self.blocks_per_region * self.block_bytes
+        return self._region_bytes
 
     def used_blocks(self) -> int:
         return sum(len(t) for t in self.block_tables.values())
@@ -98,6 +99,7 @@ class ElasticKV:
                         f"KV OOM: need {remaining * self.block_bytes}B, "
                         f"free={self.store.free_bytes()}B (fragmented)")
             self.region_offsets.append(reg.offset)
+            self._region_bytes += reg.size
             base_pbn = self._next_pbn
             for i in range(blocks):
                 self.addr[base_pbn + i] = reg.offset + i * self.block_bytes
@@ -142,6 +144,7 @@ class ElasticKV:
         for off in self.region_offsets:
             self.store.pool.free(off)
         self.region_offsets.clear()
+        self._region_bytes = 0
         self.free_list.clear()
         self.block_tables.clear()
         self.addr.clear()

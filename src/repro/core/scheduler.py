@@ -1,9 +1,15 @@
-"""GPU-Affinity-Aware Scheduler (§3.4, Algorithm 2).
+"""GPU-Affinity-Aware Scheduler (§3.4, Algorithm 2) + queueing-aware variant.
 
 Given queued model requests and the per-device Reuse Store states, route each
 request to the device with the lowest expected load time
-t_load = (S - S') / B (Eq. 3).  Baseline schedulers (random, first-fit) are
-provided for the Fig. 13 comparison.
+t_load = (S - S') / B (Eq. 3).  The paper's score assumes one instance per
+device; under concurrent multi-instance workers (DESIGN.md §8) a hot device
+with the model resident can still be the *wrong* choice when its decode
+pipeline is saturated, so the "eq3+queue" policy scores
+t_load + expected_queue_delay(device) instead.  The pure-Eq.3 score is kept
+as the named "eq3" policy for ablation (benchmarks/fig14_concurrency.py).
+Baseline schedulers (random, first-fit) are provided for the Fig. 13
+comparison.
 """
 from __future__ import annotations
 
@@ -13,6 +19,9 @@ from typing import Callable, Optional, Protocol, Sequence
 from repro.core.costmodel import Hardware, estimate_load_time
 from repro.models.tensors import TensorRecord
 
+#: Named affinity scoring policies (ablation knob; SimPolicy.queue_aware).
+AFFINITY_POLICIES = ("eq3", "eq3+queue")
+
 
 class DeviceView(Protocol):
     """What the controller can query about a candidate device (RPC in §5.7)."""
@@ -21,6 +30,9 @@ class DeviceView(Protocol):
 
     def can_run(self, model_bytes: int) -> bool: ...
     def reusable_bytes(self, records: Sequence[TensorRecord]) -> int: ...
+    # Optional (queueing-aware scoring): expected seconds of queueing a new
+    # instance would see on this device right now.
+    # def expected_queue_delay(self, now: float) -> float: ...
 
 
 @dataclass
@@ -33,12 +45,18 @@ class ScheduleEntry:
 
 def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]],
                       devices: list, hw: Hardware,
-                      *, in_host_cache: bool = True) -> tuple[list[ScheduleEntry], list[str]]:
+                      *, in_host_cache: bool = True, policy: str = "eq3",
+                      now: float = 0.0) -> tuple[list[ScheduleEntry], list[str]]:
     """Algorithm 2.  requests: (model_id, tensor_records, model_bytes).
 
-    Returns (schedules, still_queued_model_ids).  Each chosen device is
-    removed from the available pool (one instance per device, as in §2.1).
+    policy: "eq3" scores pure load time (the paper); "eq3+queue" adds the
+    device's expected queueing delay so hot devices stop absorbing every
+    request for their resident models.  Returns (schedules,
+    still_queued_model_ids).  Each chosen device is removed from the
+    available pool — one NEW instance placement per device per round
+    (concurrent workers may still accept several across rounds).
     """
+    assert policy in AFFINITY_POLICIES, policy
     avail = list(devices)
     schedules: list[ScheduleEntry] = []
     queued: list[str] = []
@@ -52,6 +70,10 @@ def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]
             reuse = dev.reusable_bytes(records)
             lat = estimate_load_time(model_bytes, reuse, hw,
                                      in_host_cache=in_host_cache)
+            if policy == "eq3+queue":
+                delay_fn = getattr(dev, "expected_queue_delay", None)
+                if delay_fn is not None:
+                    lat += delay_fn(now)
             if lat < best_lat:
                 best, best_lat, best_reuse = dev, lat, reuse
         if best is None:

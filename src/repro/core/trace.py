@@ -133,6 +133,51 @@ def generate_trace(*, n_requests: int, models: Sequence[SimModel] = tuple(PAPER_
     return out
 
 
+def generate_multi_tenant_trace(*, n_requests: int,
+                                models: Sequence[SimModel] = tuple(PAPER_MODELS),
+                                locality: str = "L3",
+                                mean_interarrival: float = 20.0,
+                                burst_every: int = 40, burst_size: int = 8,
+                                burst_models: int = 2, burst_window: float = 2.0,
+                                batch_size: int = 1, seed: int = 0,
+                                max_output_tokens: int = 256) -> list[Request]:
+    """Multi-tenant concurrency scenario: a base trace with overlapping bursts.
+
+    Every `burst_every` base requests, `burst_size` near-simultaneous
+    requests arrive within `burst_window` seconds, spread round-robin over
+    the `burst_models` most popular models of the base trace — so the same
+    device sees several models demanding decode at once (same-model burst
+    when burst_models == 1: the hot-model stampede the queueing-aware
+    affinity score exists for).  Returns the merged, time-sorted trace.
+    """
+    base = generate_trace(n_requests=n_requests, models=models,
+                          locality=locality,
+                          mean_interarrival=mean_interarrival,
+                          batch_size=batch_size, seed=seed,
+                          max_output_tokens=max_output_tokens)
+    from collections import Counter
+
+    hot = [m for m, _ in Counter(r.model_id for r in base)
+           .most_common(max(1, burst_models))]
+    rng = random.Random(seed + 101)
+    ds_names = list(DATASETS)
+    bursts: list[Request] = []
+    for anchor in range(burst_every - 1, len(base), burst_every):
+        t0 = base[anchor].time
+        for j in range(burst_size):
+            ds = rng.choice(ds_names)
+            (pm, ps), (om, osig) = DATASETS[ds]
+            prompt = max(8, int(rng.lognormvariate(pm, ps)))
+            output = max(4, int(rng.lognormvariate(om, osig)))
+            bursts.append(Request(
+                time=t0 + rng.uniform(0.0, burst_window),
+                model_id=hot[j % len(hot)], dataset=ds,
+                prompt_tokens=min(prompt, 4096),
+                output_tokens=min(output, max_output_tokens),
+                batch_size=batch_size))
+    return sorted(base + bursts, key=lambda r: r.time)
+
+
 def access_intervals(trace: Sequence[Request]) -> dict[str, list[int]]:
     """Fig. 4a: per-model distribution of intervening requests between
     consecutive accesses to the same model."""

@@ -23,6 +23,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_mesh_compat  # noqa: F401  (re-export: the
+# test subprocess snippets build their meshes through this jax-version guard)
 
 DP_AXES = ("pod", "data")  # batch axes (pod present only in multi-pod mesh)
 TP = "model"

@@ -8,7 +8,20 @@ axis adds a second data-parallel tier whose gradient reduction crosses DCI.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on mesh construction
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto-typed
+    AxisType = None
+
+
+def make_mesh_compat(shape, axes, *, devices=None):
+    """`jax.make_mesh` across jax versions: pass `axis_types` only where the
+    installed jax knows the kwarg (AxisType landed after 0.4.x)."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
+                             devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,9 +36,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}; have {len(devices)} — the "
             "dry-run entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
             "device_count=512 before importing jax")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices[:n])
+    return make_mesh_compat(shape, axes, devices=devices[:n])
 
 
 def make_local_mesh(shape=(1, 1), axes=("data", "model")):
@@ -33,5 +44,4 @@ def make_local_mesh(shape=(1, 1), axes=("data", "model")):
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[:n])
+    return make_mesh_compat(shape, axes, devices=jax.devices()[:n])

@@ -153,6 +153,43 @@ class HloModule:
                     syms[m.group(1)] = sh
         return syms
 
+    @staticmethod
+    def _split_operands(s: str) -> list[str]:
+        """Split an operand list on top-level commas only: typed operands
+        ("f32[8,64]{1,0} %x") carry commas inside their shape text."""
+        out, depth, cur = [], 0, []
+        for ch in s:
+            if ch in "[{(":
+                depth += 1
+            elif ch in "]})":
+                depth -= 1
+            if ch == "," and depth == 0:
+                out.append("".join(cur).strip())
+                cur = []
+            else:
+                cur.append(ch)
+        tail = "".join(cur).strip()
+        if tail:
+            out.append(tail)
+        return out
+
+    @staticmethod
+    def _operand_shape(token: str, syms: dict[str, tuple]) -> Optional[tuple]:
+        """Shape of one operand of an instruction.
+
+        XLA's text format varies by version: operands print either as bare
+        names ("%dot.1") resolved through the symbol table, or with the type
+        inline ("f32[8,64]{1,0} %convert.40"), which we parse directly.
+        """
+        token = token.strip()
+        if token in syms:
+            return syms[token]
+        if "[" in token:
+            sh = _parse_shape(token)
+            if sh:
+                return sh
+        return syms.get(token.split()[-1]) if token else None
+
     # --------------------------------------------------------- trip counts
     def _trip_count(self, while_line: str) -> int:
         """Infer from the leading dims of the loop tuple elements."""
@@ -187,9 +224,10 @@ class HloModule:
                 ops = re.search(r"dot\(([^)]*)\)", rhs)
                 lhs_c = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
                 if ops and out_shape:
-                    operands = [o.strip() for o in ops.group(1).split(",")]
-                    lhs_shape = syms.get(operands[0])
-                    rhs_shape = syms.get(operands[1]) if len(operands) > 1 else None
+                    operands = self._split_operands(ops.group(1))
+                    lhs_shape = self._operand_shape(operands[0], syms)
+                    rhs_shape = (self._operand_shape(operands[1], syms)
+                                 if len(operands) > 1 else None)
                     contract = 1
                     if lhs_c and lhs_shape:
                         for d in lhs_c.group(1).split(","):
@@ -213,8 +251,8 @@ class HloModule:
                 ops = re.search(re.escape(coll) + r"\(([^)]*)\)", rhs)
                 nbytes = 0
                 if ops:
-                    for o in ops.group(1).split(","):
-                        shp = syms.get(o.strip())
+                    for o in self._split_operands(ops.group(1)):
+                        shp = self._operand_shape(o, syms)
                         if shp:
                             nbytes += _nbytes(shp)
                 if nbytes == 0 and out_shape:

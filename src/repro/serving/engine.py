@@ -5,6 +5,13 @@ device buffer IS the reuse mechanism under JAX — DESIGN.md §2), a real paged
 KV slab indexed by ElasticKV's physical block numbers, and decodes through the
 E-Attention Pallas kernel.
 
+The KV slab is SHARED per KV geometry (layers x block x kv-heads x head-dim):
+every resident instance of that geometry draws pages from the same buffer, so
+sequences of *different models* interleave physical pages exactly as their
+ElasticKV pool offsets interleave in the Unified Memory Pool (DESIGN.md §8).
+`Engine.decode_many` advances several instances' batches in one engine step —
+the multi-tenant concurrent-decode loop the cluster simulator models.
+
 Architecture support:
   * homogeneous attention-family models (dense / MoE / VLM): full paged-KV
     decode via `kernels.ops.paged_attention`;
@@ -16,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +47,60 @@ class RegisteredModel:
     init_fn: Callable[[], Any]  # produces the full param tree (the Model Store)
 
 
+class SharedKVSlab:
+    """One paged K/V buffer per KV geometry, shared by every resident
+    instance.  A physical page is keyed by the *pool offset* ElasticKV
+    assigned to the block, so concurrently-decoding models' sequences
+    interleave pages without coordination — the Unified Memory Pool already
+    guarantees the offsets are disjoint."""
+
+    def __init__(self, k_pages: jax.Array, v_pages: jax.Array):
+        self.k_pages = k_pages  # (L, P, T, K, hd)
+        self.v_pages = v_pages
+        self.page_map: dict[int, int] = {}  # pool offset -> page index
+        self.free_pages: list[int] = []
+        self._next_fresh = 0
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_pages.shape[1]
+
+    def live_pages(self) -> int:
+        return len(self.page_map)
+
+    def page_of(self, offset: int) -> int:
+        idx = self.page_map.get(offset)
+        if idx is None:
+            if self.free_pages:
+                idx = self.free_pages.pop()
+            else:
+                if self._next_fresh >= self.num_pages:
+                    # sharing must not shrink capacity below what separate
+                    # per-instance slabs provided: grow the backing buffers
+                    # (byte accounting lives in ElasticKV/the pool, not here)
+                    self.grow(max(1, self.num_pages * 2))
+                idx = self._next_fresh
+                self._next_fresh += 1
+            self.page_map[offset] = idx
+        return idx
+
+    def release(self, offsets):
+        """Instance finished: its pages return to the slab free list."""
+        for off in offsets:
+            idx = self.page_map.pop(off, None)
+            if idx is not None:
+                self.free_pages.append(idx)
+
+    def grow(self, num_pages: int):
+        if num_pages <= self.num_pages:
+            return
+        L, _, T, K, hd = self.k_pages.shape
+        pad = num_pages - self.num_pages
+        zeros = jnp.zeros((L, pad, T, K, hd), self.k_pages.dtype)
+        self.k_pages = jnp.concatenate([self.k_pages, zeros], axis=1)
+        self.v_pages = jnp.concatenate([self.v_pages, zeros], axis=1)
+
+
 class Engine:
     """One worker's inference engine over a Unified Memory Pool."""
 
@@ -50,6 +111,7 @@ class Engine:
         self.models: dict[str, RegisteredModel] = {}
         self._tensors: dict[str, jax.Array] = {}  # fingerprint -> live buffer
         self._params_cache: dict[str, Any] = {}  # model_id -> assembled tree
+        self._slabs: dict[tuple, SharedKVSlab] = {}  # KV geometry -> slab
 
     # ------------------------------------------------------------- registry
     def register(self, model_id: str, cfg: ModelConfig,
@@ -98,6 +160,22 @@ class Engine:
         return self._params_cache[model_id]
 
     # -------------------------------------------------------------- instance
+    def kv_slab(self, cfg: ModelConfig, num_pages: int) -> SharedKVSlab:
+        """The shared slab for this model's KV geometry (created or grown on
+        demand).  Instances of different models with equal geometry share."""
+        L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        T = self.block_tokens
+        key = (L, T, K, hd, str(cfg.jnp_dtype))
+        slab = self._slabs.get(key)
+        if slab is None:
+            shape = (L, num_pages, T, K, hd)
+            slab = SharedKVSlab(jnp.zeros(shape, cfg.jnp_dtype),
+                                jnp.zeros(shape, cfg.jnp_dtype))
+            self._slabs[key] = slab
+        else:
+            slab.grow(num_pages)
+        return slab
+
     def start_instance(self, model_id: str, *, max_blocks_per_seq: int = 64,
                        num_pages: int = 128) -> "Instance":
         reg = self.models[model_id]
@@ -106,6 +184,18 @@ class Engine:
                        blocks_per_region=16)
         return Instance(self, reg, kv, num_pages=num_pages,
                         max_blocks_per_seq=max_blocks_per_seq)
+
+    def decode_many(self, steps: Sequence[tuple["Instance", jnp.ndarray]]
+                    ) -> list[jnp.ndarray]:
+        """One interleaved engine step: advance each running instance by one
+        decode step over the shared KV slab(s).  `steps`: (instance, tokens)
+        pairs — multiple models' sequences proceed concurrently, their pages
+        interleaved in the same buffers.  Returns per-instance logits."""
+        out = []
+        for inst, tok in steps:
+            assert inst.engine is self, "instance belongs to another engine"
+            out.append(inst.decode(tok))
+        return out
 
 
 def _is_paged_family(cfg: ModelConfig) -> bool:
@@ -127,15 +217,17 @@ class Instance:
         self.model = build_model(reg.cfg)
         self.paged = _is_paged_family(reg.cfg)
         self.max_blocks = max_blocks_per_seq
-        cfg = reg.cfg
+        self.slab: Optional[SharedKVSlab] = None
         if self.paged:
-            L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
-            T = kv.block_tokens
-            self.k_pages = jnp.zeros((L, num_pages, T, K, hd), cfg.jnp_dtype)
-            self.v_pages = jnp.zeros((L, num_pages, T, K, hd), cfg.jnp_dtype)
+            self.slab = engine.kv_slab(reg.cfg, num_pages)
         self._cache = None  # state-family fallback cache
         self._tables: Optional[jnp.ndarray] = None
         self._lengths: Optional[jnp.ndarray] = None
+
+    def _pages(self, pbns) -> list[int]:
+        """Map this instance's ElasticKV PBNs to shared-slab page indices via
+        their pool offsets (disjoint across co-resident instances)."""
+        return [self.slab.page_of(self.kv.addr[p]) for p in pbns]
 
     # ---------------------------------------------------------------- prefill
     def prefill(self, batch: dict) -> jnp.ndarray:
@@ -159,8 +251,8 @@ class Instance:
         nblk = -(-S // T)
         tables_np = np.zeros((B, self.max_blocks), np.int32)
         for b in range(B):
-            pbns = self.kv.block_tables[f"seq{b}"]
-            tables_np[b, : len(pbns)] = pbns
+            pages = self._pages(self.kv.block_tables[f"seq{b}"])
+            tables_np[b, : len(pages)] = pages
         self._tables = jnp.asarray(tables_np)
         self._lengths = jnp.full((B,), S, jnp.int32)
 
@@ -172,12 +264,12 @@ class Instance:
         L = kc.shape[0]
         kc = kc.reshape(L, B, nblk, T, *kc.shape[3:])
         vc = vc.reshape(L, B, nblk, T, *vc.shape[3:])
-        kp, vp = self.k_pages, self.v_pages
+        kp, vp = self.slab.k_pages, self.slab.v_pages
         for b in range(B):
             pbn = self._tables[b, :nblk]
             kp = kp.at[:, pbn].set(kc[:, b])
             vp = vp.at[:, pbn].set(vc[:, b])
-        self.k_pages, self.v_pages = kp, vp
+        self.slab.k_pages, self.slab.v_pages = kp, vp
         return logits[:, -1]
 
     # ----------------------------------------------------------------- decode
@@ -196,17 +288,21 @@ class Instance:
         T = self.kv.block_tokens
         tables_np = np.array(self._tables)
         for b in range(B):
-            pbns = self.kv.block_tables[f"seq{b}"]
-            tables_np[b, : len(pbns)] = pbns
+            pages = self._pages(self.kv.block_tables[f"seq{b}"])
+            tables_np[b, : len(pages)] = pages
         self._tables = jnp.asarray(tables_np)
 
-        logits, self.k_pages, self.v_pages = _paged_decode_step(
+        logits, self.slab.k_pages, self.slab.v_pages = _paged_decode_step(
             params, self.reg.cfg, token, pos, self._tables, self._lengths,
-            self.k_pages, self.v_pages)
+            self.slab.k_pages, self.slab.v_pages)
         self._lengths = self._lengths + 1
         return logits
 
     def finish(self):
+        if self.slab is not None:
+            # pages go back to the shared slab BEFORE the pool offsets are
+            # released (another instance may claim them immediately after)
+            self.slab.release(list(self.kv.addr.values()))
         for b in list(self.kv.block_tables):
             self.kv.release(b)
         self.kv.finish_instance()

@@ -1,0 +1,106 @@
+"""Minimal deterministic stand-in for `hypothesis` (see tests/conftest.py).
+
+When the real package is unavailable, the property-test modules
+(test_allocator, test_regions, test_elastic_kv_properties) are executed
+against seeded-random sampling instead of aborting the whole tier-1 run at
+collection.  Only the API surface those modules use is implemented:
+
+    given, settings, strategies.{integers, floats, booleans, lists, tuples,
+    sampled_from, randoms, composite}
+
+Examples are drawn from a per-test deterministic RNG, so runs are
+reproducible; there is no shrinking and no database.  If real `hypothesis`
+is installed, this file is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 50
+_MAX_EXAMPLES_ATTR = "_shim_max_examples"
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, *, allow_nan: bool = True,
+           allow_infinity: bool = True) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    return SearchStrategy(lambda rng: [
+        elements.example(rng) for _ in range(rng.randint(min_size, max_size))])
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def randoms(*, use_true_random: bool = True) -> SearchStrategy:
+    return SearchStrategy(lambda rng: random.Random(rng.getrandbits(64)))
+
+
+def composite(fn):
+    """`fn(draw, *args)` -> a strategy; `draw(strategy)` samples from it."""
+    @functools.wraps(fn)
+    def builder(*args, **kwargs) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: fn(lambda strat: strat.example(rng), *args, **kwargs))
+    return builder
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        setattr(fn, _MAX_EXAMPLES_ATTR, max_examples)
+        return fn
+    return decorate
+
+
+def given(*strategies: SearchStrategy):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, _MAX_EXAMPLES_ATTR, DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"shim:{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        # copy identity but NOT the signature: pytest must not mistake the
+        # strategy-supplied parameters for fixtures (real hypothesis hides
+        # them the same way)
+        for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+    return decorate
+
+
+def _build_strategies_module() -> types.ModuleType:
+    mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples", "randoms", "composite", "SearchStrategy"):
+        setattr(mod, name, globals()[name])
+    return mod
+
+
+strategies = _build_strategies_module()

@@ -1,0 +1,28 @@
+"""Shared pytest setup.
+
+The container may lack `hypothesis`; without intervention three test modules
+fail at *collection* and `pytest -x` (the tier-1 gate) dies before running a
+single test.  Install the deterministic fallback shim in that case so every
+module collects and the property tests still execute (seeded sampling, no
+shrinking).  Real `hypothesis`, when present, wins.
+"""
+import importlib.util
+import pathlib
+import sys
+
+
+def _install_hypothesis_shim():
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+    shim_path = pathlib.Path(__file__).with_name("_hypothesis_shim.py")
+    spec = importlib.util.spec_from_file_location("hypothesis", shim_path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+_install_hypothesis_shim()

@@ -1,0 +1,75 @@
+"""Golden-trace regression for the cluster simulator's cost plane.
+
+A fixed-seed L3 workload pins down two classes of invariant that refactors
+must not silently break:
+  * policy ordering — every Tangram stage helps: tangram mean TTFT <= reuse
+    <= sllm (and the concurrent worker is no worse than exclusive tangram);
+  * exact byte accounting — for every request,
+    bytes_hit + bytes_transferred == bytes_total, and fleet-wide transfer
+    totals are strictly ordered by reuse capability.
+"""
+import statistics as st
+
+import pytest
+
+from repro.core import POLICIES, ClusterSim, generate_trace
+from repro.core.trace import PAPER_MODELS
+
+GOLDEN_SEED = 1234
+
+
+@pytest.fixture(scope="module")
+def golden_results():
+    trace = generate_trace(n_requests=240, locality="L3",
+                           mean_interarrival=10.0, seed=GOLDEN_SEED,
+                           max_output_tokens=128)
+    out = {}
+    for pol in ["sllm", "reuse", "tangram", "tangram-conc"]:
+        sim = ClusterSim(PAPER_MODELS, POLICIES[pol], n_workers=2,
+                         seed=GOLDEN_SEED)
+        out[pol] = sim.run(trace)
+    return out
+
+
+def test_every_request_completes(golden_results):
+    for pol, res in golden_results.items():
+        assert len(res) == 240, pol
+
+
+def test_policy_ordering_mean_ttft(golden_results):
+    mean = {pol: st.fmean(r.ttft for r in res)
+            for pol, res in golden_results.items()}
+    assert mean["tangram"] <= mean["reuse"] <= mean["sllm"]
+    assert mean["tangram-conc"] <= mean["tangram"]
+
+
+def test_exact_byte_accounting(golden_results):
+    bytes_by_model = {m.model_id: m.bytes for m in PAPER_MODELS}
+    for pol, res in golden_results.items():
+        for r in res:
+            assert r.bytes_hit + r.bytes_transferred == r.bytes_total, pol
+            assert r.bytes_total == bytes_by_model[r.model_id], pol
+        # baselines reuse nothing across instances: every cold start pays
+        if pol == "sllm":
+            assert all(r.bytes_hit == 0 for r in res if not r.warm)
+
+
+def test_transfer_totals_ordered_by_reuse(golden_results):
+    moved = {pol: sum(r.bytes_transferred for r in res)
+             for pol, res in golden_results.items()}
+    assert moved["reuse"] < moved["sllm"]
+    assert moved["tangram"] <= moved["reuse"] * 1.05  # odkv must not regress
+    assert moved["tangram-conc"] <= moved["tangram"]  # joins transfer nothing
+
+
+def test_cold_reuse_fraction_monotone(golden_results):
+    """reuse_fraction counts load-time Reuse Store hits only (Fig. 9
+    semantics): zero for the exclusive baseline, substantial once the store
+    retains tensors."""
+    frac = {}
+    for pol, res in golden_results.items():
+        cold = [r for r in res if not r.warm]
+        frac[pol] = st.fmean(r.reuse_fraction for r in cold) if cold else 0.0
+    assert frac["sllm"] == 0.0
+    assert frac["tangram"] > frac["sllm"]
+    assert frac["tangram"] > 0.3

@@ -13,11 +13,11 @@ SNIPPET = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.distributed.compress import compressed_grad_fn, int8_all_reduce
+    from repro.distributed.sharding import make_mesh_compat
 
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,),
-                         devices=jax.devices())
+    mesh = make_mesh_compat((8,), ("data",), devices=jax.devices())
 
     def loss_fn(w, batch):
         x, y = batch["x"], batch["y"]

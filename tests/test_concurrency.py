@@ -1,0 +1,252 @@
+"""Concurrent multi-instance workers (DESIGN.md §8): admission control,
+per-instance ElasticKV accounting over the shared pool, decode-batch joins,
+and the queueing-aware affinity score.  All deterministic."""
+import dataclasses
+import statistics as st
+
+import pytest
+
+from repro.core import (POLICIES, ClusterSim, PhaseCosts, Request, SimModel,
+                        SimPolicy, SimWorker, WorkerInstance,
+                        generate_multi_tenant_trace, generate_trace, paper_l40,
+                        summarize)
+from repro.core.elastic_kv import ElasticKV
+from repro.core.regions import RState
+from repro.core.trace import PAPER_MODELS
+
+CONC = POLICIES["tangram-conc"]
+CONC_EQ3 = POLICIES["tangram-conc-eq3"]
+
+
+def mk_models(n=2, gb=2.0, kv_per_token=1000):
+    return [SimModel(f"m{i}", gb * 1e9 / 2, 6, kv_bytes_per_token=kv_per_token)
+            for i in range(n)]
+
+
+def req(t, model, *, prompt=64, output=256, batch=1):
+    return Request(time=t, model_id=model, dataset="alpaca",
+                   prompt_tokens=prompt, output_tokens=output, batch_size=batch)
+
+
+# ------------------------------------------------------------ admission ctrl
+def test_admission_rejects_when_headroom_insufficient():
+    """Two 2GB models on a 2.5GB pool: the second must WAIT even though the
+    worker has free instance slots — weights + KV headroom do not fit."""
+    models = mk_models(2)
+    sim = ClusterSim(models, CONC, n_workers=1, pool_bytes=int(2.5e9), seed=0)
+    trace = [req(0.0, "m0"), req(0.01, "m1")]
+    res = sim.run(trace)
+    r0, r1 = sorted(res, key=lambda r: r.model_id)
+    assert r1.queue_s > 0  # rejected at arrival, queued
+    assert r1.start >= r0.done  # admitted only once m0's instance drained
+    assert r1.concurrency == 1
+
+
+def test_admission_allows_coresidency_when_pool_fits():
+    models = mk_models(2)
+    sim = ClusterSim(models, CONC, n_workers=1, pool_bytes=int(8e9), seed=0)
+    res = sim.run([req(0.0, "m0"), req(0.01, "m1")])
+    r0, r1 = sorted(res, key=lambda r: r.model_id)
+    assert r1.queue_s == pytest.approx(0.0)
+    assert r1.concurrency == 2  # decoding beside m0
+    assert r1.start < r0.done
+
+
+def test_exclusive_worker_never_coresident():
+    models = mk_models(2)
+    sim = ClusterSim(models, POLICIES["tangram"], n_workers=1,
+                     pool_bytes=int(8e9), seed=0)
+    res = sim.run([req(0.0, "m0"), req(0.01, "m1")])
+    assert all(r.concurrency == 1 for r in res)
+    r0, r1 = sorted(res, key=lambda r: r.model_id)
+    assert r1.start >= r0.done
+
+
+def test_can_run_respects_slots_and_pinned_bytes():
+    w = SimWorker("g0", 10_000_000, PhaseCosts(paper_l40()), CONC)
+    assert w.can_run(4_000_000)
+    busy = WorkerInstance("a", 6_000_000, 0, running=1)
+    w.instances["a"] = busy
+    assert not w.can_run(5_000_000)  # 6M pinned: 5M + KV headroom > 4M left
+    assert w.can_run(1_000_000)
+    w.instances.update({
+        f"x{i}": WorkerInstance(f"x{i}", 100, i + 1, running=1)
+        for i in range(CONC.max_concurrent - 1)})
+    assert not w.has_free_slot()
+    assert not w.can_run(100)  # slots exhausted regardless of bytes
+
+
+# --------------------------------------------------- per-instance accounting
+def test_per_instance_kv_accounting_over_shared_pool():
+    w = SimWorker("g0", 10_000_000, PhaseCosts(paper_l40()), CONC)
+    ia = WorkerInstance("a", 1_000_000, 0, running=1)
+    ib = WorkerInstance("b", 1_000_000, 1, running=1)
+    w.instances = {"a": ia, "b": ib}
+    ia.kv = ElasticKV(w.store, "a", block_tokens=16, kv_bytes_per_token=100,
+                      blocks_per_region=4)
+    ib.kv = ElasticKV(w.store, "b", block_tokens=16, kv_bytes_per_token=100,
+                      blocks_per_region=4)
+    ia.kv.ensure({"r0": 64})
+    ib.kv.ensure({"r1": 128, "r2": 32})
+    assert ia.kv_pinned_bytes() == ia.kv.reserved_bytes() > 0
+    assert ib.kv_pinned_bytes() == ib.kv.reserved_bytes() > ia.kv_pinned_bytes()
+    pool_kv = sum(r.size for r in w.store.pool.regions if r.state == RState.KV)
+    assert pool_kv == ia.kv.reserved_bytes() + ib.kv.reserved_bytes()
+    assert w.pinned_bytes() == 2_000_000 + pool_kv
+    # terminating one instance returns exactly its KV regions to the pool
+    w.terminate_instance("a")
+    pool_kv_after = sum(r.size for r in w.store.pool.regions
+                        if r.state == RState.KV)
+    assert pool_kv_after == ib.kv.reserved_bytes()
+    assert "a" not in w.instances and "b" in w.instances
+
+
+# ------------------------------------------------------------- decode joins
+def test_request_joins_running_instance():
+    models = mk_models(1)
+    sim = ClusterSim(models, CONC, n_workers=1, pool_bytes=int(8e9), seed=0)
+    res = sim.run([req(0.0, "m0", output=512), req(1.0, "m0")])
+    first, second = sorted(res, key=lambda r: r.arrival)
+    assert not first.joined
+    assert second.joined and second.warm
+    assert second.queue_s == pytest.approx(0.0)
+    assert second.load_s == 0.0 and second.init_s == 0.0
+    assert second.bytes_transferred == 0
+
+
+def test_join_respects_batch_cap_then_waits():
+    models = mk_models(1)
+    tight = dataclasses.replace(CONC, name="tight", max_join_batch=1)
+    sim = ClusterSim(models, tight, n_workers=1, pool_bytes=int(8e9), seed=0)
+    res = sim.run([req(0.0, "m0", output=512), req(1.0, "m0")])
+    first, second = sorted(res, key=lambda r: r.arrival)
+    assert not second.joined  # batch full: waited for the instance to drain
+    assert second.queue_s > 0
+    assert second.warm  # ... and then started warm on the kept-alive weights
+    assert second.start >= first.done
+
+
+def test_exclusive_mode_never_joins():
+    models = mk_models(1)
+    sim = ClusterSim(models, POLICIES["tangram"], n_workers=1,
+                     pool_bytes=int(8e9), seed=0)
+    res = sim.run([req(0.0, "m0", output=512), req(1.0, "m0")])
+    assert all(not r.joined for r in res)
+
+
+def test_byte_accounting_exact_on_joins_and_starts():
+    models = mk_models(3)
+    sim = ClusterSim(models, CONC, n_workers=2, pool_bytes=int(8e9), seed=0)
+    trace = [req(0.2 * i, f"m{i % 3}") for i in range(30)]
+    res = sim.run(trace)
+    assert len(res) == 30
+    for r in res:
+        assert r.bytes_hit + r.bytes_transferred == r.bytes_total
+        assert r.bytes_total == models[0].bytes
+
+
+def test_joins_never_jump_parked_same_model_requests():
+    """FIFO fairness: once a same-model request is parked for a batch slot,
+    later arrivals must queue behind it, not keep the batch topped up."""
+    models = mk_models(1)
+    pol = dataclasses.replace(CONC, name="fifo", max_join_batch=3)
+    sim = ClusterSim(models, pol, n_workers=1, pool_bytes=int(8e9), seed=0)
+    trace = [req(0.0, "m0", batch=2, output=512),   # starts, batched_seqs=2
+             req(0.5, "m0", batch=2, output=64),    # 2+2 > 3: parked
+             req(1.0, "m0", batch=1, output=64)]    # 2+1 <= 3 BUT must wait
+    res = sim.run(trace)
+    first, parked, late = sorted(res, key=lambda r: r.arrival)
+    assert parked.queue_s > 0
+    assert late.queue_s > 0  # did not jump the queue at arrival
+    assert late.start >= parked.start  # FIFO preserved
+
+
+def test_make_room_terminates_lru_idle_only():
+    """Admission pressure frees the LEAST-recently-used idle co-tenant and
+    spares younger warm instances."""
+    models = mk_models(3)  # 2 GB each
+    sim = ClusterSim(models, dataclasses.replace(CONC, keep_alive=200.0),
+                     n_workers=1, pool_bytes=int(5e9), seed=0)
+    trace = [req(0.0, "m0", output=16),    # resident, idle quickly
+             req(10.0, "m1", output=16),   # resident, idle (younger)
+             req(20.0, "m2", output=16),   # needs room: must evict m0 only
+             req(25.0, "m1", output=16),   # m1 survived -> warm start
+             req(30.0, "m0", output=16)]   # m0 was evicted -> cold start
+    res = sim.run(trace)
+    by_arrival = sorted(res, key=lambda r: r.arrival)
+    assert by_arrival[3].model_id == "m1" and by_arrival[3].warm
+    assert by_arrival[4].model_id == "m0" and not by_arrival[4].warm
+
+
+# ------------------------------------------------------ queueing-aware score
+def test_expected_queue_delay_counts_residual_and_queued_work():
+    w = SimWorker("g0", int(50e9), PhaseCosts(paper_l40()), CONC)
+    assert w.expected_queue_delay(now=0.0) == 0.0
+    w.instances["a"] = WorkerInstance("a", 1, 0, running=1, expected_free=8.0)
+    w.instances["b"] = WorkerInstance("b", 1, 1, running=1, expected_free=4.0)
+    # (8 + 4) residual over 4 slots
+    assert w.expected_queue_delay(now=0.0) == pytest.approx(3.0)
+    assert w.expected_queue_delay(now=4.0) == pytest.approx(1.0)
+    w.queued_work_s = 8.0
+    assert w.expected_queue_delay(now=4.0) == pytest.approx(3.0)
+
+
+def test_queue_aware_spreads_hot_burst():
+    """A stampede on one hot model: pure Eq.3 keeps piling the hot device
+    (t_load = 0 there) while eq3+queue overflows to colder devices once the
+    hot queue's expected delay exceeds a load — better p99 TTFT."""
+    small = [m for m in PAPER_MODELS if m.bytes < 20e9]
+    trace = generate_multi_tenant_trace(
+        n_requests=200, models=small, mean_interarrival=5.0, burst_every=20,
+        burst_size=16, burst_models=1, seed=11, max_output_tokens=96)
+    p99 = {}
+    for pol in ["tangram", "tangram-conc-eq3", "tangram-conc"]:
+        res = ClusterSim(small, POLICIES[pol], n_workers=4, seed=5).run(trace)
+        assert len(res) == len(trace)
+        ttfts = sorted(r.ttft for r in res)
+        p99[pol] = ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))]
+    assert p99["tangram-conc"] < p99["tangram-conc-eq3"]
+    assert p99["tangram-conc-eq3"] < p99["tangram"]
+
+
+def test_concurrent_beats_exclusive_throughput_under_saturation():
+    """Equal pool capacity, overloaded fleet: co-resident decode avoids the
+    serial load-evict churn, so aggregate throughput must be higher."""
+    small = [m for m in PAPER_MODELS if m.bytes < 20e9]
+    trace = generate_trace(n_requests=300, models=small, locality="L3",
+                           mean_interarrival=1.2, seed=7, max_output_tokens=64)
+    thr = {}
+    for pol in ["tangram", "tangram-conc"]:
+        res = ClusterSim(small, POLICIES[pol], n_workers=2, seed=5).run(trace)
+        thr[pol] = summarize(res)["throughput_rps"]
+    assert thr["tangram-conc"] > thr["tangram"] * 1.1
+
+
+# ------------------------------------------------------- multi-tenant traces
+def test_multi_tenant_trace_shape():
+    tr = generate_multi_tenant_trace(n_requests=100, burst_every=25,
+                                     burst_size=6, burst_models=2, seed=3)
+    assert len(tr) == 100 + 4 * 6
+    assert all(a.time <= b.time for a, b in zip(tr, tr[1:]))
+    base = generate_trace(n_requests=100, seed=3)
+    counts = {}
+    for r in base:
+        counts[r.model_id] = counts.get(r.model_id, 0) + 1
+    hottest = sorted(counts, key=counts.get, reverse=True)[:2]
+    burst_ids = {}
+    for r in tr:
+        burst_ids[r.model_id] = burst_ids.get(r.model_id, 0) + 1
+    for m in hottest:  # burst requests land on the hottest models
+        assert burst_ids[m] >= counts[m] + 4 * 3
+
+
+def test_failure_mid_concurrency_requeues_and_recovers():
+    small = [m for m in PAPER_MODELS if m.bytes < 20e9]
+    trace = generate_trace(n_requests=100, models=small, locality="L3",
+                           mean_interarrival=5.0, seed=33, max_output_tokens=64)
+    sim = ClusterSim(small, CONC, n_workers=3, seed=5)
+    sim.inject_failure(trace[30].time + 0.1, "gpu0", recover_after=100.0)
+    res = sim.run(trace)
+    assert len(res) >= 95
+    dead = next(w for w in sim.workers if w.device_id == "gpu0")
+    assert not dead.failed

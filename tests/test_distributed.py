@@ -91,12 +91,10 @@ COMPILE_SNIPPET = textwrap.dedent("""
     import jax
     from repro.configs import SHAPES, all_configs
     from repro.distributed.steps import make_step
-    from jax.sharding import AxisType
+    from repro.distributed.sharding import make_mesh_compat
     import dataclasses
 
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2,
-                         devices=jax.devices())
+    mesh = make_mesh_compat((4, 4), ("data", "model"), devices=jax.devices())
     cfg = all_configs()["llama3.2-1b"].smoke()
     shape = dataclasses.replace(SHAPES["train_4k"], seq_len=256, global_batch=8)
     bundle = make_step(cfg, mesh, shape)

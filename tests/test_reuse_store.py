@@ -103,3 +103,64 @@ def test_urgent_reclaim_contiguous_window():
     assert store.free_bytes() == 0
     assert store.urgent_reclaim_contiguous(250)
     assert store.pool.largest_free() >= 250
+
+
+def _sub_block_hole_store():
+    """Sequential layout where every inactive tensor is either small (50/100)
+    or separated from its free neighbours by ACTIVE tensors, except one pair
+    of adjacent 100B inactives (d0, d1) that a sliding window can merge:
+
+      [x0 100 act][d0 100][d1 100][x1 100 act][c0 50][x2 100 act][c1 50]
+      [x3 100 act][x4 300 act]
+    """
+    store = mkstore(1000)
+    store.load_model("x0", recs("x0", [100]))
+    store.load_model("d0", recs("d0", [100]))
+    store.release("d0")
+    store.load_model("d1", recs("d1", [100]))
+    store.release("d1")
+    store.load_model("x1", recs("x1", [100]))
+    store.load_model("c0", recs("c0", [50]))
+    store.release("c0")
+    store.load_model("x2", recs("x2", [100]))
+    store.load_model("c1", recs("c1", [50]))
+    store.release("c1")
+    store.load_model("x3", recs("x3", [100]))
+    store.load_model("x4", recs("x4", [300]))
+    assert store.free_bytes() == 0
+    return store
+
+
+def test_urgent_reclaim_contiguous_where_plain_mce_fails():
+    """Plain MCE reclaims the CHEAPEST (smallest) tensors first, which can
+    free enough total bytes while leaving only sub-block holes; the sliding
+    window must instead evict the one adjacent pair that opens a full hole."""
+    plain = _sub_block_hole_store()
+    freed = plain.urgent_reclaim(200)
+    assert freed >= 200
+    # cheapest-first took c0+c1 (+ one 100B): scattered holes, none >= 200
+    assert plain.pool.largest_free() < 200
+
+    windowed = _sub_block_hole_store()
+    assert windowed.urgent_reclaim_contiguous(200)
+    assert windowed.pool.largest_free() >= 200
+    # minimal-cost window is exactly [d0][d1]; the cheap 50B tensors survive
+    assert windowed.resident_bytes("c0") == 50
+    assert windowed.resident_bytes("c1") == 50
+    assert windowed.resident_bytes("d0") == 0
+    assert windowed.resident_bytes("d1") == 0
+
+
+def test_urgent_reclaim_contiguous_no_candidates_returns_false():
+    store = mkstore(400)
+    store.load_model("busy", recs("busy", [400]))  # active: not evictable
+    assert not store.urgent_reclaim_contiguous(100)
+    assert store.resident_bytes("busy") == 400  # nothing touched
+
+
+def test_urgent_reclaim_contiguous_unsatisfiable_returns_false():
+    store = _sub_block_hole_store()
+    # no window of consecutive free/inactive regions reaches 500B
+    assert not store.urgent_reclaim_contiguous(500)
+    # a failed pass must not have evicted anything
+    assert store.free_bytes() == 0

@@ -14,11 +14,11 @@ SNIPPET = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.sharding import make_mesh_compat
     from repro.roofline.analysis import HloModule
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2, devices=jax.devices())
+    mesh = make_mesh_compat((2, 4), ("data", "model"), devices=jax.devices())
     L, D, F = 6, 64, 256
 
     def body(h, w):
@@ -44,8 +44,11 @@ SNIPPET = textwrap.dedent("""
                        out_shardings=NamedSharding(mesh, P())).lower(h, stack).compile()
         mod = HloModule(comp.as_text(), trip_hints=[L])
         c = mod.entry_cost()
+        ca = comp.cost_analysis()
+        if isinstance(ca, list):  # jax <= 0.4.x: one dict per device
+            ca = ca[0]
         out[name] = {"flops": c.flops, "coll": c.collective_bytes,
-                     "xla_flops": comp.cost_analysis().get("flops")}
+                     "xla_flops": ca.get("flops")}
     print("RESULT" + json.dumps(out))
 """)
 
