@@ -1,7 +1,7 @@
 # Tier-1 gate vs fast inner loop — see ROADMAP.md "Testing".
 PY ?= python
 
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench bench-smoke
 
 test:  ## full tier-1 gate (includes jax compile subprocesses; minutes)
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -11,3 +11,6 @@ test-fast:  ## deterministic non-subprocess subset (< 60 s)
 
 bench:  ## all paper-figure benchmarks (CSV rows on stdout)
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run
+
+bench-smoke:  ## fig15 fast-path benchmark at toy scale -> BENCH_fastpath.json
+	bash scripts/ci.sh bench-smoke

@@ -14,7 +14,7 @@ TTFT at the same throughput.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, p99
+from benchmarks.common import emit
 from repro.core import (POLICIES, ClusterSim, generate_multi_tenant_trace,
                         generate_trace, summarize)
 from repro.core.trace import PAPER_MODELS

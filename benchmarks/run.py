@@ -21,6 +21,8 @@ SUITES = [
     ("fig13", "benchmarks.fig13_multigpu", "Fig 13 multi-GPU P99 scaling"),
     ("fig14", "benchmarks.fig14_concurrency",
      "Fig 14 concurrent multi-instance workers + queueing-aware affinity"),
+    ("fig15", "benchmarks.fig15_fastpath",
+     "Fig 15 data-plane fast-path load / sync-free decode / indexed sim"),
 ]
 
 

@@ -10,6 +10,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# `scripts/ci.sh bench-smoke` (= make bench-smoke): fig15 at toy scale,
+# emitting BENCH_fastpath.json so the perf trajectory records every run.
+if [[ "${1:-}" == "bench-smoke" ]]; then
+    shift
+    exec python -m benchmarks.fig15_fastpath --smoke \
+        --out BENCH_fastpath.json "$@"
+fi
+
 exec python -m pytest -q \
     tests/test_allocator.py \
     tests/test_regions.py \

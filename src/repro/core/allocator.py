@@ -162,15 +162,22 @@ def partitioned_gain_packing(regions: RegionList, new_tensors: Sequence[NewTenso
         if not ts:
             continue  # nothing to place -> no compaction, zero merge cost
         split_done = False
+        # prefix sums make each split attempt O(1) instead of O(span)
+        free_pref = [0]
+        for r in span:
+            free_pref.append(free_pref[-1]
+                             + (r.size if r.state == RState.FREE else 0))
+        total_free = free_pref[-1]
         # candidate split points in descending gain (= size) order; cap the
-        # attempts — low-gain tails rarely succeed and cost O(n * |T|) each
-        for tp in sorted(_alloc_in(span), key=lambda r: -r.size)[:32]:
-            k = span.index(tp)
-            p1, p2 = span[:k], span[k + 1:]
-            packed = try_packing(ts, _free_cap(p1), _free_cap(p2), strict_paper)
+        # attempts — low-gain tails rarely succeed and cost O(|T|) each
+        cands = sorted(((r.size, k) for k, r in enumerate(span)
+                        if r.state != RState.FREE), key=lambda t: -t[0])[:32]
+        for _, k in cands:
+            packed = try_packing(ts, free_pref[k], total_free - free_pref[k + 1],
+                                 strict_paper)
             if packed is not None:
-                stack.append((p1, packed[0]))
-                stack.append((p2, packed[1]))
+                stack.append((span[:k], packed[0]))
+                stack.append((span[k + 1:], packed[1]))
                 split_done = True
                 break
         if not split_done:
@@ -193,20 +200,13 @@ def apply_plan(regions: RegionList, plan: PGPlan) -> tuple[int, dict[str, int], 
     placed: dict[str, int] = {}
     for p in plan.placements:
         lo_off, hi_off = p.span
-        idxs = [i for i, r in enumerate(regions.regions)
-                if r.offset >= lo_off and r.end <= hi_off]
-        assert idxs, f"span {p.span} vanished"
-        moved, rel = regions.compact_span(min(idxs), max(idxs))
+        lo_idx, hi_idx = regions.span_bounds(lo_off, hi_off)
+        moved, rel = regions.compact_span(lo_idx, hi_idx)
         moved_total += moved
         relocations.update(rel)
         # the span now ends with one contiguous free region; fill it
         for t in p.tensors:
-            target = None
-            for r in regions.regions:
-                if (r.state == RState.FREE and r.offset >= lo_off
-                        and r.end <= hi_off and r.size >= t.size):
-                    target = r
-                    break
+            target = regions.find_free_in(lo_off, hi_off, t.size)
             assert target is not None, f"no room for {t.fingerprint} after compaction"
             reg = regions.alloc_at(target.offset, t.size, RState.TENSOR, t.fingerprint)
             placed[t.fingerprint] = reg.offset

@@ -149,13 +149,16 @@ class WorkerInstance:
 
 class SimWorker:
     def __init__(self, wid: str, capacity: int, costs: PhaseCosts,
-                 policy: SimPolicy):
+                 policy: SimPolicy, *, indexed: bool = True):
         self.device_id = wid
         self.capacity = capacity
         self.policy = policy
         self.costs = costs
+        self.indexed = indexed
         store_policy = policy.alloc_policy if policy.reuse else "none"
-        self.store = ReuseStore(capacity, costs, policy=store_policy)
+        self.store = ReuseStore(capacity, costs, policy=store_policy,
+                                indexed=indexed)
+        self.kv_rate: dict[str, int] = {}  # model_id -> kv_bytes_per_token
         self.slots = policy.max_concurrent if policy.concurrent else 1
         self.instances: dict[str, WorkerInstance] = {}
         # waiting room: same-model follow-ups (exclusive) or requests routed
@@ -195,12 +198,25 @@ class SimWorker:
         return sum(i.weight_bytes + i.kv_pinned_bytes() for i in insts)
 
     # --------------------------------------------------- DeviceView protocol
-    def can_run(self, model_bytes: int) -> bool:
+    def can_run(self, model_bytes: int, model_id: Optional[str] = None) -> bool:
         if self.failed or not self.has_free_slot():
             return False
         if not self.policy.concurrent:
             return model_bytes <= self.capacity
-        return self.can_admit(model_bytes, self.policy.admit_kv_tokens)
+        # model-identity-aware admission: when this model is already BUSY
+        # here, its weights sit inside pinned_bytes(busy_only=True) and a new
+        # placement shares them (join / shared tensors) — counting them again
+        # double-charges the pool and locks hot workers out (ROADMAP item).
+        shared = 0
+        kv_need = self.policy.admit_kv_tokens  # rate unknown: nominal floor
+        if model_id is not None:
+            inst = self.instances.get(model_id)
+            if inst is not None and inst.running > 0:
+                shared = min(model_bytes, inst.weight_bytes)
+            rate = self.kv_rate.get(model_id)
+            if rate is not None:  # real per-sequence KV headroom in BYTES
+                kv_need = self.policy.admit_kv_tokens * max(rate, 1)
+        return self.can_admit(model_bytes - shared, kv_need)
 
     def reusable_bytes(self, records: Sequence[TensorRecord]) -> int:
         return self.store.reusable_bytes(records)
@@ -273,7 +289,7 @@ class SimWorker:
 class ClusterSim:
     def __init__(self, models: Sequence[SimModel], policy: SimPolicy, *,
                  n_workers: int = 1, hw: Optional[Hardware] = None, seed: int = 0,
-                 pool_bytes: Optional[int] = None):
+                 pool_bytes: Optional[int] = None, indexed: bool = True):
         self.hw = hw or paper_l40()
         self.costs = PhaseCosts(self.hw, criu=policy.criu, medusa=policy.medusa)
         self.policy = policy
@@ -289,25 +305,43 @@ class ClusterSim:
                 for i, s in enumerate(sizes)
             ]
         cap = int(pool_bytes if pool_bytes is not None else self.hw.device_mem)
-        self.workers = [SimWorker(f"gpu{i}", cap, self.costs, policy)
+        kv_rates = {m.model_id: m.kv_bytes_per_token for m in models}
+        self.workers = [SimWorker(f"gpu{i}", cap, self.costs, policy,
+                                  indexed=indexed)
                         for i in range(n_workers)]
+        for w in self.workers:
+            w.kv_rate = kv_rates
         self.rng = random.Random(seed)
         self.results: list[RequestResult] = []
         self.global_queue: deque[Request] = deque()
         self._events: list = []
         self._seq = itertools.count()
         self.access_counts: dict[str, float] = defaultdict(float)
+        self._access_total = 0.0  # running sum of access_counts (O(1) update)
+        self.events_processed = 0
 
     # --------------------------------------------------------------- events
     def _push(self, t: float, kind: str, payload):
         heapq.heappush(self._events, (t, next(self._seq), kind, payload))
 
     # ------------------------------------------------------------ scheduling
-    def _update_miss_probs(self):
-        total = sum(self.access_counts.values()) or 1.0
-        probs = {m: c / total for m, c in self.access_counts.items()}
-        for w in self.workers:
-            w.store.miss_prob.update(probs)
+    def _record_access(self, model_id: str):
+        """EWMA access counts with an O(1) running total — the per-arrival
+        all-models/all-workers probability rebroadcast is gone; workers get a
+        fresh snapshot lazily, right before their store consumes it."""
+        old = self.access_counts[model_id]
+        new = 0.9 * old + 1.0
+        self.access_counts[model_id] = new
+        self._access_total += new - old
+
+    def _refresh_miss_probs(self, w: SimWorker):
+        """Push current p_m into `w`'s store.  Called at placement/join time —
+        the only points whose eviction decisions read miss_prob — so the store
+        sees exactly the probabilities it would have under per-arrival
+        broadcasting, without the per-arrival cost."""
+        total = self._access_total or 1.0
+        w.store.miss_prob.update(
+            (m, c / total) for m, c in self.access_counts.items())
 
     def _try_schedule(self, now: float):
         if not self.global_queue:
@@ -405,12 +439,12 @@ class ClusterSim:
                                     blocks_per_region=self.policy.kv_blocks_per_region)
             kv = inst.kv
             p0, f0 = kv.stats.pool_allocs, kv.stats.freelist_allocs
+            seq_keys = [f"r{id(req)}-{b}" for b in range(req.batch_size)]
             # prefill allocation (batched) + per-step growth, amortized here
             for step_tokens in range(prompt_tokens, total_tokens + 1,
                                      self.policy.kv_block_tokens):
                 try:
-                    kv.ensure({f"r{id(req)}-{b}": step_tokens
-                               for b in range(req.batch_size)})
+                    kv.ensure(dict.fromkeys(seq_keys, step_tokens))
                 except MemoryError:
                     # device genuinely full: sequence is truncated (preemption
                     # /swap in a real engine); decode proceeds on what fits
@@ -418,8 +452,8 @@ class ClusterSim:
                     break
             res.kv_overhead_s = ((kv.stats.pool_allocs - p0) * KV_POOL_ALLOC_S
                                  + (kv.stats.freelist_allocs - f0) * KV_FREELIST_ALLOC_S)
-            for b in range(req.batch_size):
-                kv.release(f"r{id(req)}-{b}")
+            for key in seq_keys:
+                kv.release(key)
         else:
             # worst-case reservation (vLLM-style): batch x max-seq KV bytes,
             # EVICTING inactive resident tensors to make room — this is what
@@ -449,6 +483,7 @@ class ClusterSim:
         """Place `req` on `w`: join, start, or (concurrent mode) park it in
         the worker queue when the decode batch or the pool can't take it yet.
         Returns False when the request had to wait."""
+        self._refresh_miss_probs(w)
         model = self.models[req.model_id]
         inst = w.instances.get(req.model_id)
         if inst is not None and inst.running > 0:
@@ -531,6 +566,7 @@ class ClusterSim:
                        inst: WorkerInstance):
         """Continuous batching: the request's sequences join the model's
         running decode batch — no load, no init, no new slot."""
+        self._refresh_miss_probs(w)
         model = self.models[req.model_id]
         res = RequestResult(model_id=req.model_id, arrival=req.time, start=now,
                             warm=True, joined=True, queue_s=now - req.time,
@@ -564,11 +600,10 @@ class ClusterSim:
         byid = {w.device_id: w for w in self.workers}
         while self._events:
             now, _, kind, payload = heapq.heappop(self._events)
+            self.events_processed += 1
             if kind == "arrival":
                 req: Request = payload
-                self.access_counts[req.model_id] = (
-                    0.9 * self.access_counts[req.model_id] + 1.0)
-                self._update_miss_probs()
+                self._record_access(req.model_id)
                 if self.policy.concurrent:
                     # decode batching: join a running instance of the model
                     # when KV headroom and the batch cap allow it — but never
@@ -624,8 +659,8 @@ class ClusterSim:
                 w.instances = {}
                 w.store = ReuseStore(w.capacity, self.costs,
                                      policy=(self.policy.alloc_policy
-                                             if self.policy.reuse else "none"))
-                self._update_miss_probs()
+                                             if self.policy.reuse else "none"),
+                                     indexed=w.indexed)
                 w.failed = True
                 # re-queue whatever the node had pending (its in-flight
                 # instance died with it; accounting rows already recorded)

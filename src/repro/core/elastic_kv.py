@@ -110,26 +110,29 @@ class ElasticKV:
 
     def ensure(self, req_lens: dict[str, int]) -> dict[str, list[int]]:
         """Batched per-step allocation: grow each request's table to cover its
-        new token count.  Returns the updated block tables."""
+        new token count.  Returns the updated block tables.  Single pass over
+        the batch (this runs once per block-mapping step in the engine and
+        once per block of decode progress in the cluster sim)."""
         self.stats.ensure_calls += 1
-        deficits = {}
+        deficits = []
         total_deficit = 0
         for req, tokens in req_lens.items():
-            have = len(self.block_tables.get(req, []))
+            self.seq_lens[req] = tokens
+            have = len(self.block_tables.get(req, ()))
             want = self.blocks_for(tokens)
             if want > have:
-                deficits[req] = want - have
+                deficits.append((req, want - have))
                 total_deficit += want - have
+        if not deficits:
+            return self.block_tables
         if total_deficit > len(self.free_list):
             self._grow_pool(total_deficit - len(self.free_list))
-        for req, n in deficits.items():
+        self.stats.freelist_allocs += total_deficit
+        self.stats.blocks_allocated += total_deficit
+        for req, n in deficits:
             table = self.block_tables.setdefault(req, [])
             for _ in range(n):
                 table.append(self.free_list.pop())
-                self.stats.freelist_allocs += 1
-                self.stats.blocks_allocated += 1
-        for req, tokens in req_lens.items():
-            self.seq_lens[req] = tokens
         return self.block_tables
 
     # ---------------------------------------------------------------- release

@@ -9,6 +9,14 @@ accounting the scheduler and benchmarks consume.
 The Reuse Store is the *algorithm plane*: it tracks bytes and addresses
 exactly.  The engine's *data plane* (`serving/engine.py`) holds the actual
 jax.Arrays and consults the store for which tensors are resident.
+
+Accounting is incremental (DESIGN.md §10): resident-byte totals are running
+counters, the tensor map is additionally indexed per model so eviction
+candidates come from iterating only *inactive* models (with the Eq. 2 cost
+factor computed once per model, not once per tensor), and the allocate path
+skips candidate generation entirely when the pool already has the free bytes.
+`indexed=False` restores the original scan-everything behaviour over a
+`NaiveRegionList` — the measured baseline for benchmarks/fig15_fastpath.py.
 """
 from __future__ import annotations
 
@@ -20,7 +28,7 @@ from repro.core.allocator import (AllocationError, EvictionCandidate, NewTensor,
                                   apply_plan, global_merge_plan,
                                   minimal_cost_eviction, partitioned_gain_packing)
 from repro.core.costmodel import Hardware, PhaseCosts
-from repro.core.regions import RegionList, RState
+from repro.core.regions import NaiveRegionList, RegionList, RState
 from repro.models.tensors import TensorRecord
 
 
@@ -60,19 +68,28 @@ class ReuseStore:
     """One per accelerator (worker GPU / TPU slice)."""
 
     def __init__(self, capacity: int, costs: PhaseCosts, *,
-                 policy: str = "mce+pgp"):
+                 policy: str = "mce+pgp", indexed: bool = True):
         assert policy in ("mce+pgp", "mce+gm", "rand+gm", "none")
-        self.pool = RegionList(capacity)
+        self.pool = RegionList(capacity) if indexed else NaiveRegionList(capacity)
         self.costs = costs
         self.policy = policy
+        self.indexed = indexed
         self.tensor_map: dict[str, TensorEntry] = {}  # fingerprint -> entry
         self.active_models: set[str] = set()
         self.miss_prob: dict[str, float] = {}  # model_id -> p_m (from controller)
         self.alpha: dict[str, float] = {}  # model_id -> latency sensitivity
         self._rand_state = 0x9E3779B9
+        # incremental accounting (kept in lockstep with tensor_map)
+        self._resident_total = 0
+        self._resident_by_model: dict[str, int] = {}
+        self._model_tensors: dict[str, dict[str, TensorEntry]] = {}
 
     # ----------------------------------------------------------------- stats
     def resident_bytes(self, model_id: Optional[str] = None) -> int:
+        if self.indexed:
+            if model_id is None:
+                return self._resident_total
+            return self._resident_by_model.get(model_id, 0)
         return sum(e.record.nbytes for e in self.tensor_map.values()
                    if model_id is None or e.model_id == model_id)
 
@@ -93,31 +110,59 @@ class ReuseStore:
 
     def drop_model(self, model_id: str):
         """Hard-evict every tensor of a model (baseline behaviour)."""
-        for fp in [fp for fp, e in self.tensor_map.items() if e.model_id == model_id]:
+        for fp in list(self._model_tensors.get(model_id, ())):
             self._evict(fp)
+
+    def _admit(self, entry: TensorEntry):
+        if entry.record.fingerprint in self.tensor_map:
+            # re-admission without a drop (policy="none" reload): release the
+            # stale copy so counters and the pool stay exact
+            self._evict(entry.record.fingerprint)
+        self.tensor_map[entry.record.fingerprint] = entry
+        self._resident_total += entry.record.nbytes
+        self._resident_by_model[entry.model_id] = (
+            self._resident_by_model.get(entry.model_id, 0) + entry.record.nbytes)
+        self._model_tensors.setdefault(entry.model_id, {})[
+            entry.record.fingerprint] = entry
 
     def _evict(self, fp: str) -> int:
         e = self.tensor_map.pop(fp)
         self.pool.free(e.offset)
+        self._resident_total -= e.record.nbytes
+        owned = self._model_tensors[e.model_id]
+        del owned[fp]
+        if owned:  # dict emptiness, not byte count (zero-size tensors exist)
+            self._resident_by_model[e.model_id] -= e.record.nbytes
+        else:
+            del self._resident_by_model[e.model_id]
+            del self._model_tensors[e.model_id]
         return e.record.nbytes
 
     # ------------------------------------------------------- eviction costs
     def _candidates(self) -> list[EvictionCandidate]:
         cands = []
-        for fp, e in self.tensor_map.items():
-            if e.model_id in self.active_models:
+        for model_id, owned in self._model_tensors.items():
+            if model_id in self.active_models:
                 continue
             if self.policy == "rand+gm":
-                # pseudo-random cost (baseline "Rand")
-                self._rand_state = (self._rand_state * 1103515245 + 12345) & 0x7FFFFFFF
-                cost = float(self._rand_state)
+                for fp, e in owned.items():
+                    # pseudo-random cost (baseline "Rand")
+                    self._rand_state = (self._rand_state * 1103515245 + 12345) & 0x7FFFFFFF
+                    cands.append(EvictionCandidate(fp, e.offset, e.record.nbytes,
+                                                   float(self._rand_state)))
             else:
-                cost = self.costs.eviction_cost(
-                    e.record.nbytes,
-                    self.miss_prob.get(e.model_id, 1.0),
-                    self.alpha.get(e.model_id, 1.0))
-            cands.append(EvictionCandidate(fp, e.offset, e.record.nbytes, cost))
+                # Eq. 2: c_j = p_m * (s_j / b_m) * alpha_m — the per-model
+                # factor is constant across the model's tensors
+                factor = self.costs.eviction_cost(1.0,
+                                                  self.miss_prob.get(model_id, 1.0),
+                                                  self.alpha.get(model_id, 1.0))
+                cands.extend(EvictionCandidate(fp, e.offset, e.record.nbytes,
+                                               factor * e.record.nbytes)
+                             for fp, e in owned.items())
         return cands
+
+    def _has_candidates(self) -> bool:
+        return any(m not in self.active_models for m in self._model_tensors)
 
     # ------------------------------------------------------------------ load
     def plan_load(self, records: Sequence[TensorRecord]):
@@ -148,9 +193,9 @@ class ReuseStore:
             new_tensors = [NewTensor(r.fingerprint, r.nbytes) for r in misses]
             placed = self._allocate(model_id, new_tensors, need, rep)
             for r in misses:
-                self.tensor_map[r.fingerprint] = TensorEntry(
-                    record=r, model_id=model_id, offset=placed[r.fingerprint],
-                    last_access=now, hits=0)
+                self._admit(TensorEntry(record=r, model_id=model_id,
+                                        offset=placed[r.fingerprint],
+                                        last_access=now, hits=0))
             rep.bytes_transferred = need
             rep.tensors_loaded = len(misses)
 
@@ -165,8 +210,12 @@ class ReuseStore:
                   rep: LoadReport) -> dict[str, int]:
         """Stage 1 (MCE) + Stage 2 (PGP or GlobalMerge), with retry-on-fragmentation."""
         for attempt in range(8):
-            evictions = minimal_cost_eviction(self.pool, self._candidates(),
-                                              need + attempt * (need // 4))
+            target = need + attempt * (need // 4)
+            if self.indexed and self.pool.free_bytes() >= target:
+                evictions = []  # MCE is a no-op: skip candidate generation
+            else:
+                evictions = minimal_cost_eviction(self.pool, self._candidates(),
+                                                  target)
             for ev in evictions:
                 rep.bytes_evicted += self._evict(ev.fingerprint)
             try:
@@ -181,7 +230,7 @@ class ReuseStore:
                         self.tensor_map[owner].offset = new_off
                 return placed
             except AllocationError:
-                if not self._candidates():
+                if not self._has_candidates():
                     raise
                 continue
         raise AllocationError(f"could not place {need}B for {model_id}")
@@ -200,34 +249,38 @@ class ReuseStore:
 
         Pure MCE evicts the *cheapest* (typically smallest) tensors first,
         which can leave only sub-block holes.  This pass instead picks the
-        sliding window of consecutive (free | evictable-tensor) regions whose
-        total size reaches block_bytes at minimal eviction cost, and evicts
-        exactly that window.  Beyond-paper refinement, documented in DESIGN.md.
+        window of consecutive (free | evictable-tensor) regions whose total
+        size reaches block_bytes at minimal eviction cost, and evicts exactly
+        that window.  Two-pointer / O(n): costs are non-negative, so for each
+        window end the cheapest satisfying window is the shortest one — the
+        left pointer only ever advances.  Beyond-paper refinement, documented
+        in DESIGN.md §3.
         """
         cand_cost = {c.fingerprint: c.cost for c in self._candidates()}
         regions = self.pool.regions
         best: Optional[tuple[float, int, int]] = None  # (cost, i, j)
-        n = len(regions)
         i = 0
-        while i < n:
-            size = 0
-            cost = 0.0
-            j = i
-            while j < n:
-                r = regions[j]
-                if r.state == RState.FREE:
-                    size += r.size
-                elif r.state == RState.TENSOR and r.owner in cand_cost:
-                    size += r.size
-                    cost += cand_cost[r.owner]
-                else:
-                    break
-                if size >= block_bytes:
-                    if best is None or cost < best[0]:
-                        best = (cost, i, j)
-                    break
-                j += 1
-            i += 1
+        size = 0
+        cost = 0.0
+        for j, r in enumerate(regions):
+            if r.state == RState.FREE:
+                size += r.size
+            elif r.state == RState.TENSOR and r.owner in cand_cost:
+                size += r.size
+                cost += cand_cost[r.owner]
+            else:
+                # active/pinned region breaks the window: restart past it
+                i, size, cost = j + 1, 0, 0.0
+                continue
+            # shrink: drop left regions the window no longer needs
+            while size - regions[i].size >= block_bytes:
+                left = regions[i]
+                size -= left.size
+                if left.state == RState.TENSOR:
+                    cost -= cand_cost[left.owner]
+                i += 1
+            if size >= block_bytes and (best is None or cost < best[0]):
+                best = (cost, i, j)
         if best is None:
             return False
         _, i, j = best

@@ -28,7 +28,10 @@ class DeviceView(Protocol):
 
     device_id: str
 
-    def can_run(self, model_bytes: int) -> bool: ...
+    # model_id makes admission identity-aware: a device busy with the same
+    # model shares its resident weights with a new placement, so capacity
+    # checks must not double-count them (DESIGN.md §8/§10).
+    def can_run(self, model_bytes: int, model_id: Optional[str] = None) -> bool: ...
     def reusable_bytes(self, records: Sequence[TensorRecord]) -> int: ...
     # Optional (queueing-aware scoring): expected seconds of queueing a new
     # instance would see on this device right now.
@@ -65,7 +68,7 @@ def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]
         best_lat = float("inf")
         best_reuse = 0
         for dev in avail:
-            if not dev.can_run(model_bytes):
+            if not dev.can_run(model_bytes, model_id):
                 continue
             reuse = dev.reusable_bytes(records)
             lat = estimate_load_time(model_bytes, reuse, hw,
@@ -89,7 +92,7 @@ def random_schedule(requests, devices, rng) -> tuple[list[ScheduleEntry], list[s
     avail = list(devices)
     schedules, queued = [], []
     for model_id, records, model_bytes in requests:
-        feasible = [d for d in avail if d.can_run(model_bytes)]
+        feasible = [d for d in avail if d.can_run(model_bytes, model_id)]
         if not feasible:
             queued.append(model_id)
             continue

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
@@ -63,6 +63,50 @@ def tensor_records(model_id: str, params, *, shard: str = "",
         recs.append(TensorRecord(name=f"{model_id}/{name}", shape=shape,
                                  dtype=dtype, fingerprint=fp, nbytes=nbytes))
     return recs
+
+
+class HostTensorStore:
+    """Per-tensor host-side Model Store keyed by fingerprint (DESIGN.md §10).
+
+    The serverless host cache of ServerlessLLM, at Tangram's reuse
+    granularity: once a model's leaves have been materialized (init_fn /
+    checkpoint read), every later load fetches exactly the missed tensors
+    from here — `Engine.load` never re-materializes a full parameter tree.
+    Buffers are host numpy arrays so fetching one is a dict lookup, and the
+    chunked h2d pipeline can stream them without touching the device first.
+    """
+
+    def __init__(self):
+        self._bufs: dict[str, "np.ndarray"] = {}
+        self.leaves_stored = 0  # cumulative leaves materialized into the store
+
+    def __contains__(self, fingerprint: str) -> bool:
+        return fingerprint in self._bufs
+
+    def __len__(self) -> int:
+        return len(self._bufs)
+
+    def get(self, fingerprint: str) -> "np.ndarray":
+        return self._bufs[fingerprint]
+
+    def missing(self, records: Sequence[TensorRecord]) -> list[TensorRecord]:
+        return [r for r in records if r.fingerprint not in self._bufs]
+
+    def put_tree(self, records: Sequence[TensorRecord], params) -> int:
+        """Store every leaf of `params` under its record's fingerprint.
+        Returns the number of leaves newly materialized."""
+        leaves = jax.tree.leaves(params)
+        assert len(leaves) == len(records), "record/leaf count mismatch"
+        added = 0
+        for r, leaf in zip(records, leaves):
+            if r.fingerprint not in self._bufs:
+                self._bufs[r.fingerprint] = np.asarray(leaf)
+                added += 1
+        self.leaves_stored += added
+        return added
+
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self._bufs.values())
 
 
 def spec_records(model_id: str, cfg, *, shard: str = "") -> list[TensorRecord]:

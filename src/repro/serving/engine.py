@@ -5,12 +5,22 @@ device buffer IS the reuse mechanism under JAX — DESIGN.md §2), a real paged
 KV slab indexed by ElasticKV's physical block numbers, and decodes through the
 E-Attention Pallas kernel.
 
+Fast paths (DESIGN.md §10):
+  * **Tensor-granular loading** — `Engine.load` materializes *only missed
+    leaves*: a per-tensor host-side Model Store (`HostTensorStore`, keyed by
+    fingerprint) is filled at most once per model ever; later loads stream
+    exactly the missed tensors host→device through a chunked, double-buffered
+    pipeline, so measured load wall time tracks `LoadReport.bytes_transferred`.
+  * **Sync-free decode** — per-sequence lengths are mirrored host-side, so a
+    decode step issues zero device→host transfers: the device block tables
+    are re-uploaded (h2d) only on steps where ElasticKV maps a new block,
+    prefill KV lands in the slab as ONE donated jitted scatter, and
+    `Engine.decode_many` fuses same-model instances into a single dispatch.
+
 The KV slab is SHARED per KV geometry (layers x block x kv-heads x head-dim):
 every resident instance of that geometry draws pages from the same buffer, so
 sequences of *different models* interleave physical pages exactly as their
 ElasticKV pool offsets interleave in the Unified Memory Pool (DESIGN.md §8).
-`Engine.decode_many` advances several instances' batches in one engine step —
-the multi-tenant concurrent-decode loop the cluster simulator models.
 
 Architecture support:
   * homogeneous attention-family models (dense / MoE / VLM): full paged-KV
@@ -20,8 +30,11 @@ Architecture support:
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+import itertools
+import time as _time
+import zlib
+from collections import deque
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Optional, Sequence
 
@@ -36,7 +49,7 @@ from repro.core.reuse_store import LoadReport, ReuseStore
 from repro.kernels import ops as kops
 from repro.models import build_model, lm
 from repro.models.common import rms_norm
-from repro.models.tensors import TensorRecord, tensor_records
+from repro.models.tensors import HostTensorStore, TensorRecord, tensor_records
 
 
 @dataclass
@@ -44,7 +57,71 @@ class RegisteredModel:
     model_id: str
     cfg: ModelConfig
     records: list[TensorRecord]
-    init_fn: Callable[[], Any]  # produces the full param tree (the Model Store)
+    init_fn: Callable[[], Any]  # materializes the full param tree (once, ever)
+    treedef: Any  # pytree structure matching `records` leaf order
+
+
+@dataclass
+class DataLoadStats:
+    """Data-plane accounting for one `Engine.load` call."""
+
+    leaves_materialized: int = 0  # init_fn leaves newly written to host store
+    init_seconds: float = 0.0  # host materialization wall time
+    tensors_h2d: int = 0
+    bytes_h2d: int = 0
+    chunks_h2d: int = 0
+    transfer_seconds: float = 0.0  # chunked-pipeline wall time (blocked)
+    total_seconds: float = 0.0
+
+
+class ChunkedTransfer:
+    """Chunked, double-buffered host→device transfer pipeline.
+
+    Large tensors are split into ~`chunk_bytes` row slices; at most `depth`
+    chunks are in flight at once (enqueue chunk i+1 while chunk i transfers),
+    the ServerlessLLM staged-loading shape.  Wall time is therefore
+    proportional to the bytes actually moved — the property fig15 measures.
+    """
+
+    def __init__(self, *, chunk_bytes: int = 16 << 20, depth: int = 2):
+        assert depth >= 1
+        self.chunk_bytes = chunk_bytes
+        self.depth = depth
+
+    def transfer(self, items: Sequence[tuple[str, np.ndarray]],
+                 stats: Optional[DataLoadStats] = None) -> dict[str, jax.Array]:
+        out: dict[str, jax.Array] = {}
+        inflight: deque[jax.Array] = deque()
+
+        def push(arr: jax.Array):
+            inflight.append(arr)
+            while len(inflight) > self.depth:
+                inflight.popleft().block_until_ready()
+
+        for fp, host in items:
+            nrows = host.shape[0] if host.ndim else 0
+            if host.nbytes <= self.chunk_bytes or nrows < 2:
+                arr = jax.device_put(host)
+                push(arr)
+                out[fp] = arr
+                nchunks = 1
+            else:
+                rows_per = max(1, int(self.chunk_bytes //
+                                      max(1, host.nbytes // nrows)))
+                parts = []
+                for s in range(0, nrows, rows_per):
+                    part = jax.device_put(host[s : s + rows_per])
+                    push(part)
+                    parts.append(part)
+                out[fp] = (jnp.concatenate(parts, axis=0)
+                           if len(parts) > 1 else parts[0])
+                nchunks = len(parts)
+            if stats is not None:
+                stats.tensors_h2d += 1
+                stats.bytes_h2d += host.nbytes
+                stats.chunks_h2d += nchunks
+        jax.block_until_ready(out)
+        return out
 
 
 class SharedKVSlab:
@@ -105,46 +182,87 @@ class Engine:
     """One worker's inference engine over a Unified Memory Pool."""
 
     def __init__(self, capacity_bytes: int, *, costs: Optional[PhaseCosts] = None,
-                 block_tokens: int = 16):
+                 block_tokens: int = 16, chunk_bytes: int = 16 << 20,
+                 transfer_depth: int = 2):
         self.store = ReuseStore(capacity_bytes, costs or PhaseCosts(paper_l40()))
         self.block_tokens = block_tokens
         self.models: dict[str, RegisteredModel] = {}
+        self.host_store = HostTensorStore()  # per-tensor host Model Store
+        self._xfer = ChunkedTransfer(chunk_bytes=chunk_bytes,
+                                     depth=transfer_depth)
         self._tensors: dict[str, jax.Array] = {}  # fingerprint -> live buffer
         self._params_cache: dict[str, Any] = {}  # model_id -> assembled tree
         self._slabs: dict[tuple, SharedKVSlab] = {}  # KV geometry -> slab
+        self._fused: dict[tuple, tuple] = {}  # group -> cached fused state
+        self._instances_of: dict[str, int] = {}  # model_id -> live instances
+        self.last_load: Optional[DataLoadStats] = None
 
     # ------------------------------------------------------------- registry
     def register(self, model_id: str, cfg: ModelConfig,
                  init_fn: Optional[Callable[[], Any]] = None):
         model = build_model(cfg)
         if init_fn is None:
-            init_fn = lambda: model.init(jax.random.PRNGKey(hash(model_id) & 0xFFFF))
+            # stable digest, NOT hash(): PYTHONHASHSEED randomizes str hashes
+            # across processes, which would make default params (and any
+            # content fingerprints derived from them) nondeterministic
+            seed = zlib.crc32(model_id.encode()) & 0xFFFF
+            init_fn = lambda: model.init(jax.random.PRNGKey(seed))
         tree = jax.eval_shape(init_fn)
         records = tensor_records(model_id, tree)
-        self.models[model_id] = RegisteredModel(model_id, cfg, records, init_fn)
+        self.models[model_id] = RegisteredModel(model_id, cfg, records, init_fn,
+                                                jax.tree.structure(tree))
 
     # ------------------------------------------------------------------ load
     def load(self, model_id: str, *, now: float = 0.0) -> LoadReport:
-        """Tensor-level load: only missing tensors are materialized."""
+        """Tensor-granular fast-path load.
+
+        Only *missed* leaves move: the host Model Store is materialized at
+        most once per model (first cold load), later loads fetch missed
+        tensors from it and stream them through the chunked h2d pipeline.
+        A fully-warm load (every tensor resident) touches no leaf at all.
+        """
         reg = self.models[model_id]
-        hits, misses = self.store.plan_load(reg.records)
         report = self.store.load_model(model_id, reg.records, now=now)
-        if misses or model_id not in self._params_cache:
-            params = reg.init_fn()  # Model Store / host cache read
-            leaves = tensor_records(model_id, params)
-            flat = dict(zip([r.fingerprint for r in leaves],
-                            jax.tree.leaves(params)))
-            miss_fps = {r.fingerprint for r in misses}
-            for fp, arr in flat.items():
-                if fp in miss_fps or fp not in self._tensors:
-                    self._tensors[fp] = arr  # "transfer" = buffer now resident
-            # assemble the param tree from resident buffers
-            treedef = jax.tree.structure(params)
+        stats = DataLoadStats()
+        t0 = _time.perf_counter()
+        # tensors whose device buffer is absent (store misses, plus any buffer
+        # dropped by sync_evictions that the store re-admitted)
+        to_move = [r for r in reg.records if r.fingerprint not in self._tensors]
+        if to_move:
+            if any(r.fingerprint not in self.host_store for r in to_move):
+                tm = _time.perf_counter()
+                params = reg.init_fn()  # full materialization: once, ever
+                stats.leaves_materialized = self.host_store.put_tree(
+                    reg.records, params)
+                stats.init_seconds = _time.perf_counter() - tm
+                del params
+            tt = _time.perf_counter()
+            moved = self._xfer.transfer(
+                [(r.fingerprint, self.host_store.get(r.fingerprint))
+                 for r in to_move], stats)
+            stats.transfer_seconds = _time.perf_counter() - tt
+            self._tensors.update(moved)
+        if to_move or model_id not in self._params_cache:
+            # assemble the param tree from resident buffers (no copies)
             self._params_cache[model_id] = jax.tree.unflatten(
-                treedef, [self._tensors[r.fingerprint] for r in leaves])
+                reg.treedef, [self._tensors[r.fingerprint] for r in reg.records])
+        stats.total_seconds = _time.perf_counter() - t0
+        self.last_load = stats
         return report
 
     def release(self, model_id: str):
+        self.store.release(model_id)
+
+    def finish_instance(self, model_id: str):
+        """Instance-path release, refcounted: the model stays ACTIVE in the
+        store (never evictable) until its LAST live instance finishes —
+        several same-model instances are a first-class pattern
+        (`decode_many` fuses them)."""
+        n = self._instances_of.get(model_id, 0) - 1
+        if n > 0:
+            self._instances_of[model_id] = n
+            return
+        self._instances_of.pop(model_id, None)
         self.store.release(model_id)
 
     def sync_evictions(self):
@@ -177,25 +295,98 @@ class Engine:
         return slab
 
     def start_instance(self, model_id: str, *, max_blocks_per_seq: int = 64,
-                       num_pages: int = 128) -> "Instance":
+                       num_pages: int = 128,
+                       attn_mode: str = "kernel") -> "Instance":
+        """attn_mode: "kernel" decodes through the E-Attention Pallas kernel
+        (interpret mode off-TPU); "ref" uses the jitted XLA oracle — same
+        numerics (pinned by tests/test_kernels.py), no per-grid-step
+        interpreter cost, used by fig15 so data-plane overheads (syncs, table
+        rebuilds, dispatch count) are what gets measured on CPU."""
         reg = self.models[model_id]
         kv = ElasticKV(self.store, model_id, block_tokens=self.block_tokens,
                        kv_bytes_per_token=max(reg.cfg.kv_bytes_per_token(), 1),
                        blocks_per_region=16)
+        self._instances_of[model_id] = self._instances_of.get(model_id, 0) + 1
         return Instance(self, reg, kv, num_pages=num_pages,
-                        max_blocks_per_seq=max_blocks_per_seq)
+                        max_blocks_per_seq=max_blocks_per_seq,
+                        attn_mode=attn_mode)
 
     def decode_many(self, steps: Sequence[tuple["Instance", jnp.ndarray]]
                     ) -> list[jnp.ndarray]:
         """One interleaved engine step: advance each running instance by one
         decode step over the shared KV slab(s).  `steps`: (instance, tokens)
         pairs — multiple models' sequences proceed concurrently, their pages
-        interleaved in the same buffers.  Returns per-instance logits."""
-        out = []
-        for inst, tok in steps:
+        interleaved in the same buffers.  Same-model instances on one slab
+        are FUSED into a single dispatch (their batches concatenate along B;
+        per-row numerics are unchanged).  Returns per-instance logits."""
+        out: list[Optional[jnp.ndarray]] = [None] * len(steps)
+        groups: dict[tuple, list[int]] = {}
+        for i, (inst, _tok) in enumerate(steps):
             assert inst.engine is self, "instance belongs to another engine"
-            out.append(inst.decode(tok))
-        return out
+            if inst.paged:
+                groups.setdefault((inst.reg.model_id, id(inst.slab),
+                                   inst.attn_mode), []).append(i)
+            else:
+                groups.setdefault(("__solo__", i), []).append(i)
+        for key, idxs in groups.items():
+            if len(idxs) == 1:
+                i = idxs[0]
+                out[i] = steps[i][0].decode(steps[i][1])
+                continue
+            out_slices = self._decode_fused([steps[i] for i in idxs])
+            for i, logits in zip(idxs, out_slices):
+                out[i] = logits
+        return out  # type: ignore[return-value]
+
+    def _decode_fused(self, group: list[tuple["Instance", jnp.ndarray]]
+                      ) -> list[jnp.ndarray]:
+        """One dispatch for several same-model instances over one slab.
+
+        The fused block tables and lengths live on device across steps: they
+        are rebuilt (h2d / concat) only when a member instance mapped a new
+        KV block or stepped outside the fusion group — steady-state steps
+        concatenate nothing but the new tokens.
+        """
+        insts = [inst for inst, _ in group]
+        slab = insts[0].slab
+        params = self.params_of(insts[0].reg.model_id)
+        cfg = insts[0].reg.cfg
+        for inst in insts:
+            inst._advance_tables()  # host-side bookkeeping; h2d only
+        key = tuple(inst._uid for inst in insts)
+        versions = tuple((inst.table_uploads, inst._step) for inst in insts)
+        cached = self._fused.get(key)
+        if cached is not None and cached[0] == versions:
+            tables, lengths = cached[1], cached[2]
+        else:
+            width = max(inst._tables_np.shape[1] for inst in insts)
+            tables = jnp.asarray(np.concatenate(
+                [np.pad(inst._tables_np,
+                        ((0, 0), (0, width - inst._tables_np.shape[1])))
+                 for inst in insts]))
+            # the host mirrors are authoritative: build fused lengths with one
+            # h2d upload, no dependency on (possibly stale) device slices
+            lengths = jnp.asarray(
+                np.concatenate([inst._host_lens for inst in insts]), jnp.int32)
+        tokens = jnp.concatenate([tok for _, tok in group])
+        logits, slab.k_pages, slab.v_pages, new_lens = _paged_decode_step(
+            params, cfg, tokens, tables, lengths,
+            slab.k_pages, slab.v_pages, attn=insts[0].attn_mode)
+        outs = []
+        o = 0
+        for inst, tok in group:
+            B = tok.shape[0]
+            inst._host_lens += 1
+            inst._step += 1
+            inst._lengths_stale = True  # refreshed from the mirror on demand
+            outs.append(logits[o : o + B])
+            o += B
+        while len(self._fused) >= 64:  # bound churned group compositions
+            self._fused.pop(next(iter(self._fused)))
+        self._fused[key] = (
+            tuple((inst.table_uploads, inst._step) for inst in insts),
+            tables, new_lens)
+        return outs
 
 
 def _is_paged_family(cfg: ModelConfig) -> bool:
@@ -207,22 +398,40 @@ def _is_paged_family(cfg: ModelConfig) -> bool:
 
 
 class Instance:
-    """A running model instance: prefill once, decode with paged KV."""
+    """A running model instance: prefill once, decode with paged KV.
+
+    Lengths are tracked twice, deliberately: `_host_lens` (numpy) is the
+    authoritative host-side copy driving ElasticKV bookkeeping, `_lengths`
+    (device) feeds the kernels and is advanced inside the jitted step — so
+    the decode loop never reads anything back from the device.
+    """
+
+    _uids = itertools.count()  # stable ids for the fused cache
 
     def __init__(self, engine: Engine, reg: RegisteredModel, kv: ElasticKV, *,
-                 num_pages: int, max_blocks_per_seq: int):
+                 num_pages: int, max_blocks_per_seq: int,
+                 attn_mode: str = "kernel"):
         self.engine = engine
         self.reg = reg
         self.kv = kv
         self.model = build_model(reg.cfg)
+        self.attn_mode = attn_mode
         self.paged = _is_paged_family(reg.cfg)
         self.max_blocks = max_blocks_per_seq
         self.slab: Optional[SharedKVSlab] = None
         if self.paged:
             self.slab = engine.kv_slab(reg.cfg, num_pages)
         self._cache = None  # state-family fallback cache
-        self._tables: Optional[jnp.ndarray] = None
-        self._lengths: Optional[jnp.ndarray] = None
+        self._tables: Optional[jnp.ndarray] = None  # device block tables
+        self._tables_np: Optional[np.ndarray] = None  # host mirror
+        self._nblk: Optional[np.ndarray] = None  # mapped blocks per sequence
+        self._lengths: Optional[jnp.ndarray] = None  # device per-seq lengths
+        self._host_lens: Optional[np.ndarray] = None  # authoritative host copy
+        self.table_uploads = 0  # h2d table refreshes (block-mapping steps)
+        self._step = 0  # advances on every prefill/decode (fused-cache key)
+        self._lengths_stale = False  # device lengths behind the host mirror
+        self._tables_stale = False  # device tables behind the host mirror
+        self._uid = next(Instance._uids)  # id()-reuse-proof fused-cache key
 
     def _pages(self, pbns) -> list[int]:
         """Map this instance's ElasticKV PBNs to shared-slab page indices via
@@ -230,72 +439,150 @@ class Instance:
         return [self.slab.page_of(self.kv.addr[p]) for p in pbns]
 
     # ---------------------------------------------------------------- prefill
-    def prefill(self, batch: dict) -> jnp.ndarray:
-        """Run the prompt; populate paged KV (or state cache). Returns logits
-        of the last position, (B, V)."""
+    def prefill(self, batch: dict, *, lengths: Optional[Sequence[int]] = None
+                ) -> jnp.ndarray:
+        """Run the prompt; populate paged KV (or state cache).
+
+        `lengths`: optional per-sequence prompt lengths (<= padded S) for
+        mixed-length batches; positions past a sequence's length hold padding
+        whose K/V the paged kernel masks out.  Returns logits at each
+        sequence's LAST REAL position, (B, V).
+        """
         params = self.engine.params_of(self.reg.model_id)
         tokens = batch["tokens"]
         B, S = tokens.shape
+        lens = (np.full((B,), S, np.int64) if lengths is None
+                else np.asarray(lengths, np.int64))
+        assert lens.shape == (B,) and lens.min() >= 1 and lens.max() <= S
         cap = -(-S // self.kv.block_tokens) * self.kv.block_tokens
         logits, cache = self.model.prefill(params, batch,
                                            cache_cap=max(cap, S),
                                            remat=False)
+        last = logits[jnp.arange(B), jnp.asarray(lens - 1)]
+        self._host_lens = lens.copy()
+        self._lengths = jnp.asarray(lens, jnp.int32)
+        self._step += 1
         if not self.paged:
             self._cache = cache
-            self._lengths = jnp.full((B,), S, jnp.int32)
-            return logits[:, -1]
+            return last
 
         # allocate block tables for the prompt, then scatter dense KV -> pages
-        self.kv.ensure({f"seq{b}": S for b in range(B)})
+        self.kv.ensure({f"seq{b}": int(lens[b]) for b in range(B)})
         T = self.kv.block_tokens
         nblk = -(-S // T)
-        tables_np = np.zeros((B, self.max_blocks), np.int32)
-        for b in range(B):
-            pages = self._pages(self.kv.block_tables[f"seq{b}"])
-            tables_np[b, : len(pages)] = pages
-        self._tables = jnp.asarray(tables_np)
-        self._lengths = jnp.full((B,), S, jnp.int32)
+        self._tables_np = np.zeros((B, self.max_blocks), np.int32)
+        self._nblk = np.zeros((B,), np.int64)
+        per_seq = [self._pages(self.kv.block_tables[f"seq{b}"])
+                   for b in range(B)]  # may grow the slab: map pages FIRST
+        # page id P (out of range) marks padding entries: scatter drops them.
+        # num_pages must be read AFTER the mapping above — growth would turn
+        # a stale marker into a valid page and corrupt another sequence.
+        page_ids = np.full((B, nblk), self.slab.num_pages, np.int32)
+        for b, pages in enumerate(per_seq):
+            self._tables_np[b, : len(pages)] = pages
+            self._nblk[b] = len(pages)
+            page_ids[b, : len(pages)] = pages
+        self._tables = jnp.asarray(self._tables_np)
+        self._tables_stale = False
 
         # cache is [segment0][unit0] = {"k": (L, B, cap, K, hd), ...}
-        k_all = cache[0][0]["k"]  # (L, B, cap, K, hd)
+        k_all = cache[0][0]["k"]
         v_all = cache[0][0]["v"]
-        kc = k_all[:, :, : nblk * T]
-        vc = v_all[:, :, : nblk * T]
-        L = kc.shape[0]
-        kc = kc.reshape(L, B, nblk, T, *kc.shape[3:])
-        vc = vc.reshape(L, B, nblk, T, *vc.shape[3:])
-        kp, vp = self.slab.k_pages, self.slab.v_pages
-        for b in range(B):
-            pbn = self._tables[b, :nblk]
-            kp = kp.at[:, pbn].set(kc[:, b])
-            vp = vp.at[:, pbn].set(vc[:, b])
-        self.slab.k_pages, self.slab.v_pages = kp, vp
-        return logits[:, -1]
+        L = k_all.shape[0]
+        kc = k_all[:, :, : nblk * T].reshape(L, B, nblk, T, *k_all.shape[3:])
+        vc = v_all[:, :, : nblk * T].reshape(L, B, nblk, T, *v_all.shape[3:])
+        # ONE donated jitted scatter for the whole batch (not B slab copies)
+        self.slab.k_pages, self.slab.v_pages = _scatter_prefill_kv(
+            self.slab.k_pages, self.slab.v_pages, kc, vc,
+            jnp.asarray(page_ids))
+        return last
+
+    # -------------------------------------------------------- table plumbing
+    def _advance_tables(self):
+        """Host-side per-step bookkeeping BEFORE the jitted decode step.
+
+        Grows ElasticKV tables for sequences whose next token starts a new
+        block, and re-uploads the device block tables (h2d) only on those
+        steps.  Never reads from the device.
+        """
+        T = self.kv.block_tokens
+        if not (self._host_lens % T == 0).any():
+            return  # no sequence crosses a block boundary this step
+        self.kv.ensure({f"seq{b}": int(self._host_lens[b]) + 1
+                        for b in range(len(self._host_lens))})
+        for b in np.nonzero(self._host_lens % T == 0)[0]:
+            pbns = self.kv.block_tables[f"seq{b}"]
+            for i in range(int(self._nblk[b]), len(pbns)):
+                self._tables_np[b, i] = self.slab.page_of(self.kv.addr[pbns[i]])
+            self._nblk[b] = len(pbns)
+        # upload lazily: fused steps rebuild their own table from the host
+        # mirrors and never read the per-instance device copy
+        self._tables_stale = True
+        self.table_uploads += 1
 
     # ----------------------------------------------------------------- decode
     def decode(self, token: jnp.ndarray) -> jnp.ndarray:
-        """One decode step for every sequence. token: (B,) -> logits (B, V)."""
+        """One decode step for every sequence. token: (B,) -> logits (B, V).
+
+        Issues ZERO device→host transfers: positions/lengths advance on
+        device inside the jitted step, host bookkeeping runs off the numpy
+        mirrors (`tests/test_fastpath.py` pins this with a transfer guard).
+        """
         params = self.engine.params_of(self.reg.model_id)
-        B = token.shape[0]
-        pos = self._lengths  # next position = current length
+        self._step += 1
+        if self._lengths_stale:  # fused steps advance only the host mirror
+            self._lengths = jnp.asarray(self._host_lens, jnp.int32)
+            self._lengths_stale = False
         if not self.paged:
-            logits, self._cache = self.model.decode(params, token, pos, self._cache)
+            logits, self._cache = self.model.decode(params, token,
+                                                    self._lengths, self._cache)
             self._lengths = self._lengths + 1
+            self._host_lens += 1
             return logits
 
-        new_len = int(self._lengths[0]) + 1
+        self._advance_tables()
+        if self._tables_stale:
+            self._tables = jnp.asarray(self._tables_np)  # h2d, no readback
+            self._tables_stale = False
+        logits, self.slab.k_pages, self.slab.v_pages, self._lengths = \
+            _paged_decode_step(params, self.reg.cfg, token, self._tables,
+                               self._lengths, self.slab.k_pages,
+                               self.slab.v_pages, attn=self.attn_mode)
+        self._host_lens += 1
+        return logits
+
+    def decode_legacy(self, token: jnp.ndarray) -> jnp.ndarray:
+        """Pre-fast-path decode step: one host sync (`int(lengths[0])`) plus a
+        full device→host block-table round trip and Python rebuild per step,
+        assuming all-equal sequence lengths.  Kept ONLY as the measured
+        baseline for benchmarks/fig15_fastpath.py and the bit-for-bit
+        equivalence tests — do not call from serving paths.
+        """
+        params = self.engine.params_of(self.reg.model_id)
+        if not self.paged:
+            return self.decode(token)
+        self._step += 1
+        if self._lengths_stale:
+            self._lengths = jnp.asarray(self._host_lens, jnp.int32)
+            self._lengths_stale = False
+        if self._tables_stale:
+            self._tables = jnp.asarray(self._tables_np)
+            self._tables_stale = False
+        B = token.shape[0]
+        new_len = int(self._lengths[0]) + 1  # device->host sync per step
         self.kv.ensure({f"seq{b}": new_len for b in range(B)})
-        T = self.kv.block_tokens
-        tables_np = np.array(self._tables)
+        tables_np = np.array(self._tables)  # device->host round trip
         for b in range(B):
             pages = self._pages(self.kv.block_tables[f"seq{b}"])
             tables_np[b, : len(pages)] = pages
+            self._nblk[b] = len(pages)
+        self._tables_np = tables_np
         self._tables = jnp.asarray(tables_np)
-
-        logits, self.slab.k_pages, self.slab.v_pages = _paged_decode_step(
-            params, self.reg.cfg, token, pos, self._tables, self._lengths,
-            self.slab.k_pages, self.slab.v_pages)
-        self._lengths = self._lengths + 1
+        logits, self.slab.k_pages, self.slab.v_pages, self._lengths = \
+            _paged_decode_step(params, self.reg.cfg, token, self._tables,
+                               self._lengths, self.slab.k_pages,
+                               self.slab.v_pages, attn=self.attn_mode)
+        self._host_lens += 1
         return logits
 
     def finish(self):
@@ -306,31 +593,51 @@ class Instance:
         for b in list(self.kv.block_tables):
             self.kv.release(b)
         self.kv.finish_instance()
-        self.engine.release(self.reg.model_id)
+        for key in [k for k in self.engine._fused if self._uid in k]:
+            del self.engine._fused[key]
+        self.engine.finish_instance(self.reg.model_id)
+
+
+# ------------------------------------------------------------ prefill scatter
+@partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_prefill_kv(k_pages, v_pages, kc, vc, page_ids):
+    """Scatter a prefill's dense KV into slab pages in ONE donated op.
+
+    kc/vc: (L, B, nblk, T, K, hd); page_ids: (B, nblk) physical pages, with
+    out-of-range ids (== num_pages) marking padding entries of shorter
+    sequences — scatter mode "drop" discards them.
+    """
+    L = kc.shape[0]
+    flat = page_ids.reshape(-1)
+    kc = kc.reshape(L, flat.shape[0], *kc.shape[3:])
+    vc = vc.reshape(L, flat.shape[0], *vc.shape[3:])
+    k_pages = k_pages.at[:, flat].set(kc, mode="drop")
+    v_pages = v_pages.at[:, flat].set(vc, mode="drop")
+    return k_pages, v_pages
 
 
 # ---------------------------------------------------------------- paged decode
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(6, 7))
-def _paged_decode_step(params, cfg: ModelConfig, token, pos, tables, lengths,
-                       k_pages, v_pages):
+@partial(jax.jit, static_argnames=("cfg", "attn"), donate_argnums=(5, 6))
+def _paged_decode_step(params, cfg: ModelConfig, token, tables, lengths,
+                       k_pages, v_pages, *, attn: str = "kernel"):
     """One decode step over paged KV for homogeneous attention models.
 
     k/v_pages: (L, P, T, K, hd).  New K/V are scattered into the page that
-    ElasticKV mapped for position `pos`; attention runs through the
-    E-Attention Pallas kernel per layer.
+    ElasticKV mapped for each sequence's position (= its current length);
+    attention runs through the E-Attention Pallas kernel per layer.  Returns
+    (logits, k_pages, v_pages, lengths+1) — lengths advance on device so the
+    caller never syncs.
     """
     from repro.models import layers as Lmod
 
     B = token.shape[0]
     T = k_pages.shape[2]
+    pos = lengths  # next position = current per-sequence length
     x = params["embed"][token][:, None, :]  # (B, 1, D)
     seg_params = params["segments"][0]
-    kind = cfg.pattern[0]
     positions = pos[:, None]
     mrope = (jnp.broadcast_to(pos[None, :, None], (3, B, 1))
              if cfg.mrope_sections else None)
-    ctx = Lmod.SeqCtx(positions=positions, mrope_positions=mrope,
-                      moe_capacity_factor=4.0)
 
     lbn = pos // T  # (B,) logical block of the new token
     slot = pos % T
@@ -348,7 +655,9 @@ def _paged_decode_step(params, cfg: ModelConfig, token, pos, tables, lengths,
         knew = cmod.apply_rope(knew, rp, cfg.rope_theta, cfg.mrope_sections)
         kp_l = kp_l.at[pbn, slot].set(knew[:, 0])
         vp_l = vp_l.at[pbn, slot].set(vnew[:, 0])
-        o = kops.paged_attention(q[:, 0], kp_l, vp_l, tables, lengths + 1)
+        attn_fn = (kops.paged_attention if attn == "kernel"
+                   else kops.paged_attention_ref)
+        o = attn_fn(q[:, 0], kp_l, vp_l, tables, lengths + 1)
         a = jnp.einsum("bhk,hkd->bd", o.reshape(B, cfg.num_heads, -1), p["attn"]["wo"])
         h = h + a[:, None, :]
         hm = rms_norm(h, p["ln2"], cfg.norm_eps)
@@ -358,4 +667,4 @@ def _paged_decode_step(params, cfg: ModelConfig, token, pos, tables, lengths,
 
     x, (k_pages, v_pages) = jax.lax.scan(body, x, (seg_params, k_pages, v_pages))
     logits = lm.unembed(params, cfg, x)[:, 0]
-    return logits, k_pages, v_pages
+    return logits, k_pages, v_pages, lengths + 1

@@ -76,6 +76,23 @@ def test_can_run_respects_slots_and_pinned_bytes():
     assert not w.can_run(100)  # slots exhausted regardless of bytes
 
 
+def test_can_run_is_model_identity_aware():
+    """A worker busy with model M shares M's resident weights with any new
+    placement of M (join path), so admission must not double-count them —
+    the same byte count for a DIFFERENT model is still rejected."""
+    w = SimWorker("g0", 10_000_000, PhaseCosts(paper_l40()), CONC)
+    w.instances["a"] = WorkerInstance("a", 6_000_000, 0, running=1)
+    assert not w.can_run(6_000_000)  # anonymous: 6M + 6M pinned > capacity
+    assert not w.can_run(6_000_000, "b")  # other model: still double-booked
+    assert w.can_run(6_000_000, "a")  # same busy model: weights shared
+    # an IDLE same-model instance gets no discount: its weights sit in
+    # reclaimable (non-busy-pinned) space, which the capacity check already
+    # treats as available — a discount would double-count that space
+    w.instances["a"].running = 0
+    assert w.can_run(6_000_000, "a")
+    assert w.can_run(6_000_000, "b")
+
+
 # --------------------------------------------------- per-instance accounting
 def test_per_instance_kv_accounting_over_shared_pool():
     w = SimWorker("g0", 10_000_000, PhaseCosts(paper_l40()), CONC)

@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.regions import Region, RegionList, RState
+from repro.core.regions import NaiveRegionList, Region, RegionList, RState
 
 
 def test_basic_alloc_free():
@@ -84,6 +84,41 @@ def test_random_alloc_free_invariants(ops, rng):
         rl.check()
     used = sum(r.size for r in rl.regions if r.state != RState.FREE)
     assert used + rl.free_bytes() == 256
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 40)),
+                min_size=1, max_size=60),
+       st.randoms(use_true_random=False))
+def test_indexed_matches_naive_scans(ops, rng):
+    """The indexed RegionList (offset index, size buckets, running counters)
+    must make EXACTLY the same decisions as the original O(n)-scan
+    implementation on any alloc/free sequence — same placements, same
+    best-fit choices, same query answers."""
+    fast, slow = RegionList(256), NaiveRegionList(256)
+    live = []
+    for i, (is_alloc, size) in enumerate(ops):
+        if is_alloc or not live:
+            rf = fast.alloc_best_fit(size, RState.TENSOR, f"t{i}")
+            rs = slow.alloc_best_fit(size, RState.TENSOR, f"t{i}")
+            assert (rf is None) == (rs is None)
+            if rf is not None:
+                assert rf.offset == rs.offset
+                live.append(rf.offset)
+        else:
+            off = live.pop(rng.randrange(len(live)))
+            fast.free(off)
+            slow.free(off)
+        assert fast.free_bytes() == slow.free_bytes()
+        assert fast.largest_free() == slow.largest_free()
+        assert [(r.offset, r.size, r.state) for r in fast.regions] == \
+               [(r.offset, r.size, r.state) for r in slow.regions]
+        fast.check()
+    for off in live:
+        owner = fast._by_offset[off].owner
+        f = fast.find(owner)
+        s = slow.find(owner)
+        assert f is not None and s is not None and f.offset == s.offset
 
 
 @settings(max_examples=100, deadline=None)

@@ -22,7 +22,7 @@ class FakeDevice:
         self._resident = resident  # set of fingerprints
         self.capacity = capacity
 
-    def can_run(self, model_bytes):
+    def can_run(self, model_bytes, model_id=None):
         return model_bytes <= self.capacity
 
     def reusable_bytes(self, records):
