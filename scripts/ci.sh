@@ -23,6 +23,7 @@ exec python -m pytest -q \
     tests/test_regions.py \
     tests/test_elastic_kv.py \
     tests/test_elastic_kv_properties.py \
+    tests/test_host_store_properties.py \
     tests/test_reuse_store.py \
     tests/test_scheduler_cluster.py \
     tests/test_concurrency.py \

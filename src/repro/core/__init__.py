@@ -11,8 +11,10 @@ from repro.core.allocator import (AllocationError, EvictionCandidate,  # noqa: F
 from repro.core.cluster import (POLICIES, ClusterSim, RequestResult,  # noqa: F401
                                 SimPolicy, SimWorker, WorkerInstance, summarize)
 from repro.core.costmodel import (Hardware, PhaseCosts, estimate_load_time,  # noqa: F401
-                                  paper_l40, tpu_v5e)
+                                  estimate_load_time_tiered, paper_l40,
+                                  tpu_v5e)
 from repro.core.elastic_kv import ElasticKV, KVStats  # noqa: F401
+from repro.core.hostcache import SimHostCache  # noqa: F401
 from repro.core.regions import Region, RegionList, RState  # noqa: F401
 from repro.core.reuse_store import LoadReport, ReuseStore, TensorEntry  # noqa: F401
 from repro.core.scheduler import (AFFINITY_POLICIES, ScheduleEntry,  # noqa: F401

@@ -38,6 +38,7 @@ from typing import Optional, Sequence
 
 from repro.core.costmodel import Hardware, PhaseCosts, paper_l40
 from repro.core.elastic_kv import ElasticKV
+from repro.core.hostcache import SimHostCache
 from repro.core.regions import RState
 from repro.core.reuse_store import AllocationError, ReuseStore
 from repro.core.scheduler import affinity_schedule, random_schedule
@@ -64,6 +65,12 @@ class SimPolicy:
     queue_aware: bool = False  # affinity score adds expected_queue_delay
     max_join_batch: int = 8  # sequences batched onto one running instance
     admit_kv_tokens: int = 512  # per-sequence KV headroom at admission
+    # ---- tiered model store (DESIGN.md §11): per-node host-cache byte cap.
+    # None disables host-tier modeling (legacy: every transferred byte is
+    # priced at h2d_bw).  When set, each node gets a bounded LRU host cache;
+    # misses beyond it are promoted from the persistent store at
+    # min(h2d_bw, store_bw), and affinity t_load scores see the split.
+    host_cache_bytes: Optional[float] = None
 
 
 POLICIES = {
@@ -79,6 +86,13 @@ POLICIES = {
     "tangram-conc-eq3": SimPolicy("tangram-conc-eq3", criu=True, medusa=True,
                                   reuse=True, odkv=True, affinity=True,
                                   concurrent=True, queue_aware=False),
+    # full system over a BOUNDED per-node host cache (64 GB ~= half the
+    # paper-model working set): cold loads beyond the cap pay the
+    # persistent-store tier, and affinity scoring sees the host/store split
+    "tangram-tier": SimPolicy("tangram-tier", criu=True, medusa=True,
+                              reuse=True, odkv=True, affinity=True,
+                              concurrent=True, queue_aware=True,
+                              host_cache_bytes=64e9),
 }
 
 
@@ -93,6 +107,8 @@ class RequestResult:
     queue_s: float = 0.0
     init_s: float = 0.0
     load_s: float = 0.0
+    bytes_from_host: int = 0  # tier split of bytes_transferred
+    bytes_from_store: int = 0
     merge_s: float = 0.0
     profile_s: float = 0.0
     prefill_s: float = 0.0
@@ -158,6 +174,11 @@ class SimWorker:
         store_policy = policy.alloc_policy if policy.reuse else "none"
         self.store = ReuseStore(capacity, costs, policy=store_policy,
                                 indexed=indexed)
+        # bounded per-node host Model Store tier (None = legacy unbounded)
+        self.host_cache: Optional[SimHostCache] = None
+        if policy.host_cache_bytes is not None:
+            self.host_cache = SimHostCache(int(policy.host_cache_bytes))
+            self.store.host_cache = self.host_cache
         self.kv_rate: dict[str, int] = {}  # model_id -> kv_bytes_per_token
         self.slots = policy.max_concurrent if policy.concurrent else 1
         self.instances: dict[str, WorkerInstance] = {}
@@ -220,6 +241,18 @@ class SimWorker:
 
     def reusable_bytes(self, records: Sequence[TensorRecord]) -> int:
         return self.store.reusable_bytes(records)
+
+    def host_resident_bytes(self, records: Sequence[TensorRecord]) -> int:
+        """Bytes of the records a load here would actually MISS in the
+        device pool that the HOST tier caches (DESIGN.md §11).  Counting
+        device-resident records' host copies would let a node whose host
+        tier spilled exactly the missing tensors score as if it cached
+        them.  With host-tier modeling off, every miss counts as
+        host-cached — the legacy assumption the tiered score generalizes."""
+        misses = [r for r in records if r.fingerprint not in self.store.tensor_map]
+        if self.host_cache is None:
+            return sum(r.nbytes for r in misses)
+        return self.host_cache.host_resident_bytes(misses)
 
     def expected_queue_delay(self, now: float) -> float:
         """Expected queueing seconds a new instance placement sees here:
@@ -542,6 +575,8 @@ class ClusterSim:
             res.bytes_total = rep.bytes_total
             res.bytes_hit = rep.bytes_hit
             res.bytes_transferred = rep.bytes_transferred
+            res.bytes_from_host = rep.bytes_from_host
+            res.bytes_from_store = rep.bytes_from_store
             res.bytes_merged = rep.bytes_merged
             res.profile_s = self.costs.profile_time(model.bytes)
             res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
@@ -661,6 +696,11 @@ class ClusterSim:
                                      policy=(self.policy.alloc_policy
                                              if self.policy.reuse else "none"),
                                      indexed=w.indexed)
+                if w.host_cache is not None:
+                    # the node died: its host cache dies with it; recovery
+                    # rejoins with a cold host tier backed by the store
+                    w.host_cache = SimHostCache(int(self.policy.host_cache_bytes))
+                    w.store.host_cache = w.host_cache
                 w.failed = True
                 # re-queue whatever the node had pending (its in-flight
                 # instance died with it; accounting rows already recorded)
@@ -699,6 +739,7 @@ def summarize(results: Sequence[RequestResult]) -> dict[str, float]:
         "warm_frac": sum(r.warm for r in results) / len(results),
         "joined_frac": sum(r.joined for r in results) / len(results),
         "reuse_frac_mean": st.fmean(r.reuse_fraction for r in results),
+        "bytes_from_store_total": sum(r.bytes_from_store for r in results),
         "makespan": makespan,
         "throughput_rps": len(results) / makespan if makespan > 0 else 0.0,
     }

@@ -68,6 +68,14 @@ class PhaseCosts:
         bw = self.hw.h2d_bw if in_host_cache else min(self.hw.h2d_bw, self.hw.store_bw)
         return missing_bytes / bw
 
+    def load_time_tiered(self, host_bytes: float, store_bytes: float) -> float:
+        """Eq. 3 split by source tier (DESIGN.md §11): bytes resident in the
+        host cache stream at `h2d_bw`; bytes spilled to the persistent store
+        go through the overlapped store->host->device pipeline, where the
+        slower medium wins (`min(h2d_bw, store_bw)`)."""
+        slow = min(self.hw.h2d_bw, self.hw.store_bw)
+        return host_bytes / self.hw.h2d_bw + store_bytes / slow
+
     def merge_time(self, moved_bytes: float) -> float:
         return moved_bytes / self.hw.d2d_bw
 
@@ -100,3 +108,17 @@ def estimate_load_time(model_bytes: float, reusable_bytes: float,
     """Eq. 3: t_load = (S - S') / B with overlapped store->cache->device."""
     bw = hw.h2d_bw if in_host_cache else min(hw.h2d_bw, hw.store_bw)
     return max(0.0, model_bytes - reusable_bytes) / bw
+
+
+def estimate_load_time_tiered(model_bytes: float, device_reusable: float,
+                              host_resident: float, hw: Hardware) -> float:
+    """Tier-aware Eq. 3: of the (S - S') bytes the device pool misses,
+    `host_resident` stream at `h2d_bw` and the rest must come up from the
+    persistent store at `min(h2d_bw, store_bw)`.  This is the t_load the
+    affinity scheduler scores once per-node host caches are modeled — a
+    device whose host tier already caches the missing tensors beats one
+    that must promote them, even at equal device-pool reuse."""
+    missing = max(0.0, model_bytes - device_reusable)
+    host = min(max(0.0, host_resident), missing)
+    store = missing - host
+    return host / hw.h2d_bw + store / min(hw.h2d_bw, hw.store_bw)

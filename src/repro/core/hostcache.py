@@ -1,0 +1,81 @@
+"""Simulated per-node host Model Store tier for the cost plane.
+
+Algorithm-plane mirror of `models.tensors.HostTensorStore` (DESIGN.md §11):
+a bounded LRU over fingerprints and byte sizes, one per simulated worker
+node.  The cluster simulator consults it at load time to split transferred
+bytes into host-cache hits (streamed at `h2d_bw`) and persistent-store
+misses (paying Eq. 3's `min(h2d_bw, store_bw)` through the overlapped
+pipeline), and the affinity scheduler queries it so t_load estimates
+reflect host misses, not just device-pool misses.
+
+Byte accounting is incremental (a counter, never a scan), matching the
+data-plane store's contract.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+from repro.models.tensors import TensorRecord
+
+
+class SimHostCache:
+    """Bounded LRU of host-cached tensors, keyed by fingerprint."""
+
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        self._res: "OrderedDict[str, int]" = OrderedDict()  # fp -> nbytes, LRU
+        self.capacity_bytes = capacity_bytes
+        self._nbytes = 0
+        self.evictions = 0  # cumulative host -> store spills
+        self.bytes_spilled = 0
+        self.bytes_fetched = 0  # cumulative store -> host promotions
+
+    def __contains__(self, fingerprint: str) -> bool:
+        return fingerprint in self._res
+
+    def __len__(self) -> int:
+        return len(self._res)
+
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def host_resident_bytes(self, records: Sequence[TensorRecord]) -> int:
+        """Bytes of `records` currently in this node's host tier (read-only:
+        no recency touch — scoring a candidate is not an access)."""
+        return sum(r.nbytes for r in records if r.fingerprint in self._res)
+
+    def plan_fetch(self, records: Sequence[TensorRecord]) -> tuple[int, int]:
+        """Resolve a load's missed tensors through the host tier.
+
+        Host-resident records are touched (LRU recency); absent ones are
+        promoted from the persistent store and admitted, LRU-evicting other
+        tensors if the cap demands it — the records being fetched are
+        themselves exempt from this round's eviction (they are pinned by the
+        in-flight transfer).  Returns (host_hit_bytes, store_bytes).
+        """
+        host_bytes = 0
+        store_bytes = 0
+        fetched = set()
+        for r in records:
+            if r.fingerprint in self._res:
+                self._res.move_to_end(r.fingerprint)
+                host_bytes += r.nbytes
+            else:
+                self._res[r.fingerprint] = r.nbytes
+                self._res.move_to_end(r.fingerprint)
+                self._nbytes += r.nbytes
+                store_bytes += r.nbytes
+                self.bytes_fetched += r.nbytes
+            fetched.add(r.fingerprint)
+        if self.capacity_bytes is not None and self._nbytes > self.capacity_bytes:
+            for fp in [fp for fp in self._res if fp not in fetched]:
+                if self._nbytes <= self.capacity_bytes:
+                    break
+                self._evict(fp)
+        return host_bytes, store_bytes
+
+    def _evict(self, fp: str):
+        size = self._res.pop(fp)
+        self._nbytes -= size
+        self.evictions += 1
+        self.bytes_spilled += size

@@ -47,6 +47,11 @@ class LoadReport:
     bytes_total: int = 0
     bytes_hit: int = 0  # reused, no transfer
     bytes_transferred: int = 0  # host -> device
+    # tier split of bytes_transferred (DESIGN.md §11): host-cache hits move
+    # at h2d_bw, store-tier misses at min(h2d_bw, store_bw).  With no host
+    # tier modeled, the legacy in_host_cache flag assigns all bytes to one.
+    bytes_from_host: int = 0
+    bytes_from_store: int = 0
     bytes_evicted: int = 0
     bytes_merged: int = 0  # device-side compaction copies
     tensors_hit: int = 0
@@ -76,6 +81,10 @@ class ReuseStore:
         self.indexed = indexed
         self.tensor_map: dict[str, TensorEntry] = {}  # fingerprint -> entry
         self.active_models: set[str] = set()
+        # simulated per-node host Model Store tier (core.hostcache.SimHostCache
+        # or None).  When set, load_model prices each miss by the tier it
+        # actually resolves from instead of the blanket in_host_cache flag.
+        self.host_cache = None
         self.miss_prob: dict[str, float] = {}  # model_id -> p_m (from controller)
         self.alpha: dict[str, float] = {}  # model_id -> latency sensitivity
         self._rand_state = 0x9E3779B9
@@ -201,8 +210,20 @@ class ReuseStore:
 
         self.activate(model_id)
         rep.compute_seconds = _time.perf_counter() - t0
-        rep.load_seconds = self.costs.load_time(rep.bytes_transferred,
-                                                in_host_cache=in_host_cache)
+        if self.host_cache is not None:
+            # tier-aware Eq. 3: the simulated host tier resolves each missed
+            # tensor, admitting store-tier fetches (and LRU-spilling others)
+            rep.bytes_from_host, rep.bytes_from_store = \
+                self.host_cache.plan_fetch(misses)
+            rep.load_seconds = self.costs.load_time_tiered(
+                rep.bytes_from_host, rep.bytes_from_store)
+        else:
+            if in_host_cache:
+                rep.bytes_from_host = rep.bytes_transferred
+            else:
+                rep.bytes_from_store = rep.bytes_transferred
+            rep.load_seconds = self.costs.load_time(rep.bytes_transferred,
+                                                    in_host_cache=in_host_cache)
         rep.merge_seconds = self.costs.merge_time(rep.bytes_merged)
         return rep
 

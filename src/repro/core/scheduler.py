@@ -16,7 +16,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Optional, Protocol, Sequence
 
-from repro.core.costmodel import Hardware, estimate_load_time
+from repro.core.costmodel import (Hardware, estimate_load_time,
+                                  estimate_load_time_tiered)
 from repro.models.tensors import TensorRecord
 
 #: Named affinity scoring policies (ablation knob; SimPolicy.queue_aware).
@@ -36,6 +37,10 @@ class DeviceView(Protocol):
     # Optional (queueing-aware scoring): expected seconds of queueing a new
     # instance would see on this device right now.
     # def expected_queue_delay(self, now: float) -> float: ...
+    # Optional (tier-aware scoring, DESIGN.md §11): bytes of `records` the
+    # node's HOST cache tier holds — misses beyond these must be promoted
+    # from the persistent store at min(h2d_bw, store_bw).
+    # def host_resident_bytes(self, records) -> int: ...
 
 
 @dataclass
@@ -71,8 +76,15 @@ def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]
             if not dev.can_run(model_bytes, model_id):
                 continue
             reuse = dev.reusable_bytes(records)
-            lat = estimate_load_time(model_bytes, reuse, hw,
-                                     in_host_cache=in_host_cache)
+            host_fn = getattr(dev, "host_resident_bytes", None)
+            if host_fn is not None:
+                # tier-aware t_load: host-cached misses at h2d_bw, the rest
+                # promoted from the persistent store at min(h2d_bw, store_bw)
+                lat = estimate_load_time_tiered(model_bytes, reuse,
+                                                host_fn(records), hw)
+            else:
+                lat = estimate_load_time(model_bytes, reuse, hw,
+                                         in_host_cache=in_host_cache)
             if policy == "eq3+queue":
                 delay_fn = getattr(dev, "expected_queue_delay", None)
                 if delay_fn is not None:

@@ -9,6 +9,8 @@ enabling cross-model dedup of shared base weights (beyond-paper).
 from __future__ import annotations
 
 import hashlib
+import time as _time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
@@ -65,6 +67,69 @@ def tensor_records(model_id: str, params, *, shard: str = "",
     return recs
 
 
+class PersistentStore:
+    """Bottom tier of the model-store hierarchy: serialized checkpoint
+    buffers keyed by fingerprint (DESIGN.md §11).
+
+    Reads reconstruct the numpy array from the serialized blob and — when
+    `store_bw` is set — are throttled to `nbytes / store_bw` wall seconds,
+    so a promote-then-transfer cold load measurably pays Eq. 3's
+    `min(h2d_bw, store_bw)` instead of the host-cache `h2d_bw`.  With
+    `store_bw=None` reads are unthrottled (unit tests stay fast); the byte
+    counters still record tier traffic either way.
+    """
+
+    def __init__(self, *, store_bw: Optional[float] = None):
+        # fingerprint -> (raw bytes, dtype, shape); the dtype OBJECT is kept
+        # (not its name) so extension dtypes like bfloat16 round-trip
+        self._blobs: dict[str, tuple[bytes, "np.dtype", tuple[int, ...]]] = {}
+        self.store_bw = store_bw
+        self._nbytes = 0
+        self.bytes_written = 0  # cumulative spill traffic (host -> store)
+        self.bytes_read = 0  # cumulative promote traffic (store -> host)
+
+    def __contains__(self, fingerprint: str) -> bool:
+        return fingerprint in self._blobs
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def put(self, fingerprint: str, arr: "np.ndarray"):
+        raw = np.ascontiguousarray(arr).tobytes()
+        prev = self._blobs.get(fingerprint)
+        if prev is not None:
+            self._nbytes -= len(prev[0])
+        self._blobs[fingerprint] = (raw, arr.dtype, tuple(arr.shape))
+        self._nbytes += len(raw)
+        self.bytes_written += len(raw)
+
+    def _read(self, raw: bytes, dtype: "np.dtype",
+              shape: tuple[int, ...]) -> "np.ndarray":
+        t0 = _time.perf_counter()
+        arr = np.frombuffer(raw, dtype=dtype).reshape(shape)
+        self.bytes_read += len(raw)
+        if self.store_bw:
+            budget = len(raw) / self.store_bw
+            remaining = budget - (_time.perf_counter() - t0)
+            if remaining > 0:
+                _time.sleep(remaining)
+        return arr
+
+    def get(self, fingerprint: str) -> "np.ndarray":
+        raw, dtype, shape = self._blobs[fingerprint]
+        return self._read(raw, dtype, shape)
+
+    def pop(self, fingerprint: str) -> "np.ndarray":
+        """Promoting read: return the array and drop the blob, so every
+        fingerprint stays resolvable from exactly one tier."""
+        raw, dtype, shape = self._blobs.pop(fingerprint)
+        self._nbytes -= len(raw)
+        return self._read(raw, dtype, shape)
+
+
 class HostTensorStore:
     """Per-tensor host-side Model Store keyed by fingerprint (DESIGN.md §10).
 
@@ -74,11 +139,29 @@ class HostTensorStore:
     from here — `Engine.load` never re-materializes a full parameter tree.
     Buffers are host numpy arrays so fetching one is a dict lookup, and the
     chunked h2d pipeline can stream them without touching the device first.
+
+    Bounded middle tier (DESIGN.md §11): with `capacity_bytes` set, the
+    store LRU-evicts *unpinned* tensors into the `PersistentStore` spill
+    tier whenever resident bytes exceed the cap.  Pins are refcounts held
+    by the engine for every currently-loading or device-active model, so
+    eviction can never race an in-flight `ChunkedTransfer`.  Pinned bytes
+    may exceed the cap (like real pinned host memory); the invariant is
+    `nbytes() <= capacity` whenever evicting unpinned tensors suffices.
+    Byte accounting is incremental — `nbytes()` is a counter read, not a
+    scan (it is consulted on every admission).
     """
 
-    def __init__(self):
-        self._bufs: dict[str, "np.ndarray"] = {}
+    def __init__(self, capacity_bytes: Optional[int] = None, *,
+                 spill: Optional[PersistentStore] = None):
+        self._bufs: "OrderedDict[str, np.ndarray]" = OrderedDict()  # LRU order
+        self.capacity_bytes = capacity_bytes
+        self.spill = spill if spill is not None else PersistentStore()
+        self._pins: dict[str, int] = {}  # fingerprint -> refcount
+        self._nbytes = 0  # incremental: sum of resident buffer bytes
+        self._pinned_nbytes = 0  # incremental: resident AND pinned bytes
         self.leaves_stored = 0  # cumulative leaves materialized into the store
+        self.evictions = 0  # cumulative host -> store spills
+        self.promotions = 0  # cumulative store -> host promotes
 
     def __contains__(self, fingerprint: str) -> bool:
         return fingerprint in self._bufs
@@ -86,27 +169,118 @@ class HostTensorStore:
     def __len__(self) -> int:
         return len(self._bufs)
 
+    def resolvable(self, fingerprint: str) -> bool:
+        """Fingerprint lives in SOME tier (host or persistent store)."""
+        return fingerprint in self._bufs or fingerprint in self.spill
+
     def get(self, fingerprint: str) -> "np.ndarray":
-        return self._bufs[fingerprint]
+        """Host-tier read; touches LRU recency.  KeyError on a host miss —
+        use `fetch` to promote from the spill tier."""
+        buf = self._bufs[fingerprint]
+        self._bufs.move_to_end(fingerprint)
+        return buf
+
+    def fetch(self, fingerprint: str) -> "np.ndarray":
+        """Resolve from the hierarchy: host hit is a dict lookup; a spill-tier
+        hit promotes the tensor back into the host cache (store_bw-limited
+        read), evicting LRU unpinned tensors if the cap demands it."""
+        if fingerprint in self._bufs:
+            return self.get(fingerprint)
+        arr = self.spill.pop(fingerprint)  # one-tier invariant: move, not copy
+        self.promotions += 1
+        self._admit(fingerprint, arr)
+        return arr
 
     def missing(self, records: Sequence[TensorRecord]) -> list[TensorRecord]:
         return [r for r in records if r.fingerprint not in self._bufs]
+
+    def put(self, fingerprint: str, arr: "np.ndarray") -> bool:
+        """Admit one materialized leaf.  A fingerprint already resolvable in
+        either tier is skipped (materialization happens at most once ever);
+        returns whether the leaf was newly stored."""
+        if self.resolvable(fingerprint):
+            return False
+        self._admit(fingerprint, np.asarray(arr))
+        self.leaves_stored += 1
+        return True
 
     def put_tree(self, records: Sequence[TensorRecord], params) -> int:
         """Store every leaf of `params` under its record's fingerprint.
         Returns the number of leaves newly materialized."""
         leaves = jax.tree.leaves(params)
         assert len(leaves) == len(records), "record/leaf count mismatch"
-        added = 0
-        for r, leaf in zip(records, leaves):
-            if r.fingerprint not in self._bufs:
-                self._bufs[r.fingerprint] = np.asarray(leaf)
-                added += 1
-        self.leaves_stored += added
-        return added
+        return sum(self.put(r.fingerprint, leaf)
+                   for r, leaf in zip(records, leaves))
 
+    # ------------------------------------------------------------- pinning
+    def pin(self, fingerprint: str):
+        """Refcount-pin: a pinned tensor is never spilled.  Pinning a
+        fingerprint that currently lives in the spill tier is allowed — the
+        pin takes byte effect when `fetch` promotes it."""
+        n = self._pins.get(fingerprint, 0)
+        self._pins[fingerprint] = n + 1
+        if n == 0 and fingerprint in self._bufs:
+            self._pinned_nbytes += self._bufs[fingerprint].nbytes
+
+    def unpin(self, fingerprint: str):
+        n = self._pins.get(fingerprint, 0)
+        if n <= 1:
+            self._pins.pop(fingerprint, None)
+            if n == 1 and fingerprint in self._bufs:
+                self._pinned_nbytes -= self._bufs[fingerprint].nbytes
+            self._enforce_cap()  # released bytes become evictable NOW
+        else:
+            self._pins[fingerprint] = n - 1
+
+    def pinned(self, fingerprint: str) -> bool:
+        return self._pins.get(fingerprint, 0) > 0
+
+    # ------------------------------------------------------------ eviction
+    def evict(self, fingerprint: str) -> bool:
+        """Spill one host-resident tensor to the persistent tier.  Refuses
+        (returns False) for pinned or non-resident fingerprints."""
+        if fingerprint not in self._bufs or self.pinned(fingerprint):
+            return False
+        self._spill_one(fingerprint)
+        return True
+
+    def _spill_one(self, fingerprint: str):
+        buf = self._bufs.pop(fingerprint)
+        self._nbytes -= buf.nbytes
+        self.spill.put(fingerprint, buf)
+        self.evictions += 1
+
+    def _enforce_cap(self):
+        if self.capacity_bytes is None:
+            return
+        # O(1) bail-out: with no unpinned bytes there is nothing to spill —
+        # avoids rescanning a fully-pinned LRU on every admission of an
+        # over-cap (pinned) load
+        while (self._nbytes > self.capacity_bytes
+               and self._nbytes > self._pinned_nbytes):
+            victim = next((fp for fp in self._bufs if not self.pinned(fp)),
+                          None)  # oldest unpinned = LRU order
+            if victim is None:
+                return  # only pinned bytes remain: over-cap is allowed
+            self._spill_one(victim)
+
+    def _admit(self, fingerprint: str, arr: "np.ndarray"):
+        self._bufs[fingerprint] = arr
+        self._bufs.move_to_end(fingerprint)
+        self._nbytes += arr.nbytes
+        if self.pinned(fingerprint):
+            self._pinned_nbytes += arr.nbytes
+        self._enforce_cap()
+
+    # ---------------------------------------------------------------- stats
     def nbytes(self) -> int:
-        return sum(b.nbytes for b in self._bufs.values())
+        return self._nbytes
+
+    def pinned_nbytes(self) -> int:
+        return self._pinned_nbytes
+
+    def unpinned_nbytes(self) -> int:
+        return self._nbytes - self._pinned_nbytes
 
 
 def spec_records(model_id: str, cfg, *, shard: str = "") -> list[TensorRecord]:

@@ -49,7 +49,8 @@ from repro.core.reuse_store import LoadReport, ReuseStore
 from repro.kernels import ops as kops
 from repro.models import build_model, lm
 from repro.models.common import rms_norm
-from repro.models.tensors import HostTensorStore, TensorRecord, tensor_records
+from repro.models.tensors import (HostTensorStore, PersistentStore,
+                                  TensorRecord, tensor_records)
 
 
 @dataclass
@@ -63,10 +64,25 @@ class RegisteredModel:
 
 @dataclass
 class DataLoadStats:
-    """Data-plane accounting for one `Engine.load` call."""
+    """Data-plane accounting for one `Engine.load` call.
+
+    The per-tier counters expose the three-way load path (DESIGN.md §11):
+    every record lands in exactly one of device-pool hit / host-cache hit /
+    store promote, so `bytes_device_hit + bytes_host_hit + bytes_store`
+    equals the model's total bytes on every load after the first (on the
+    first-ever cold load, never-seen leaves are materialized by `init_fn`
+    and counted by `leaves_materialized` instead).
+    """
 
     leaves_materialized: int = 0  # init_fn leaves newly written to host store
     init_seconds: float = 0.0  # host materialization wall time
+    tensors_device_hit: int = 0  # device-pool tier: buffer already resident
+    bytes_device_hit: int = 0
+    tensors_host_hit: int = 0  # host tier: h2d transfer only
+    bytes_host_hit: int = 0
+    tensors_store: int = 0  # store tier: promote (store_bw) then h2d
+    bytes_store: int = 0
+    store_seconds: float = 0.0  # store -> host promotion wall time
     tensors_h2d: int = 0
     bytes_h2d: int = 0
     chunks_h2d: int = 0
@@ -183,11 +199,18 @@ class Engine:
 
     def __init__(self, capacity_bytes: int, *, costs: Optional[PhaseCosts] = None,
                  block_tokens: int = 16, chunk_bytes: int = 16 << 20,
-                 transfer_depth: int = 2):
+                 transfer_depth: int = 2,
+                 host_cache_bytes: Optional[int] = None,
+                 store_bw: Optional[float] = None):
         self.store = ReuseStore(capacity_bytes, costs or PhaseCosts(paper_l40()))
         self.block_tokens = block_tokens
         self.models: dict[str, RegisteredModel] = {}
-        self.host_store = HostTensorStore()  # per-tensor host Model Store
+        # three-tier model store (DESIGN.md §11): bounded host cache in the
+        # middle, persistent-store spill below (store_bw-throttled reads)
+        self.persistent_store = PersistentStore(store_bw=store_bw)
+        self.host_store = HostTensorStore(host_cache_bytes,
+                                          spill=self.persistent_store)
+        self._host_pins: set[str] = set()  # model_ids holding host-tier pins
         self._xfer = ChunkedTransfer(chunk_bytes=chunk_bytes,
                                      depth=transfer_depth)
         self._tensors: dict[str, jax.Array] = {}  # fingerprint -> live buffer
@@ -214,44 +237,109 @@ class Engine:
 
     # ------------------------------------------------------------------ load
     def load(self, model_id: str, *, now: float = 0.0) -> LoadReport:
-        """Tensor-granular fast-path load.
+        """Tensor-granular three-way load over the tiered model store.
 
-        Only *missed* leaves move: the host Model Store is materialized at
-        most once per model (first cold load), later loads fetch missed
-        tensors from it and stream them through the chunked h2d pipeline.
-        A fully-warm load (every tensor resident) touches no leaf at all.
+        Every record resolves through exactly one path (DESIGN.md §11):
+          * device-pool hit — the jax buffer is already resident, no bytes
+            move at all;
+          * host hit — the PR 2 fast path: stream the host buffer through
+            the chunked h2d pipeline;
+          * store promote-then-transfer — the tensor was LRU-spilled to the
+            persistent tier: promote it back into the host cache (paying
+            the store_bw-limited read), then h2d.
+        `init_fn` still runs at most once per model EVER — a spilled tensor
+        is resolvable, so materialization only covers never-seen leaves.
+        The model's records are refcount-pinned in the host store for as
+        long as it stays active, so LRU eviction can never race the
+        in-flight `ChunkedTransfer` (or a co-loading model's spills).
         """
         reg = self.models[model_id]
         report = self.store.load_model(model_id, reg.records, now=now)
         stats = DataLoadStats()
         t0 = _time.perf_counter()
+        was_pinned = model_id in self._host_pins
+        self._pin_model(model_id)  # eviction must not race this load
+        try:
+            self._load_tensors(reg, stats)
+        except BaseException:
+            if not was_pinned:  # failed load must not leak pins forever
+                self._unpin_model(model_id)
+            raise
+        stats.total_seconds = _time.perf_counter() - t0
+        # the report's tier split must reflect what the data plane actually
+        # did (the engine's ReuseStore models no host cache of its own):
+        # store-promoted bytes re-price the modeled load time at store_bw;
+        # materialized leaves count as host-side, like a checkpoint read
+        # min-clamp: planes can briefly disagree when the store re-admits a
+        # tensor whose device buffer never dropped (test-only eviction paths)
+        report.bytes_from_store = min(stats.bytes_store,
+                                      report.bytes_transferred)
+        report.bytes_from_host = (report.bytes_transferred
+                                  - report.bytes_from_store)
+        report.load_seconds = self.store.costs.load_time_tiered(
+            report.bytes_from_host, report.bytes_from_store)
+        self.last_load = stats
+        return report
+
+    def _load_tensors(self, reg: RegisteredModel, stats: DataLoadStats):
         # tensors whose device buffer is absent (store misses, plus any buffer
         # dropped by sync_evictions that the store re-admitted)
-        to_move = [r for r in reg.records if r.fingerprint not in self._tensors]
+        to_move = []
+        for r in reg.records:
+            if r.fingerprint in self._tensors:
+                stats.tensors_device_hit += 1
+                stats.bytes_device_hit += r.nbytes
+            else:
+                to_move.append(r)
         if to_move:
-            if any(r.fingerprint not in self.host_store for r in to_move):
+            host_hits = [r for r in to_move if r.fingerprint in self.host_store]
+            spilled = [r for r in to_move
+                       if r.fingerprint not in self.host_store
+                       and r.fingerprint in self.persistent_store]
+            if len(host_hits) + len(spilled) < len(to_move):
                 tm = _time.perf_counter()
                 params = reg.init_fn()  # full materialization: once, ever
                 stats.leaves_materialized = self.host_store.put_tree(
                     reg.records, params)
                 stats.init_seconds = _time.perf_counter() - tm
                 del params
+            stats.tensors_host_hit = len(host_hits)
+            stats.bytes_host_hit = sum(r.nbytes for r in host_hits)
+            if spilled:
+                ts = _time.perf_counter()
+                for r in spilled:  # store_bw-limited promotion, pinned above
+                    self.host_store.fetch(r.fingerprint)
+                stats.store_seconds = _time.perf_counter() - ts
+                stats.tensors_store = len(spilled)
+                stats.bytes_store = sum(r.nbytes for r in spilled)
             tt = _time.perf_counter()
             moved = self._xfer.transfer(
                 [(r.fingerprint, self.host_store.get(r.fingerprint))
                  for r in to_move], stats)
             stats.transfer_seconds = _time.perf_counter() - tt
             self._tensors.update(moved)
-        if to_move or model_id not in self._params_cache:
+        if to_move or reg.model_id not in self._params_cache:
             # assemble the param tree from resident buffers (no copies)
-            self._params_cache[model_id] = jax.tree.unflatten(
+            self._params_cache[reg.model_id] = jax.tree.unflatten(
                 reg.treedef, [self._tensors[r.fingerprint] for r in reg.records])
-        stats.total_seconds = _time.perf_counter() - t0
-        self.last_load = stats
-        return report
+
+    def _pin_model(self, model_id: str):
+        if model_id in self._host_pins:
+            return
+        self._host_pins.add(model_id)
+        for r in self.models[model_id].records:
+            self.host_store.pin(r.fingerprint)
+
+    def _unpin_model(self, model_id: str):
+        if model_id not in self._host_pins:
+            return
+        self._host_pins.discard(model_id)
+        for r in self.models[model_id].records:
+            self.host_store.unpin(r.fingerprint)
 
     def release(self, model_id: str):
         self.store.release(model_id)
+        self._unpin_model(model_id)  # host copies become LRU-evictable
 
     def finish_instance(self, model_id: str):
         """Instance-path release, refcounted: the model stays ACTIVE in the
@@ -264,6 +352,18 @@ class Engine:
             return
         self._instances_of.pop(model_id, None)
         self.store.release(model_id)
+        self._unpin_model(model_id)
+
+    def drop_device_copies(self, model_id: str):
+        """Release the model and evict its device buffers, so the next load
+        must resolve through the host/store tiers.  Benchmark and test hook
+        (fig15's pressure sweep, the load-tier matrix) — the serving path
+        never force-evicts; it lets MCE pick victims.  Owner-scoped via
+        `drop_model`: a content-fingerprint tensor shared with (and owned
+        by) another resident model stays."""
+        self.release(model_id)
+        self.store.drop_model(model_id)
+        self.sync_evictions()
 
     def sync_evictions(self):
         """Drop data-plane buffers for tensors the store has evicted."""

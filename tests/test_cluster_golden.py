@@ -7,7 +7,15 @@ must not silently break:
   * exact byte accounting — for every request,
     bytes_hit + bytes_transferred == bytes_total, and fleet-wide transfer
     totals are strictly ordered by reuse capability.
+
+The tiered fixtures add the bounded per-node host-cache scenario
+(DESIGN.md §11): with `host_cache_bytes` set, every transferred byte is
+attributed to exactly one source tier, store-tier traffic grows monotonely
+as the cap shrinks, and the whole tier-aware decision sequence (placements,
+warm hits, per-request tier bytes) is pinned decision-for-decision by an
+exact replay equality.
 """
+import dataclasses
 import statistics as st
 
 import pytest
@@ -16,6 +24,10 @@ from repro.core import POLICIES, ClusterSim, generate_trace
 from repro.core.trace import PAPER_MODELS
 
 GOLDEN_SEED = 1234
+
+# host-cache caps for the tier sweep: effectively-unbounded, half the
+# ~128 GB paper-model working set, a quarter of it
+TIER_CAPS = (1e15, 64e9, 32e9)
 
 
 @pytest.fixture(scope="module")
@@ -60,6 +72,80 @@ def test_transfer_totals_ordered_by_reuse(golden_results):
     assert moved["reuse"] < moved["sllm"]
     assert moved["tangram"] <= moved["reuse"] * 1.05  # odkv must not regress
     assert moved["tangram-conc"] <= moved["tangram"]  # joins transfer nothing
+
+
+def test_legacy_policies_have_no_store_tier_traffic(golden_results):
+    """Without host-tier modeling every transferred byte is priced at
+    h2d_bw — the pre-tier behaviour the None default must preserve."""
+    for pol, res in golden_results.items():
+        for r in res:
+            assert r.bytes_from_store == 0, pol
+            assert r.bytes_from_host == r.bytes_transferred, pol
+
+
+# ---------------------------------------------- bounded host caches (tiered)
+def _run_tiered(cap: float):
+    trace = generate_trace(n_requests=240, locality="L3",
+                           mean_interarrival=10.0, seed=GOLDEN_SEED,
+                           max_output_tokens=128)
+    pol = dataclasses.replace(POLICIES["tangram-tier"], name="tier-golden",
+                              host_cache_bytes=cap)
+    sim = ClusterSim(PAPER_MODELS, pol, n_workers=2, seed=GOLDEN_SEED)
+    return sim.run(trace), sim
+
+
+@pytest.fixture(scope="module")
+def tiered_results():
+    return {cap: _run_tiered(cap)[0] for cap in TIER_CAPS}
+
+
+def test_tiered_every_request_completes(tiered_results):
+    for cap, res in tiered_results.items():
+        assert len(res) == 240, cap
+
+
+def test_tiered_byte_accounting_exact(tiered_results):
+    """Every transferred byte resolves from exactly one tier, and the
+    device-pool identity still holds alongside."""
+    for cap, res in tiered_results.items():
+        for r in res:
+            assert r.bytes_from_host + r.bytes_from_store \
+                == r.bytes_transferred, cap
+            assert r.bytes_hit + r.bytes_transferred == r.bytes_total, cap
+
+
+def test_tiered_store_traffic_monotone_in_cap(tiered_results):
+    """Shrinking the host cache can only push MORE bytes onto the
+    persistent-store tier."""
+    totals = [sum(r.bytes_from_store for r in tiered_results[cap])
+              for cap in TIER_CAPS]  # caps are sorted descending
+    assert totals[0] <= totals[1] <= totals[2], totals
+    assert totals[0] > 0  # even unbounded, first-ever fetches hit the store
+
+
+def test_tiered_unbounded_cap_fetches_each_tensor_at_most_once_per_node(
+        tiered_results):
+    """With an effectively-unbounded host cache nothing is ever spilled, so
+    store-tier traffic is bounded by one cold fetch per (node, model)."""
+    ceiling = 2 * sum(m.bytes for m in PAPER_MODELS)  # n_workers == 2
+    assert sum(r.bytes_from_store for r in tiered_results[TIER_CAPS[0]]) \
+        <= ceiling
+
+
+def test_tiered_decisions_pinned_replay_exact(tiered_results):
+    """Decision-for-decision golden pin: re-running the bounded-cache sim on
+    the same trace reproduces every placement, warm hit, tier split, and
+    modeled load time bit-for-bit."""
+    replay, sim = _run_tiered(TIER_CAPS[1])
+    key = lambda r: (r.model_id, r.arrival, r.start, r.warm, r.joined,
+                     r.bytes_hit, r.bytes_from_host, r.bytes_from_store,
+                     r.load_s, r.decode_s)
+    assert list(map(key, tiered_results[TIER_CAPS[1]])) == \
+        list(map(key, replay))
+    # the per-node caches respected their byte cap throughout
+    for w in sim.workers:
+        assert w.host_cache.nbytes() <= TIER_CAPS[1]
+        assert w.host_cache.evictions > 0  # pressure actually occurred
 
 
 def test_cold_reuse_fraction_monotone(golden_results):

@@ -101,6 +101,129 @@ def test_chunked_transfer_pipeline_roundtrip():
     assert stats.chunks_h2d == -(-big.nbytes // (16 * 1024)) + 1
 
 
+def _drop_device_copies(eng, model_id="m"):
+    eng.drop_device_copies(model_id)
+
+
+def test_three_tier_load_matrix():
+    """Cold (store-only) / warm (host) / hot (device-pool) loads: the
+    three-way byte counters partition the model exactly, and init_fn never
+    re-runs once the hierarchy holds the leaves (DESIGN.md §11)."""
+    cfg = small_cfg()
+    eng = Engine(64 * 1024 * 1024, host_cache_bytes=0)  # spill-everything cap
+    eng.register("m", cfg)
+    rep = eng.load("m")
+    total = rep.bytes_total
+    first = eng.last_load
+    assert first.leaves_materialized == len(eng.models["m"].records)
+    # while loading/active the records are pinned: host tier holds them all
+    assert eng.host_store.nbytes() == total
+
+    # COLD: release spills everything (cap 0); drop device buffers too
+    _drop_device_copies(eng)
+    assert eng.host_store.nbytes() == 0
+    assert eng.persistent_store.nbytes() == total
+    rep_cold = eng.load("m")
+    cold = eng.last_load
+    assert cold.leaves_materialized == 0  # init_fn ran once, EVER
+    assert (cold.bytes_device_hit, cold.bytes_host_hit, cold.bytes_store) \
+        == (0, 0, total)
+    assert cold.tensors_store == len(eng.models["m"].records)
+    assert cold.bytes_h2d == total  # promoted bytes still cross h2d
+    # the returned LoadReport agrees with the data plane: every byte came up
+    # from the store tier, and the modeled time is priced at store_bw
+    assert (rep_cold.bytes_from_store, rep_cold.bytes_from_host) == (total, 0)
+    assert rep_cold.load_seconds == eng.store.costs.load_time_tiered(0, total)
+
+    # HOT: everything device-resident — no tier moves any byte
+    eng.load("m")
+    hot = eng.last_load
+    assert (hot.bytes_device_hit, hot.bytes_host_hit, hot.bytes_store) \
+        == (total, 0, 0)
+    assert hot.bytes_h2d == 0 and hot.leaves_materialized == 0
+
+    # WARM: ample host cap keeps the working set host-resident
+    wide = Engine(64 * 1024 * 1024, host_cache_bytes=4 * total)
+    wide.register("m", cfg)
+    wide.load("m")
+    _drop_device_copies(wide)
+    wide.load("m")
+    warm = wide.last_load
+    assert (warm.bytes_device_hit, warm.bytes_host_hit, warm.bytes_store) \
+        == (0, total, 0)
+    assert warm.leaves_materialized == 0 and warm.store_seconds == 0.0
+
+
+def test_partial_spill_splits_host_and_store_bytes():
+    """A host cap below the model size spills the LRU tail; the next load's
+    counters split exactly across the host and store tiers."""
+    cfg = small_cfg()
+    eng = Engine(64 * 1024 * 1024)
+    eng.register("m", cfg)
+    rep = eng.load("m")
+    total = rep.bytes_total
+    eng.host_store.capacity_bytes = total // 2  # shrink the cap mid-flight
+    _drop_device_copies(eng)  # unpin -> LRU spill down to the new cap
+    assert 0 < eng.host_store.nbytes() <= total // 2
+    spilled = eng.persistent_store.nbytes()
+    assert spilled == total - eng.host_store.nbytes()
+    eng.load("m")
+    s = eng.last_load
+    assert s.bytes_store == spilled
+    assert s.bytes_host_hit == total - spilled
+    assert s.bytes_device_hit == 0 and s.leaves_materialized == 0
+    assert s.bytes_h2d == total
+
+
+def test_warm_load_wall_time_no_regression_vs_two_tier():
+    """The tiering refactor must not slow the PR 2 warm path: a host-hit
+    load on a capped (but sufficient) engine takes no longer than on the
+    unbounded two-tier engine, within generous noise bounds."""
+    import time
+
+    cfg = small_cfg()
+
+    def warm_seconds(**kw):
+        eng = Engine(64 * 1024 * 1024, **kw)
+        eng.register("m", cfg)
+        total = eng.load("m").bytes_total
+        best = float("inf")
+        for _ in range(3):
+            _drop_device_copies(eng)
+            t0 = time.perf_counter()
+            eng.load("m")
+            best = min(best, time.perf_counter() - t0)
+        s = eng.last_load
+        assert s.bytes_host_hit == total and s.bytes_store == 0
+        return best
+
+    two_tier = warm_seconds()
+    tiered = warm_seconds(host_cache_bytes=1 << 30)
+    assert tiered <= two_tier * 3 + 0.05, (tiered, two_tier)
+
+
+def test_loading_model_is_pinned_against_concurrent_spill():
+    """While model A is active, loading B over a tight host cap must spill
+    B's own (unpinned-after-release) bytes or overflow — never evict A's
+    pinned host copies out from under a future partial reload."""
+    cfg = small_cfg()
+    eng = Engine(128 * 1024 * 1024, host_cache_bytes=0)
+    eng.register("a", cfg)
+    eng.register("b", dataclasses.replace(cfg, num_layers=3))
+    total_a = eng.load("a").bytes_total
+    recs_a = eng.models["a"].records
+    # A active: every A record pinned host-side
+    assert all(eng.host_store.pinned(r.fingerprint) for r in recs_a)
+    assert eng.host_store.nbytes() == total_a
+    eng.load("b")  # B's load spills B's bytes (cap 0) but never A's
+    assert all(r.fingerprint in eng.host_store for r in recs_a)
+    eng.release("b")
+    assert all(r.fingerprint in eng.host_store for r in recs_a)
+    eng.release("a")  # last unpin: A spills under the zero cap
+    assert eng.host_store.nbytes() == 0
+    assert all(r.fingerprint in eng.persistent_store for r in recs_a)
+
+
 def test_register_seed_is_stable_digest():
     """Default init seeds must not depend on PYTHONHASHSEED: two engines in
     (conceptually) different processes must agree on default params."""

@@ -1,0 +1,210 @@
+"""Property-based invariants for the tiered host Model Store (DESIGN.md §11).
+
+Random put/get/fetch/evict/pin/unpin sequences against `HostTensorStore`
+are replayed on an exact shadow model, pinning:
+
+  * the cap invariant — `nbytes() <= capacity` whenever evicting unpinned
+    tensors suffices (pinned bytes may legitimately exceed the cap);
+  * pinned tensors are never evicted (implied by the exact LRU-order match
+    against the shadow, which never evicts pinned entries);
+  * every fingerprint ever stored stays resolvable from EXACTLY one tier
+    (host xor persistent store) with its contents intact;
+  * LRU order respected — the store's internal recency order equals the
+    shadow's after every operation, so evictions hit the least-recently
+    used unpinned tensor first;
+  * incremental byte accounting — `nbytes()` / `pinned_nbytes()` counters
+    equal a from-scratch scan after every operation.
+
+Runs under the real `hypothesis` when installed, else the deterministic
+seeded shim from tests/conftest.py.
+"""
+from collections import Counter, OrderedDict
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.tensors import HostTensorStore, PersistentStore
+
+FPS = [f"t{i}" for i in range(10)]
+
+
+def _content(fp: str, size: int) -> np.ndarray:
+    return ((np.arange(size) * (FPS.index(fp) + 3)) % 251).astype(np.uint8)
+
+
+@st.composite
+def _op(draw):
+    kind = draw(st.sampled_from(["put", "put", "get", "fetch", "fetch",
+                                 "evict", "pin", "unpin"]))
+    fp = draw(st.sampled_from(FPS))
+    size = draw(st.integers(min_value=1, max_value=64))
+    return (kind, fp, size)
+
+
+class _Shadow:
+    """Executable spec: minimal reference implementation of the tier rules."""
+
+    def __init__(self, cap: int):
+        self.cap = cap
+        self.host: "OrderedDict[str, int]" = OrderedDict()  # fp -> size, LRU
+        self.spill: dict[str, int] = {}
+        self.pins: Counter = Counter()
+
+    def nbytes(self) -> int:
+        return sum(self.host.values())
+
+    def pinned_nbytes(self) -> int:
+        return sum(s for fp, s in self.host.items() if self.pins[fp] > 0)
+
+    def enforce(self):
+        while self.nbytes() > self.cap and self.nbytes() > self.pinned_nbytes():
+            victim = next((fp for fp in self.host if self.pins[fp] == 0), None)
+            if victim is None:
+                return
+            self.spill[victim] = self.host.pop(victim)
+
+    def put(self, fp, size):
+        if fp in self.host or fp in self.spill:
+            return
+        self.host[fp] = size
+        self.host.move_to_end(fp)
+        self.enforce()
+
+    def get(self, fp):
+        self.host.move_to_end(fp)
+
+    def fetch(self, fp):
+        if fp in self.host:
+            self.host.move_to_end(fp)
+            return
+        self.host[fp] = self.spill.pop(fp)
+        self.host.move_to_end(fp)
+        self.enforce()
+
+    def evict(self, fp) -> bool:
+        if fp not in self.host or self.pins[fp] > 0:
+            return False
+        self.spill[fp] = self.host.pop(fp)
+        return True
+
+    def pin(self, fp):
+        self.pins[fp] += 1
+
+    def unpin(self, fp):
+        if self.pins[fp] > 0:
+            self.pins[fp] -= 1
+            if self.pins[fp] == 0:
+                self.enforce()
+
+
+@given(st.integers(min_value=16, max_value=192),
+       st.lists(_op(), min_size=1, max_size=100))
+@settings(max_examples=80, deadline=None)
+def test_host_store_matches_shadow_spec(cap, script):
+    store = HostTensorStore(cap)
+    shadow = _Shadow(cap)
+    sizes: dict[str, int] = {}  # fp -> size of the FIRST (authoritative) put
+    for kind, fp, size in script:
+        if kind == "put":
+            store.put(fp, _content(fp, size))
+            shadow.put(fp, size)
+            sizes.setdefault(fp, size)
+        elif kind == "get":
+            if fp in shadow.host:
+                got = store.get(fp)
+                shadow.get(fp)
+                assert np.array_equal(got, _content(fp, sizes[fp]))
+            else:
+                try:
+                    store.get(fp)
+                    assert False, "get() must miss on a non-host-resident fp"
+                except KeyError:
+                    pass
+        elif kind == "fetch":
+            if fp in shadow.host or fp in shadow.spill:
+                got = store.fetch(fp)
+                shadow.fetch(fp)
+                assert np.array_equal(got, _content(fp, sizes[fp]))
+            else:
+                try:
+                    store.fetch(fp)
+                    assert False, "fetch() must miss on an unknown fp"
+                except KeyError:
+                    pass
+        elif kind == "evict":
+            assert store.evict(fp) == shadow.evict(fp)
+        elif kind == "pin":
+            store.pin(fp)
+            shadow.pin(fp)
+        elif kind == "unpin":
+            store.unpin(fp)
+            shadow.unpin(fp)
+
+        # LRU order (and therefore eviction victims) match the spec exactly
+        assert list(store._bufs.keys()) == list(shadow.host.keys())
+        assert set(store.spill._blobs.keys()) == set(shadow.spill.keys())
+        # one-tier resolvability for everything ever stored
+        for known in sizes:
+            in_host, in_spill = known in store, known in store.spill
+            assert in_host != in_spill, known  # exactly one tier, never zero
+            assert store.resolvable(known)
+        # cap invariant: over-cap only when nothing unpinned remains
+        assert (store.nbytes() <= cap
+                or store.unpinned_nbytes() == 0), (store.nbytes(), cap)
+        # incremental counters equal a from-scratch scan
+        assert store.nbytes() == sum(b.nbytes for b in store._bufs.values())
+        assert store.nbytes() == shadow.nbytes()
+        assert store.pinned_nbytes() == shadow.pinned_nbytes()
+
+
+def test_persistent_store_roundtrip_and_counters():
+    ps = PersistentStore()
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    ps.put("a", a)
+    assert "a" in ps and ps.nbytes() == a.nbytes
+    assert np.array_equal(ps.get("a"), a)  # non-destructive read
+    assert "a" in ps
+    out = ps.pop("a")  # promoting read drops the blob
+    assert np.array_equal(out, a) and out.dtype == a.dtype
+    assert "a" not in ps and ps.nbytes() == 0
+    assert ps.bytes_written == a.nbytes and ps.bytes_read == 2 * a.nbytes
+
+
+def test_persistent_store_reads_are_store_bw_limited():
+    import time
+
+    bw = 4e6  # 4 MB/s: a 64 KB read budgets 16 ms
+    ps = PersistentStore(store_bw=bw)
+    arr = np.zeros(64 * 1024, np.uint8)
+    ps.put("x", arr)
+    t0 = time.perf_counter()
+    ps.get("x")
+    elapsed = time.perf_counter() - t0
+    assert elapsed >= 0.8 * arr.nbytes / bw, elapsed
+
+
+def test_nbytes_is_incremental_counter():
+    """Satellite fix: nbytes() must be a counter read (it is queried on every
+    admission), kept exact across put/spill/promote cycles."""
+    store = HostTensorStore(100)
+    for i in range(8):
+        store.put(f"f{i}", np.ones(30, np.uint8))
+    # cap 100 -> only 3 x 30B fit; 5 spilled, counters stayed in lockstep
+    assert store.nbytes() == 90 and len(store) == 3
+    assert store.spill.nbytes() == 150 and store.evictions == 5
+    store.fetch("f0")  # promote one back, evicting the LRU resident
+    assert store.nbytes() == 90 and store.promotions == 1
+    assert store.nbytes() == sum(b.nbytes for b in store._bufs.values())
+
+
+def test_pinned_bytes_may_exceed_cap_until_unpin():
+    store = HostTensorStore(50)
+    for i in range(3):
+        store.pin(f"p{i}")
+        store.put(f"p{i}", np.ones(40, np.uint8))
+    assert store.nbytes() == 120  # over cap: everything pinned
+    assert store.pinned_nbytes() == 120
+    store.unpin("p0")  # last unpin re-enforces the cap immediately
+    assert store.nbytes() == 80 and "p0" in store.spill
+    assert "p1" in store and "p2" in store

@@ -58,6 +58,52 @@ def test_affinity_one_instance_per_device():
     assert len(scheds) == 1 and queued == ["b"]
 
 
+class FakeTieredDevice(FakeDevice):
+    def __init__(self, device_id, resident, host_resident, capacity=10**9):
+        super().__init__(device_id, resident, capacity)
+        self._host = host_resident  # fingerprints the HOST tier caches
+
+    def host_resident_bytes(self, records):
+        return sum(r.nbytes for r in records
+                   if r.fingerprint not in self._resident
+                   and r.fingerprint in self._host)
+
+
+def test_affinity_tier_aware_prefers_host_cached_misses():
+    """Equal device-pool reuse: the node whose HOST tier caches the missing
+    tensors must beat the one that would promote them from the persistent
+    store at min(h2d_bw, store_bw) (DESIGN.md §11)."""
+    from repro.core import estimate_load_time_tiered
+
+    r = recs("m", [100, 200, 300])
+    devs = [FakeTieredDevice("g0", {"m/t2"}, set()),        # misses from store
+            FakeTieredDevice("g1", {"m/t2"}, {"m/t0", "m/t1"})]  # host-cached
+    hw = paper_l40()
+    scheds, queued = affinity_schedule([("m", r, 600)], devs, hw)
+    assert not queued and scheds[0].device_id == "g1"
+    assert scheds[0].expected_load_seconds == pytest.approx(
+        estimate_load_time_tiered(600, 300, 300, hw))
+
+
+def test_worker_host_resident_bytes_counts_only_device_misses():
+    """A node whose host tier spilled exactly the device-MISSING tensors
+    while retaining the device-resident ones must score zero host bytes —
+    counting the residents' host copies would hide the store-tier promote
+    the load will actually pay."""
+    import dataclasses
+
+    from repro.core import SimWorker
+
+    pol = dataclasses.replace(POLICIES["tangram-tier"], host_cache_bytes=10**9)
+    w = SimWorker("g0", 10**9, PhaseCosts(paper_l40()), pol)
+    r = recs("m", [100, 200, 300])
+    w.store.load_model("m", r)  # device + host tiers now hold all three
+    w.store._evict("m/t0")  # drop t0 from the DEVICE pool only
+    assert w.host_resident_bytes(r) == 100  # t0: the only miss, host-cached
+    w.host_cache._evict("m/t0")  # host tier spills exactly the missing one
+    assert w.host_resident_bytes(r) == 0  # t1/t2 host copies must not count
+
+
 def test_trace_locality_levels():
     t_l1 = generate_trace(n_requests=400, locality="L1", seed=3)
     t_l4 = generate_trace(n_requests=400, locality="L4", seed=3)
