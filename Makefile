@@ -1,7 +1,7 @@
 # Tier-1 gate vs fast inner loop — see ROADMAP.md "Testing".
 PY ?= python
 
-.PHONY: test test-fast bench bench-smoke
+.PHONY: test test-fast lint bench bench-smoke
 
 test:  ## full tier-1 gate (includes jax compile subprocesses; minutes)
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -9,8 +9,11 @@ test:  ## full tier-1 gate (includes jax compile subprocesses; minutes)
 test-fast:  ## deterministic non-subprocess subset (< 60 s)
 	bash scripts/ci.sh
 
+lint:  ## compileall + pyflakes (when available); first step in CI
+	bash scripts/ci.sh lint
+
 bench:  ## all paper-figure benchmarks (CSV rows on stdout)
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run
 
-bench-smoke:  ## fig15 fast-path benchmark at toy scale -> BENCH_fastpath.json
+bench-smoke:  ## fig15 at toy scale -> BENCH_fastpath.json + regression gate
 	bash scripts/ci.sh bench-smoke

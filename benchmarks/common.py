@@ -1,12 +1,25 @@
 """Shared benchmark helpers: CSV emission + timed sims."""
 from __future__ import annotations
 
+import json
 import statistics as st
 import time
 
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def load_bench_entries(path: str) -> list:
+    """Read a BENCH_fastpath.json history: the {"entries": [...]} format,
+    with a legacy single-run dict counting as one entry.  The ONE parser for
+    the format — fig15 appends through it and scripts/check_bench.py gates
+    through it, so the migration logic cannot drift apart."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and "entries" in data:
+        return data["entries"]
+    return [data]
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

@@ -18,6 +18,14 @@ pre-refactor baselines that are kept in-tree for exactly this purpose:
           reproduces the two-tier numbers (tiering costs nothing when
           nothing spills).
 
+  prefetch  Prefetch on/off x host-cache-pressure sweep (DESIGN.md §12):
+          at each cap, a cold load is measured twice over the SAME spilled
+          working set — once unhinted, once with `Engine.prefetch` issued a
+          lead window earlier (the queueing/init time a placement hint
+          buys).  The persistent-store read counters must match exactly
+          (overlap, not avoidance) while the prefetched wall time is never
+          worse at any pressure point.
+
   decode  Sync-free fused `decode_many` vs the legacy per-instance loop
           (`Instance.decode_legacy`: per-step host sync + full block-table
           rebuild) on a 4-instance mixed-length batch.  Runs with the XLA
@@ -76,7 +84,10 @@ def bench_load(smoke: bool) -> dict:
         jax.block_until_ready(arrs)
         return time.perf_counter() - t0
 
-    reps = 2 if smoke else 3
+    # min-of-3 even at smoke scale: the speedup ratios feed the
+    # check_bench regression gate, and min-of-2 swings past its threshold
+    # on a noisy machine
+    reps = 3
     t_full = min(full_init_load() for _ in range(reps))
 
     out = {"model_bytes": total, "full_init_s": t_full, "tiers": {}}
@@ -164,6 +175,88 @@ def bench_host_pressure(smoke: bool) -> dict:
              f"store={stats.bytes_store / 1e6:.1f}MB"
              f";host={stats.bytes_host_hit / 1e6:.1f}MB"
              f";modeled_store_s={modeled:.3f}")
+    return out
+
+
+# ------------------------------------------------------ prefetch-on-affinity
+def bench_prefetch(smoke: bool) -> dict:
+    """Prefetch on/off x cache-pressure sweep (DESIGN.md §12).
+
+    For each host-cache cap, the model's device copies are dropped and the
+    host tier LRU-spills down to the cap; the cold load must promote the
+    spilled bytes at `store_bw`.  The unhinted load pays that read inline;
+    the hinted load issued `Engine.prefetch` a lead window earlier (both
+    variants sleep the same window, so the comparison is what the window is
+    SPENT on).  Store-tier read traffic must be byte-identical — prefetch
+    overlaps the read, it never avoids it — while wall time at every
+    pressure point is no worse, and strictly better wherever bytes spill.
+    """
+    import time as _t
+
+    from repro.configs import all_configs
+    from repro.serving.engine import Engine
+
+    cfg = all_configs()["llama3.2-1b"].smoke()
+    dims = dict(num_layers=4, d_model=512, d_ff=1408, vocab_size=4096) if smoke \
+        else dict(num_layers=4, d_model=1024, d_ff=2816, vocab_size=8192)
+    cfg = dataclasses.replace(cfg, **dims)
+    reps = 3 if smoke else 5
+
+    probe = Engine(1 << 30)
+    probe.register("m", cfg)
+    total = probe.load("m").bytes_total
+    store_bw = total * 4.0  # full promotion budgets 0.25 s at any scale
+    # hint -> load window (the queueing + init a placement hint overlaps):
+    # sized so the 50% cap's read hides completely while the 25% cap's only
+    # partially fits — the sweep shows both full and clipped overlap
+    lead_s = 0.15
+    del probe
+
+    out = {"model_bytes": total, "store_bw": store_bw, "lead_s": lead_s,
+           "caps": {}}
+    for frac in (1.0, 0.5, 0.25):
+        eng = Engine(1 << 30, host_cache_bytes=int(frac * total),
+                     store_bw=store_bw)
+        eng.register("m", cfg)
+        eng.load("m")  # cold init fills the (pinned) host tier
+
+        def cold_load(prefetch: bool):
+            eng.drop_device_copies("m")  # unpin -> LRU spill down to the cap
+            reads0 = eng.persistent_store.bytes_read
+            if prefetch:
+                eng.prefetch("m")
+            _t.sleep(lead_s)  # both variants wait out the same window
+            t0 = _t.perf_counter()
+            eng.load("m")
+            wall = _t.perf_counter() - t0
+            return wall, eng.persistent_store.bytes_read - reads0, eng.last_load
+
+        walls = {True: [], False: []}
+        reads = {True: None, False: None}
+        stats = {True: None, False: None}
+        for _ in range(reps):  # interleave so drift hits both variants alike
+            for pf in (False, True):
+                w, r, s = cold_load(pf)
+                walls[pf].append(w)
+                reads[pf], stats[pf] = r, s
+        wall_off, wall_on = min(walls[False]), min(walls[True])
+        s_on = stats[True]
+        assert s_on.leaves_materialized == 0, "prefetch sweep re-ran init_fn"
+        # overlap, not avoidance: both variants read the same store bytes
+        assert reads[True] == reads[False], (reads[True], reads[False])
+        assert s_on.bytes_store + s_on.bytes_prefetched == reads[True]
+        eng.close()  # stop the hint worker: engines must not outlive the cap
+        out["caps"][f"{frac:.0%}"] = {
+            "cap_bytes": int(frac * total),
+            "wall_s_noprefetch": wall_off, "wall_s_prefetch": wall_on,
+            "bytes_store_read": reads[True],
+            "bytes_prefetched": s_on.bytes_prefetched,
+            "bytes_store_inline": s_on.bytes_store,
+            "prefetch_wait_s": s_on.prefetch_wait_seconds,
+        }
+        emit(f"fig15.prefetch.cap{frac:.0%}", wall_on * 1e6,
+             f"noprefetch_s={wall_off:.3f};store={reads[True] / 1e6:.1f}MB"
+             f";hidden={s_on.bytes_prefetched / 1e6:.1f}MB")
     return out
 
 
@@ -270,9 +363,18 @@ def bench_sim(smoke: bool) -> dict:
 
 # ---------------------------------------------------------------------- main
 def run(*, smoke: bool = False, out: str = "BENCH_fastpath.json") -> dict:
-    results = {"smoke": smoke,
+    import os
+    import platform
+
+    # coarse environment key: absolute rates (steps/sec, ev/s) are only
+    # comparable within the same environment class; scripts/check_bench.py
+    # gates them same-env-only while machine-relative ratios gate everywhere
+    env = (f"{platform.system()}-{platform.machine()}"
+           f"-{'ci' if os.environ.get('CI') else 'local'}")
+    results = {"smoke": smoke, "env": env,
                "load": bench_load(smoke)}
     results["host_pressure"] = bench_host_pressure(smoke)
+    results["prefetch"] = bench_prefetch(smoke)
     results["decode"] = bench_decode(smoke)
     results["sim"] = bench_sim(smoke)
     # acceptance floors (relaxed at smoke scale where runs are noise-bound)
@@ -299,10 +401,37 @@ def run(*, smoke: bool = False, out: str = "BENCH_fastpath.json") -> dict:
             f"{name}: store tier not priced at store_bw"
     assert caps["25%"]["bytes_store"] > caps["50%"]["bytes_store"]
     assert caps["25%"]["fast_s"] > caps["100%"]["fast_s"]
+    # prefetch acceptance (DESIGN.md §12): at every cache-pressure point the
+    # hinted cold load is no slower (tiny epsilon where both variants do
+    # identical work and the comparison is noise-bound), and wherever bytes
+    # actually spill the lead window must hide a measurable part of the
+    # store read.  Store-tier reads were asserted byte-identical inside
+    # bench_prefetch — overlap, never avoidance.
+    pf = results["prefetch"]["caps"]
+    for name, c in pf.items():
+        assert c["wall_s_prefetch"] <= c["wall_s_noprefetch"] \
+            + max(0.10 * c["wall_s_noprefetch"], 2e-3), \
+            f"prefetch slower at cap {name}: {c}"
+    for name in ("50%", "25%"):
+        c = pf[name]
+        assert c["bytes_prefetched"] > 0, f"{name}: hint promoted nothing"
+        assert c["wall_s_prefetch"] < c["wall_s_noprefetch"], \
+            f"{name}: overlap bought no wall time: {c}"
     if out:
+        # perf trajectory: BENCH_fastpath.json accumulates one entry per
+        # run (legacy single-dict files become the first entry), so
+        # scripts/check_bench.py can gate regressions against the previous
+        # entry instead of a human eyeballing the numbers
+        from benchmarks.common import load_bench_entries
+
+        try:
+            history = load_bench_entries(out)
+        except (FileNotFoundError, json.JSONDecodeError):
+            history = []
+        history.append(results)
         with open(out, "w") as f:
-            json.dump(results, f, indent=2)
-        emit("fig15.json", 0.0, f"written={out}")
+            json.dump({"entries": history[-40:]}, f, indent=2)
+        emit("fig15.json", 0.0, f"written={out};entries={len(history)}")
     return results
 
 

@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Bench-regression gate: fail when a BENCH_fastpath.json entry regresses
+more than THRESHOLD (default 20%) against the previous comparable entry.
+
+`benchmarks/fig15_fastpath.py` appends one entry per run ({"entries": [...]}
+— legacy single-dict files count as one entry).  This script compares the
+newest entry against the most recent OLDER entry with the same `smoke`
+flag (smoke and full runs are not comparable), on the metrics the ROADMAP
+commits to keeping green and monotone:
+
+  * load-path speedup vs full init at 0/50/90% reuse
+  * fused decode steps/sec
+  * indexed-pool simulator events/sec
+
+Improvements always pass; a single entry (nothing to compare) passes.
+Threshold override: --threshold or BENCH_REGRESSION_THRESHOLD (fraction,
+e.g. 0.2).  Exit code 1 on any regression — wired into
+`scripts/ci.sh bench-smoke` and .github/workflows/ci.yml so the gate runs
+on every push, not just when someone remembers to look.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from benchmarks.common import load_bench_entries  # noqa: E402
+
+
+def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
+    """Higher-is-better metrics to gate.  Tolerant of older entries that
+    predate a section (missing metrics are skipped, not failed).
+
+    Machine-relative ratios (load speedups vs the same run's full-init
+    baseline) are comparable across machines and always gate.  Absolute
+    rates (decode steps/sec, sim ev/s) only mean something within one
+    environment class — `absolute=False` drops them, so a slower CI runner
+    comparing against a dev-box entry cannot go permanently red."""
+    out: dict[str, float] = {}
+    load = entry.get("load", {})
+    for tier, row in load.get("tiers", {}).items():
+        if "speedup_vs_full_init" in row:
+            out[f"load.speedup.reuse{tier}"] = row["speedup_vs_full_init"]
+    if absolute:
+        if "decode" in entry:
+            out["decode.fused_steps_per_s"] = \
+                entry["decode"]["fused_steps_per_s"]
+        if "sim" in entry:
+            out["sim.indexed_events_per_s"] = \
+                entry["sim"]["indexed"]["events_per_s"]
+    return out
+
+
+def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
+    """Return regression messages (empty = pass)."""
+    # absolute rates gate only when both entries ran in the same
+    # environment class; a pre-stamp entry's machine is unknown, so it is
+    # treated as a different environment (ratios still gate)
+    same_env = prev.get("env") is not None \
+        and prev.get("env") == cur.get("env")
+    pm = metrics_of(prev, absolute=same_env)
+    cm = metrics_of(cur, absolute=same_env)
+    if not same_env:
+        print(f"  (env {prev.get('env')} -> {cur.get('env')}: "
+              "absolute-rate metrics skipped, ratios only)")
+    failures = []
+    for name in sorted(pm.keys() & cm.keys()):
+        before, after = pm[name], cm[name]
+        if before <= 0:
+            continue
+        drop = 1.0 - after / before
+        status = "REGRESSED" if drop > threshold else "ok"
+        print(f"  {name}: {before:.2f} -> {after:.2f} "
+              f"({-drop:+.1%}) [{status}]")
+        if drop > threshold:
+            failures.append(f"{name} regressed {drop:.1%} "
+                            f"({before:.2f} -> {after:.2f})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="BENCH_fastpath.json")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_THRESHOLD", "0.20")),
+                    help="max allowed fractional drop per metric")
+    args = ap.parse_args()
+
+    try:
+        entries = load_bench_entries(args.path)
+    except FileNotFoundError:
+        print(f"check_bench: {args.path} not found — nothing to gate")
+        return 0
+    if not entries:
+        print("check_bench: no entries — nothing to gate")
+        return 0
+    cur = entries[-1]
+    prev = next((e for e in reversed(entries[:-1])
+                 if e.get("smoke") == cur.get("smoke")), None)
+    if prev is None:
+        print(f"check_bench: no previous smoke={cur.get('smoke')} entry — "
+              "first run passes")
+        return 0
+    threshold = args.threshold
+    if cur.get("smoke"):
+        # toy-scale timings are noise-bound (sub-ms loads, ~50 ms init
+        # baselines): observed run-to-run swing on a quiet machine exceeds
+        # 20%, so the smoke gate catches collapses (reintroduced init_fn
+        # calls, lost fusion), not scheduler jitter.  Full-scale entries
+        # keep the tight threshold.
+        threshold = max(threshold, float(os.environ.get(
+            "BENCH_SMOKE_REGRESSION_THRESHOLD", "0.5")))
+    print(f"check_bench: entry {len(entries)} vs previous comparable "
+          f"(threshold {threshold:.0%}"
+          f"{', smoke floor' if threshold != args.threshold else ''}):")
+    failures = compare(prev, cur, threshold)
+    if failures:
+        print("check_bench: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("check_bench: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,28 +5,43 @@
 # ElasticKV, scheduler, cluster sim).  The full tier-1 gate — including the
 # jax compile subprocess tests and kernel/model numerics — is
 # `make test` / `PYTHONPATH=src python -m pytest -x -q` (see ROADMAP.md).
+#
+# Modes (all used by .github/workflows/ci.yml):
+#   scripts/ci.sh              fast test subset (tests/fast_tests.txt)
+#   scripts/ci.sh lint         compileall + pyflakes (when available)
+#   scripts/ci.sh bench-smoke  fig15 at toy scale -> BENCH_fastpath.json,
+#                              then the scripts/check_bench.py regression
+#                              gate against the previous entry
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# `scripts/ci.sh bench-smoke` (= make bench-smoke): fig15 at toy scale,
-# emitting BENCH_fastpath.json so the perf trajectory records every run.
-if [[ "${1:-}" == "bench-smoke" ]]; then
+if [[ "${1:-}" == "lint" ]]; then
     shift
-    exec python -m benchmarks.fig15_fastpath --smoke \
-        --out BENCH_fastpath.json "$@"
+    python -m compileall -q src tests benchmarks scripts examples
+    if python -c "import pyflakes" 2>/dev/null; then
+        python -m pyflakes src tests benchmarks scripts examples
+    else
+        echo "ci.sh lint: pyflakes not installed, compileall only"
+    fi
+    exit 0
 fi
 
-exec python -m pytest -q \
-    tests/test_allocator.py \
-    tests/test_regions.py \
-    tests/test_elastic_kv.py \
-    tests/test_elastic_kv_properties.py \
-    tests/test_host_store_properties.py \
-    tests/test_reuse_store.py \
-    tests/test_scheduler_cluster.py \
-    tests/test_concurrency.py \
-    tests/test_cluster_golden.py \
-    tests/test_configs.py \
-    "$@"
+if [[ "${1:-}" == "bench-smoke" ]]; then
+    # fixed output path: the regression gate must read the file this run
+    # wrote (no pass-through flags — --out drift would gate stale data)
+    python -m benchmarks.fig15_fastpath --smoke --out BENCH_fastpath.json
+    exec python scripts/check_bench.py BENCH_fastpath.json
+fi
+
+# The fast subset lives in tests/fast_tests.txt — ONE place, asserted
+# against the tests/ directory by test_configs.py so it cannot drift when
+# a test module is added (the old hand-maintained list here silently did).
+mapfile -t FAST < <(grep -Ev '^\s*(#|$)' tests/fast_tests.txt)
+if [[ ${#FAST[@]} -eq 0 ]]; then
+    # a missing/empty list must FAIL, not silently run the whole slow suite
+    echo "ci.sh: tests/fast_tests.txt missing or empty" >&2
+    exit 1
+fi
+exec python -m pytest -q "${FAST[@]}" "$@"

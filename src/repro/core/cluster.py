@@ -71,6 +71,19 @@ class SimPolicy:
     # misses beyond it are promoted from the persistent store at
     # min(h2d_bw, store_bw), and affinity t_load scores see the split.
     host_cache_bytes: Optional[float] = None
+    # ---- prefetch-on-affinity-hint (DESIGN.md §12): when placement picks a
+    # node, its host tier starts promoting the model's store-resident
+    # tensors immediately, so the store read overlaps worker-queue wait +
+    # Init instead of extending the load (overlap-aware Eq. 3 pricing; tier
+    # byte counters unchanged).  Needs host_cache_bytes.
+    prefetch: bool = False
+    # hints unconsumed after this long are dead at the cache (their
+    # placement was dropped or served warm) — a later unrelated load must
+    # not inherit their overlap credit
+    prefetch_ttl: float = 60.0
+    # host-tier aging: tensors idle in a node's host cache longer than this
+    # TTL are spilled (keep-alive expiry / co-tenant churn).  None = static.
+    host_keep_alive: Optional[float] = None
 
 
 POLICIES = {
@@ -93,6 +106,13 @@ POLICIES = {
                               reuse=True, odkv=True, affinity=True,
                               concurrent=True, queue_aware=True,
                               host_cache_bytes=64e9),
+    # tiered system + prefetch-on-affinity-hint: placement starts the
+    # store->host promotion, so cold loads pay only the part of the store
+    # read the queue+init window could not hide (DESIGN.md §12)
+    "tangram-prefetch": SimPolicy("tangram-prefetch", criu=True, medusa=True,
+                                  reuse=True, odkv=True, affinity=True,
+                                  concurrent=True, queue_aware=True,
+                                  host_cache_bytes=64e9, prefetch=True),
 }
 
 
@@ -109,6 +129,8 @@ class RequestResult:
     load_s: float = 0.0
     bytes_from_host: int = 0  # tier split of bytes_transferred
     bytes_from_store: int = 0
+    prefetched: bool = False  # a placement-time prefetch hint covered the load
+    bytes_store_hidden: int = 0  # store bytes hidden by the overlap window
     merge_s: float = 0.0
     profile_s: float = 0.0
     prefill_s: float = 0.0
@@ -177,7 +199,9 @@ class SimWorker:
         # bounded per-node host Model Store tier (None = legacy unbounded)
         self.host_cache: Optional[SimHostCache] = None
         if policy.host_cache_bytes is not None:
-            self.host_cache = SimHostCache(int(policy.host_cache_bytes))
+            self.host_cache = SimHostCache(int(policy.host_cache_bytes),
+                                           keep_alive_s=policy.host_keep_alive,
+                                           hint_ttl_s=policy.prefetch_ttl)
             self.store.host_cache = self.host_cache
         self.kv_rate: dict[str, int] = {}  # model_id -> kv_bytes_per_token
         self.slots = policy.max_concurrent if policy.concurrent else 1
@@ -253,6 +277,15 @@ class SimWorker:
         if self.host_cache is None:
             return sum(r.nbytes for r in misses)
         return self.host_cache.host_resident_bytes(misses)
+
+    def hint_prefetch(self, model_id: str, records: Sequence[TensorRecord],
+                      now: float):
+        """Prefetch-on-affinity-hint (DESIGN.md §12): the scheduler placed a
+        request here — start promoting the model's store-resident tensors
+        into this node's host tier NOW.  Gated on the policy so unhinted
+        baselines (tangram-tier and below) keep their exact timings."""
+        if self.policy.prefetch:
+            self.store.hint_prefetch(model_id, records, now)
 
     def expected_queue_delay(self, now: float) -> float:
         """Expected queueing seconds a new instance placement sees here:
@@ -553,15 +586,20 @@ class ClusterSim:
                                                     req.batch_size)
         else:
             res.init_s = self.costs.init_time(model.bytes)
+            # Init is the hideable window between landing here and the load's
+            # own h2d starting: a pending prefetch hint's store read keeps
+            # running through it (plus the hint->now worker-queue elapsed,
+            # which the host cache tracks itself)
             try:
                 rep = w.store.load_model(req.model_id, self.records[req.model_id],
-                                         now=now)
+                                         now=now, overlap_s=res.init_s)
             except AllocationError:
                 # model cannot fit: drop idle co-tenants then retry once
                 w.terminate_idle()
                 try:
                     rep = w.store.load_model(req.model_id,
-                                             self.records[req.model_id], now=now)
+                                             self.records[req.model_id],
+                                             now=now, overlap_s=res.init_s)
                 except AllocationError:
                     if not self.policy.concurrent:
                         raise
@@ -577,6 +615,8 @@ class ClusterSim:
             res.bytes_transferred = rep.bytes_transferred
             res.bytes_from_host = rep.bytes_from_host
             res.bytes_from_store = rep.bytes_from_store
+            res.prefetched = rep.prefetched
+            res.bytes_store_hidden = rep.bytes_store_hidden
             res.bytes_merged = rep.bytes_merged
             res.profile_s = self.costs.profile_time(model.bytes)
             res.prefill_s = self.costs.prefill_time(model.params, req.prompt_tokens,
@@ -699,7 +739,10 @@ class ClusterSim:
                 if w.host_cache is not None:
                     # the node died: its host cache dies with it; recovery
                     # rejoins with a cold host tier backed by the store
-                    w.host_cache = SimHostCache(int(self.policy.host_cache_bytes))
+                    w.host_cache = SimHostCache(
+                        int(self.policy.host_cache_bytes),
+                        keep_alive_s=self.policy.host_keep_alive,
+                        hint_ttl_s=self.policy.prefetch_ttl)
                     w.store.host_cache = w.host_cache
                 w.failed = True
                 # re-queue whatever the node had pending (its in-flight
@@ -740,6 +783,8 @@ def summarize(results: Sequence[RequestResult]) -> dict[str, float]:
         "joined_frac": sum(r.joined for r in results) / len(results),
         "reuse_frac_mean": st.fmean(r.reuse_fraction for r in results),
         "bytes_from_store_total": sum(r.bytes_from_store for r in results),
+        "bytes_store_hidden_total": sum(r.bytes_store_hidden for r in results),
+        "prefetched_frac": sum(r.prefetched for r in results) / len(results),
         "makespan": makespan,
         "throughput_rps": len(results) / makespan if makespan > 0 else 0.0,
     }

@@ -12,6 +12,7 @@ All times in seconds, sizes in bytes.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -75,6 +76,40 @@ class PhaseCosts:
         slower medium wins (`min(h2d_bw, store_bw)`)."""
         slow = min(self.hw.h2d_bw, self.hw.store_bw)
         return host_bytes / self.hw.h2d_bw + store_bytes / slow
+
+    # -------------------------------------------- prefetch overlap (§12)
+    def prefetch_hidden_bytes(self, host_bytes: float, store_bytes: float,
+                              overlap_s: float) -> float:
+        """Store-tier bytes whose promotion completes before the load would
+        reach them (DESIGN.md §12).  The store read starts at hint time and
+        keeps running for `overlap_s` wall seconds (queueing at the worker +
+        Init) plus the time the load spends streaming host-resident bytes —
+        every byte promoted inside that window behaves like a host hit."""
+        window = max(0.0, overlap_s) + host_bytes / self.hw.h2d_bw
+        return min(store_bytes, window * self.hw.store_bw)
+
+    def load_time_prefetched(self, host_bytes: float, store_bytes: float,
+                             overlap_s: float,
+                             hidden_cap: Optional[float] = None) -> float:
+        """Overlap-aware Eq. 3 (DESIGN.md §12): a prefetch hint issued
+        `overlap_s` seconds of hideable work before the load's own h2d
+        begins clips the store read by that window.  Hidden bytes stream at
+        `h2d_bw` (they are host-resident when the load reaches them); the
+        remainder still pays the overlapped `min(h2d_bw, store_bw)`
+        pipeline.  The hinted read ALSO overlaps the h2d of host-resident
+        bytes (the serial tiered pipeline never does), so with host bytes
+        present this prices below `load_time_tiered` even at overlap 0;
+        equality holds only at (host_bytes=0, overlap 0), and the price
+        floors at the all-host load as the window grows.  `hidden_cap`
+        bounds the hidden bytes to what the hint's snapshot actually
+        covered (a stale hint cannot hide tensors that spilled after it
+        fired)."""
+        hidden = self.prefetch_hidden_bytes(host_bytes, store_bytes, overlap_s)
+        if hidden_cap is not None:
+            hidden = min(hidden, max(0.0, hidden_cap))
+        slow = min(self.hw.h2d_bw, self.hw.store_bw)
+        return ((host_bytes + hidden) / self.hw.h2d_bw
+                + (store_bytes - hidden) / slow)
 
     def merge_time(self, moved_bytes: float) -> float:
         return moved_bytes / self.hw.d2d_bw

@@ -52,6 +52,12 @@ class LoadReport:
     # tier modeled, the legacy in_host_cache flag assigns all bytes to one.
     bytes_from_host: int = 0
     bytes_from_store: int = 0
+    # prefetch overlap (DESIGN.md §12): store-tier bytes whose promotion was
+    # hidden behind the hint->load window.  They still count in
+    # bytes_from_store (the store read happened — overlap, not avoidance);
+    # load_seconds prices them at h2d_bw instead of the store pipeline.
+    bytes_store_hidden: int = 0
+    prefetched: bool = False  # a prefetch hint covered this load
     bytes_evicted: int = 0
     bytes_merged: int = 0  # device-side compaction copies
     tensors_hit: int = 0
@@ -179,9 +185,26 @@ class ReuseStore:
         misses = [r for r in records if r.fingerprint not in self.tensor_map]
         return hits, misses
 
+    def hint_prefetch(self, model_id: str, records: Sequence[TensorRecord],
+                      now: float):
+        """Affinity hint (DESIGN.md §12): placement chose this device, so the
+        node starts promoting the model's store-resident tensors into its
+        host tier NOW — the read overlaps queueing/init instead of extending
+        the load.  No-op without a modeled host cache."""
+        if self.host_cache is not None:
+            misses = [r for r in records
+                      if r.fingerprint not in self.tensor_map]
+            self.host_cache.prefetch(model_id, misses, now)
+
     def load_model(self, model_id: str, records: Sequence[TensorRecord], *,
-                   now: float = 0.0, in_host_cache: bool = True) -> LoadReport:
-        """Load a model: reuse hits, evict/pack/transfer misses.  §3.1 + §3.2."""
+                   now: float = 0.0, in_host_cache: bool = True,
+                   overlap_s: float = 0.0) -> LoadReport:
+        """Load a model: reuse hits, evict/pack/transfer misses.  §3.1 + §3.2.
+
+        `overlap_s`: hideable wall seconds between the load landing and its
+        own h2d starting (the Init phase, for the simulator) — a pending
+        prefetch hint adds its hint->load elapsed on top and clips the
+        modeled store time (`PhaseCosts.load_time_prefetched`)."""
         t0 = _time.perf_counter()
         rep = LoadReport(model_id=model_id,
                          bytes_total=sum(r.nbytes for r in records))
@@ -211,12 +234,39 @@ class ReuseStore:
         self.activate(model_id)
         rep.compute_seconds = _time.perf_counter() - t0
         if self.host_cache is not None:
+            # the hint must be consumed BEFORE plan_fetch admits this
+            # load's store misses — `covered` is the bytes the background
+            # read could actually have promoted (absent at hint time AND
+            # still absent now)
+            taken = self.host_cache.take_prefetch(model_id, now, misses)
             # tier-aware Eq. 3: the simulated host tier resolves each missed
             # tensor, admitting store-tier fetches (and LRU-spilling others)
             rep.bytes_from_host, rep.bytes_from_store = \
-                self.host_cache.plan_fetch(misses)
-            rep.load_seconds = self.costs.load_time_tiered(
-                rep.bytes_from_host, rep.bytes_from_store)
+                self.host_cache.plan_fetch(misses, now=now)
+            if taken is None or not misses or not taken[1]:
+                # the hint is consumed either way, but a load it covered no
+                # bytes of (nothing moved, or the snapshot held none of the
+                # misses) was not helped — prefetched_frac must count only
+                # loads the overlap could actually touch
+                rep.load_seconds = self.costs.load_time_tiered(
+                    rep.bytes_from_host, rep.bytes_from_store)
+            else:
+                # overlap-aware pricing: the store read started at hint time
+                # and keeps running through the worker-queue wait (elapsed)
+                # and the Init phase (overlap_s) — tier byte counters are
+                # untouched, only the wall time shrinks, and only for the
+                # bytes the hint's snapshot covered (a stale hint cannot
+                # hide tensors that spilled after it fired)
+                elapsed, covered = taken
+                window = elapsed + overlap_s
+                rep.prefetched = True
+                rep.bytes_store_hidden = int(min(
+                    self.costs.prefetch_hidden_bytes(
+                        rep.bytes_from_host, rep.bytes_from_store, window),
+                    covered))
+                rep.load_seconds = self.costs.load_time_prefetched(
+                    rep.bytes_from_host, rep.bytes_from_store, window,
+                    hidden_cap=covered)
         else:
             if in_host_cache:
                 rep.bytes_from_host = rep.bytes_transferred

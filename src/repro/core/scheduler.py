@@ -41,6 +41,10 @@ class DeviceView(Protocol):
     # node's HOST cache tier holds — misses beyond these must be promoted
     # from the persistent store at min(h2d_bw, store_bw).
     # def host_resident_bytes(self, records) -> int: ...
+    # Optional (prefetch pipeline, DESIGN.md §12): placement chose this
+    # device — start promoting the model's store-resident tensors now so
+    # the read overlaps queueing/init instead of extending the load.
+    # def hint_prefetch(self, model_id, records, now) -> None: ...
 
 
 @dataclass
@@ -96,6 +100,14 @@ def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]
         else:
             schedules.append(ScheduleEntry(model_id, best.device_id, best_lat, best_reuse))
             avail.remove(best)
+            # prefetch-on-affinity-hint (DESIGN.md §12): placement is the
+            # earliest moment the target node is known, so the store->host
+            # promotion starts HERE and overlaps queueing/init/h2d instead
+            # of extending the load.  Optional protocol method — devices
+            # without a prefetch pipeline (or with it disabled) ignore it.
+            hint = getattr(best, "hint_prefetch", None)
+            if hint is not None:
+                hint(model_id, records, now)
     return schedules, queued
 
 

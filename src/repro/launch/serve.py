@@ -30,10 +30,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=16)
     ap.add_argument("--pool-mb", type=int, default=512)
+    ap.add_argument("--host-cache-mb", type=int, default=None,
+                    help="bound the host Model Store tier (spills beyond)")
+    ap.add_argument("--no-prefetch", dest="prefetch", action="store_false",
+                    help="disable the next-request prefetch hint (§12)")
     args = ap.parse_args()
 
     names = args.models.split(",")
-    engine = Engine(args.pool_mb * 1024 * 1024)
+    engine = Engine(args.pool_mb * 1024 * 1024,
+                    host_cache_bytes=(None if args.host_cache_mb is None
+                                      else args.host_cache_mb * 1024 * 1024))
     cfgs = {}
     for n in names:
         cfg = get_config(n)
@@ -43,10 +49,16 @@ def main():
         engine.register(n, cfg)
 
     import dataclasses
-    for i, name in zip(range(args.requests), itertools.cycle(names)):
+    seq = list(itertools.islice(itertools.cycle(names), args.requests))
+    for i, name in enumerate(seq):
         t0 = time.time()
         rep = engine.load(name)
         load_s = time.time() - t0
+        if args.prefetch and i + 1 < len(seq) and seq[i + 1] != name:
+            # the launcher IS the scheduler here: the next placement is
+            # already known, so hint it now — its store-tier tensors promote
+            # in the background while this request prefills/decodes (§12)
+            engine.prefetch(seq[i + 1])
         inst = engine.start_instance(name, num_pages=128)
         model = build_model(cfgs[name])
         shape = dataclasses.replace(SHAPES["train_4k"], seq_len=args.prompt_len,
@@ -63,11 +75,14 @@ def main():
             toks.append(int(tok[0]))
         decode_s = time.time() - t2
         inst.finish()
+        stats = engine.last_load
+        pf = (f" prefetched={stats.bytes_prefetched/1e6:.1f}MB"
+              if stats.bytes_prefetched else "")
         print(f"req {i}: {name:16s} reuse={rep.reuse_fraction:4.0%} "
               f"transferred={rep.bytes_transferred/1e6:6.1f}MB "
               f"(modeled load {rep.load_seconds*1e3:6.1f}ms, wall {load_s:.2f}s) "
               f"prefill {prefill_s:.2f}s decode {decode_s/args.gen_tokens*1e3:.0f}ms/tok "
-              f"pool_free={engine.store.free_bytes()/1e6:.0f}MB")
+              f"pool_free={engine.store.free_bytes()/1e6:.0f}MB{pf}")
 
 
 if __name__ == "__main__":

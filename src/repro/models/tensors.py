@@ -152,16 +152,24 @@ class HostTensorStore:
     """
 
     def __init__(self, capacity_bytes: Optional[int] = None, *,
-                 spill: Optional[PersistentStore] = None):
+                 spill: Optional[PersistentStore] = None,
+                 keep_alive_s: Optional[float] = None):
         self._bufs: "OrderedDict[str, np.ndarray]" = OrderedDict()  # LRU order
         self.capacity_bytes = capacity_bytes
         self.spill = spill if spill is not None else PersistentStore()
+        # keep-alive aging (DESIGN.md §12): unpinned tensors idle longer than
+        # this TTL are spilled on the next age() sweep, so long-lived hosts
+        # face realistic churn instead of a cache that only shrinks under cap
+        # pressure.  None disables aging (no timestamps kept).
+        self.keep_alive_s = keep_alive_s
+        self._last_access: dict[str, float] = {}  # fp -> monotonic seconds
         self._pins: dict[str, int] = {}  # fingerprint -> refcount
         self._nbytes = 0  # incremental: sum of resident buffer bytes
         self._pinned_nbytes = 0  # incremental: resident AND pinned bytes
         self.leaves_stored = 0  # cumulative leaves materialized into the store
         self.evictions = 0  # cumulative host -> store spills
         self.promotions = 0  # cumulative store -> host promotes
+        self.expirations = 0  # cumulative keep-alive-aged spills
 
     def __contains__(self, fingerprint: str) -> bool:
         return fingerprint in self._bufs
@@ -178,7 +186,28 @@ class HostTensorStore:
         use `fetch` to promote from the spill tier."""
         buf = self._bufs[fingerprint]
         self._bufs.move_to_end(fingerprint)
+        self._touch(fingerprint)
         return buf
+
+    def _touch(self, fingerprint: str):
+        if self.keep_alive_s is not None:
+            self._last_access[fingerprint] = _time.monotonic()
+
+    def age(self, now: Optional[float] = None) -> int:
+        """Keep-alive sweep (DESIGN.md §12): spill unpinned host-resident
+        tensors idle longer than `keep_alive_s`.  `now` overrides the
+        monotonic clock for deterministic tests.  Returns spill count."""
+        if self.keep_alive_s is None:
+            return 0
+        if now is None:
+            now = _time.monotonic()
+        expired = [fp for fp in self._bufs
+                   if (now - self._last_access.get(fp, now) > self.keep_alive_s
+                       and not self.pinned(fp))]
+        for fp in expired:
+            self._spill_one(fp)
+            self.expirations += 1
+        return len(expired)
 
     def fetch(self, fingerprint: str) -> "np.ndarray":
         """Resolve from the hierarchy: host hit is a dict lookup; a spill-tier
@@ -246,6 +275,7 @@ class HostTensorStore:
 
     def _spill_one(self, fingerprint: str):
         buf = self._bufs.pop(fingerprint)
+        self._last_access.pop(fingerprint, None)
         self._nbytes -= buf.nbytes
         self.spill.put(fingerprint, buf)
         self.evictions += 1
@@ -267,6 +297,7 @@ class HostTensorStore:
     def _admit(self, fingerprint: str, arr: "np.ndarray"):
         self._bufs[fingerprint] = arr
         self._bufs.move_to_end(fingerprint)
+        self._touch(fingerprint)
         self._nbytes += arr.nbytes
         if self.pinned(fingerprint):
             self._pinned_nbytes += arr.nbytes

@@ -31,10 +31,11 @@ Architecture support:
 from __future__ import annotations
 
 import itertools
+import threading
 import time as _time
 import zlib
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Optional, Sequence
 
@@ -83,6 +84,13 @@ class DataLoadStats:
     tensors_store: int = 0  # store tier: promote (store_bw) then h2d
     bytes_store: int = 0
     store_seconds: float = 0.0  # store -> host promotion wall time
+    # prefetch pipeline (DESIGN.md §12): promotions a joined hint already
+    # paid for before this load reached the store tier.  They surface as
+    # host hits above; total store traffic for the load is therefore
+    # bytes_store + bytes_prefetched (overlap, not avoidance).
+    tensors_prefetched: int = 0
+    bytes_prefetched: int = 0
+    prefetch_wait_seconds: float = 0.0  # time blocked joining the hint
     tensors_h2d: int = 0
     bytes_h2d: int = 0
     chunks_h2d: int = 0
@@ -138,6 +146,144 @@ class ChunkedTransfer:
                 stats.chunks_h2d += nchunks
         jax.block_until_ready(out)
         return out
+
+
+@dataclass(eq=False)  # identity semantics: the queue holds THIS job
+class PrefetchJob:
+    """One hinted model's store->host promotion batch."""
+
+    model_id: str
+    fingerprints: list[str]
+    done: threading.Event = field(default_factory=threading.Event)
+    owns_pin: bool = False  # the hint (not a load) created the model pin
+    promoted: list = field(default_factory=list)  # (fp, nbytes) actually read
+    tensors_promoted: int = 0
+    bytes_promoted: int = 0
+    cancelled: bool = False
+
+
+class Prefetcher:
+    """Background store->host promotion pipeline (DESIGN.md §12).
+
+    One daemon worker per engine (spawned lazily on the first hint) drains a
+    FIFO of per-model `PrefetchJob`s against the engine's tiered model
+    store, so the store_bw-limited read runs DURING queueing/init/h2d of
+    already-resident tensors instead of extending `Engine.load`.
+
+    Safety contract: the hinted model is refcount-pinned in the host store
+    BEFORE its job is enqueued (promoted bytes cannot be LRU-spilled or aged
+    out from under the coming load), and every store mutation happens under
+    the engine's store lock at per-tensor granularity — a concurrent
+    `Engine.load` of another model interleaves between tensor promotions,
+    never mid-promotion.  `Engine.load` JOINS an in-flight job (waits on its
+    event and accounts its bytes) instead of re-reading the store tier.
+    """
+
+    def __init__(self, engine: "Engine"):
+        self.engine = engine
+        self._cv = threading.Condition()
+        self._queue: deque[PrefetchJob] = deque()
+        self._jobs: dict[str, PrefetchJob] = {}  # model_id -> in-flight job
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self.hints = 0  # cumulative prefetch() calls
+        self.joins = 0  # loads that joined an in-flight/completed job
+        self.bytes_promoted = 0  # cumulative bytes moved store -> host
+        self.errors = 0  # promotions that raised (job degraded to inline)
+
+    def close(self):
+        """Stop the worker thread (idempotent).  Queued jobs complete their
+        events un-promoted so no joiner can hang; the thread releases its
+        engine reference — an engine that issued hints is collectable after
+        `Engine.close()`."""
+        with self._cv:
+            self._stop = True
+            for job in self._queue:
+                job.done.set()
+            self._queue.clear()
+            self._cv.notify_all()
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join(timeout=5.0)
+
+    def submit(self, model_id: str, fingerprints: Sequence[str],
+               owns_pin: bool) -> PrefetchJob:
+        """Enqueue a promotion job (collapses onto an in-flight job for the
+        same model — a duplicate hint must not double-read the store)."""
+        with self._cv:
+            self.hints += 1
+            prev = self._jobs.get(model_id)
+            if prev is not None and not prev.done.is_set():
+                return prev
+            if prev is not None:
+                # replacing a completed-but-never-joined job: its pin was
+                # never released, so ownership transfers to the new job
+                # (dropping it here would leak the pin forever)
+                owns_pin = owns_pin or prev.owns_pin
+            job = PrefetchJob(model_id, list(fingerprints), owns_pin=owns_pin)
+            self._jobs[model_id] = job
+            if not job.fingerprints or self._stop:
+                job.done.set()  # nothing store-resident (or closed): pin only
+                return job
+            self._queue.append(job)
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._run, daemon=True, name="tangram-prefetcher")
+                self._thread.start()
+            self._cv.notify()
+        return job
+
+    def take(self, model_id: str) -> Optional[PrefetchJob]:
+        """Claim the model's job for a joining load (deregisters it; the
+        caller waits on `job.done` and accounts its bytes).
+
+        A job the worker has not STARTED is withdrawn instead of waited on:
+        behind other models' throttled promotions in the FIFO, waiting
+        would serialize this load after reads it never asked for — the
+        unhinted inline path is never slower, so the load falls back to it
+        (head-of-line bypass; the hint's pin transfers either way)."""
+        with self._cv:
+            job = self._jobs.pop(model_id, None)
+            if job is not None and job in self._queue:
+                self._queue.remove(job)  # never started: nothing promoted
+                job.cancelled = True
+                job.done.set()
+            return job
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait()
+                if self._stop:
+                    return
+                job = self._queue.popleft()
+            eng = self.engine
+            try:
+                for fp in job.fingerprints:
+                    if job.cancelled or self._stop:
+                        break  # close() must quiesce mid-job, not just
+                        # drain the queue — no store mutations after it
+                    # per-tensor lock scope: the store_bw-throttled read
+                    # happens inside, so a concurrent load waits at most
+                    # one tensor
+                    with eng._store_lock:
+                        if (fp in eng.persistent_store
+                                and fp not in eng.host_store):
+                            arr = eng.host_store.fetch(fp)
+                            job.promoted.append((fp, arr.nbytes))
+                            job.tensors_promoted += 1
+                            job.bytes_promoted += arr.nbytes
+            except BaseException:
+                # a failed promotion must not kill the worker: un-promoted
+                # tensors are still store-resolvable, the joining load reads
+                # them inline, and later hints keep working
+                self.errors += 1
+            finally:
+                # the event MUST fire even if a promotion raises (a joining
+                # load would otherwise hang forever)
+                self.bytes_promoted += job.bytes_promoted
+                job.done.set()
 
 
 class SharedKVSlab:
@@ -201,7 +347,8 @@ class Engine:
                  block_tokens: int = 16, chunk_bytes: int = 16 << 20,
                  transfer_depth: int = 2,
                  host_cache_bytes: Optional[int] = None,
-                 store_bw: Optional[float] = None):
+                 store_bw: Optional[float] = None,
+                 host_keep_alive_s: Optional[float] = None):
         self.store = ReuseStore(capacity_bytes, costs or PhaseCosts(paper_l40()))
         self.block_tokens = block_tokens
         self.models: dict[str, RegisteredModel] = {}
@@ -209,8 +356,13 @@ class Engine:
         # middle, persistent-store spill below (store_bw-throttled reads)
         self.persistent_store = PersistentStore(store_bw=store_bw)
         self.host_store = HostTensorStore(host_cache_bytes,
-                                          spill=self.persistent_store)
+                                          spill=self.persistent_store,
+                                          keep_alive_s=host_keep_alive_s)
         self._host_pins: set[str] = set()  # model_ids holding host-tier pins
+        # guards every host/persistent-store mutation: Engine.load resolves
+        # tiers and the Prefetcher promotes under the same lock (DESIGN §12)
+        self._store_lock = threading.RLock()
+        self.prefetcher = Prefetcher(self)
         self._xfer = ChunkedTransfer(chunk_bytes=chunk_bytes,
                                      depth=transfer_depth)
         self._tensors: dict[str, jax.Array] = {}  # fingerprint -> live buffer
@@ -252,17 +404,44 @@ class Engine:
         The model's records are refcount-pinned in the host store for as
         long as it stays active, so LRU eviction can never race the
         in-flight `ChunkedTransfer` (or a co-loading model's spills).
+        A pending `prefetch` hint is JOINED (DESIGN.md §12): the load waits
+        for the in-flight promotion instead of re-reading the store, so the
+        tensors it covered resolve as host hits and only the un-hidden tail
+        of the store read shows up in wall time.
         """
         reg = self.models[model_id]
         report = self.store.load_model(model_id, reg.records, now=now)
         stats = DataLoadStats()
         t0 = _time.perf_counter()
-        was_pinned = model_id in self._host_pins
-        self._pin_model(model_id)  # eviction must not race this load
+        job = self.prefetcher.take(model_id)
+        if job is not None:
+            # join the in-flight hint instead of re-reading the store: the
+            # hint already pinned the model, so waiting BEFORE our own pin
+            # is safe and we block only for the part of the read the
+            # hint->load window did not hide (no lock contention with the
+            # worker's throttled per-tensor reads)
+            tw = _time.perf_counter()
+            job.done.wait()
+            stats.prefetch_wait_seconds = _time.perf_counter() - tw
+            with self._store_lock:
+                # credit only promotions STILL host-resident: a stale job
+                # (model released + re-spilled since it completed) must not
+                # count bytes this load will re-read inline as bytes_store
+                live = [(fp, n) for fp, n in job.promoted
+                        if fp in self.host_store]
+            stats.tensors_prefetched = len(live)
+            stats.bytes_prefetched = sum(n for _, n in live)
+            self.prefetcher.joins += 1
+        with self._store_lock:
+            self.host_store.age()  # keep-alive churn lands before resolution
+            was_pinned = model_id in self._host_pins
+            self._pin_model(model_id)  # eviction must not race this load
         try:
             self._load_tensors(reg, stats)
         except BaseException:
-            if not was_pinned:  # failed load must not leak pins forever
+            # failed load must not leak pins forever: drop our own pin, and
+            # a consumed hint's pin too (its job can no longer be cancelled)
+            if not was_pinned or (job is not None and job.owns_pin):
                 self._unpin_model(model_id)
             raise
         stats.total_seconds = _time.perf_counter() - t0
@@ -292,15 +471,18 @@ class Engine:
             else:
                 to_move.append(r)
         if to_move:
-            host_hits = [r for r in to_move if r.fingerprint in self.host_store]
-            spilled = [r for r in to_move
-                       if r.fingerprint not in self.host_store
-                       and r.fingerprint in self.persistent_store]
+            with self._store_lock:
+                host_hits = [r for r in to_move
+                             if r.fingerprint in self.host_store]
+                spilled = [r for r in to_move
+                           if r.fingerprint not in self.host_store
+                           and r.fingerprint in self.persistent_store]
             if len(host_hits) + len(spilled) < len(to_move):
                 tm = _time.perf_counter()
                 params = reg.init_fn()  # full materialization: once, ever
-                stats.leaves_materialized = self.host_store.put_tree(
-                    reg.records, params)
+                with self._store_lock:
+                    stats.leaves_materialized = self.host_store.put_tree(
+                        reg.records, params)
                 stats.init_seconds = _time.perf_counter() - tm
                 del params
             stats.tensors_host_hit = len(host_hits)
@@ -308,14 +490,16 @@ class Engine:
             if spilled:
                 ts = _time.perf_counter()
                 for r in spilled:  # store_bw-limited promotion, pinned above
-                    self.host_store.fetch(r.fingerprint)
+                    with self._store_lock:
+                        self.host_store.fetch(r.fingerprint)
                 stats.store_seconds = _time.perf_counter() - ts
                 stats.tensors_store = len(spilled)
                 stats.bytes_store = sum(r.nbytes for r in spilled)
             tt = _time.perf_counter()
-            moved = self._xfer.transfer(
-                [(r.fingerprint, self.host_store.get(r.fingerprint))
-                 for r in to_move], stats)
+            with self._store_lock:  # snapshot host buffers for the pipeline
+                items = [(r.fingerprint, self.host_store.get(r.fingerprint))
+                         for r in to_move]
+            moved = self._xfer.transfer(items, stats)
             stats.transfer_seconds = _time.perf_counter() - tt
             self._tensors.update(moved)
         if to_move or reg.model_id not in self._params_cache:
@@ -323,19 +507,66 @@ class Engine:
             self._params_cache[reg.model_id] = jax.tree.unflatten(
                 reg.treedef, [self._tensors[r.fingerprint] for r in reg.records])
 
-    def _pin_model(self, model_id: str):
-        if model_id in self._host_pins:
+    # -------------------------------------------------------------- prefetch
+    def prefetch(self, model_id: str) -> PrefetchJob:
+        """Affinity hint (DESIGN.md §12): the scheduler placed a request for
+        `model_id` here — start promoting its store-resident tensors into
+        the host tier NOW, so the store_bw read overlaps queueing/init/h2d
+        instead of extending the coming `Engine.load` (which joins the job).
+
+        The model's records are refcount-pinned immediately (host-resident
+        bytes survive cap pressure and keep-alive aging until the load
+        lands); the pin is released by the usual `release`/last
+        `finish_instance`, or by `cancel_prefetch` for an abandoned hint.
+        """
+        reg = self.models[model_id]
+        with self._store_lock:
+            self.host_store.age()  # expired entries are exactly what we fetch
+            owns_pin = model_id not in self._host_pins
+            self._pin_model(model_id)
+            spilled = [r.fingerprint for r in reg.records
+                       if r.fingerprint not in self._tensors  # device hit:
+                       # the load will never touch this tensor, don't read it
+                       and r.fingerprint not in self.host_store
+                       and r.fingerprint in self.persistent_store]
+        return self.prefetcher.submit(model_id, spilled, owns_pin)
+
+    def close(self):
+        """Release the engine's background resources (the prefetch worker).
+        Idempotent; an engine that issued hints holds a daemon thread that
+        references it, so long-lived processes churning engines should
+        close them."""
+        self.prefetcher.close()
+
+    def cancel_prefetch(self, model_id: str):
+        """Withdraw an abandoned hint: stop the in-flight promotion and drop
+        the hint's pin (no-op after a load already joined the job).  If a
+        load raced us to the model in the meantime (it is active in the
+        store), the pin now belongs to that load's lifecycle — keep it."""
+        job = self.prefetcher.take(model_id)
+        if job is None:
             return
-        self._host_pins.add(model_id)
-        for r in self.models[model_id].records:
-            self.host_store.pin(r.fingerprint)
+        job.cancelled = True
+        job.done.wait()  # the worker may be mid-tensor: let it finish cleanly
+        with self._store_lock:
+            if job.owns_pin and model_id not in self.store.active_models:
+                self._unpin_model(model_id)
+
+    def _pin_model(self, model_id: str):
+        with self._store_lock:
+            if model_id in self._host_pins:
+                return
+            self._host_pins.add(model_id)
+            for r in self.models[model_id].records:
+                self.host_store.pin(r.fingerprint)
 
     def _unpin_model(self, model_id: str):
-        if model_id not in self._host_pins:
-            return
-        self._host_pins.discard(model_id)
-        for r in self.models[model_id].records:
-            self.host_store.unpin(r.fingerprint)
+        with self._store_lock:
+            if model_id not in self._host_pins:
+                return
+            self._host_pins.discard(model_id)
+            for r in self.models[model_id].records:
+                self.host_store.unpin(r.fingerprint)
 
     def release(self, model_id: str):
         self.store.release(model_id)

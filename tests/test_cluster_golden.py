@@ -148,6 +148,76 @@ def test_tiered_decisions_pinned_replay_exact(tiered_results):
         assert w.host_cache.evictions > 0  # pressure actually occurred
 
 
+# -------------------------------------- prefetch-on-affinity-hint (DESIGN §12)
+def _run_prefetch(cap: float):
+    trace = generate_trace(n_requests=240, locality="L3",
+                           mean_interarrival=10.0, seed=GOLDEN_SEED,
+                           max_output_tokens=128)
+    pol = dataclasses.replace(POLICIES["tangram-prefetch"],
+                              name="prefetch-golden", host_cache_bytes=cap)
+    sim = ClusterSim(PAPER_MODELS, pol, n_workers=2, seed=GOLDEN_SEED)
+    return sim.run(trace), sim
+
+
+@pytest.fixture(scope="module")
+def prefetch_results():
+    return {cap: _run_prefetch(cap)[0] for cap in TIER_CAPS[1:]}
+
+
+def test_prefetch_every_request_completes(prefetch_results):
+    for cap, res in prefetch_results.items():
+        assert len(res) == 240, cap
+
+
+def test_prefetch_byte_accounting_exact(prefetch_results):
+    """Tier identity still partitions every transferred byte, and the hidden
+    store bytes are a subset of the store traffic — prefetch overlaps the
+    read, it never erases it from the counters."""
+    for cap, res in prefetch_results.items():
+        for r in res:
+            assert r.bytes_from_host + r.bytes_from_store \
+                == r.bytes_transferred, cap
+            assert 0 <= r.bytes_store_hidden <= r.bytes_from_store, cap
+            assert r.bytes_hit + r.bytes_transferred == r.bytes_total, cap
+
+
+def test_prefetch_hints_fire_and_hide_store_reads(prefetch_results):
+    """Under host-cache pressure the placement hints must actually land on
+    cold loads and hide store-read time (the tentpole's whole point)."""
+    for cap, res in prefetch_results.items():
+        hinted = [r for r in res if r.prefetched]
+        assert hinted, cap
+        assert sum(r.bytes_store_hidden for r in hinted) > 0, cap
+
+
+def test_prefetch_loads_never_dearer_than_tier_pricing(prefetch_results):
+    """Overlap can only clip the store read: every load's modeled time is
+    bounded by what the unhinted tiered pipeline would charge for the same
+    tier split."""
+    from repro.core.costmodel import PhaseCosts, paper_l40
+
+    costs = PhaseCosts(paper_l40())
+    for cap, res in prefetch_results.items():
+        for r in res:
+            assert r.load_s <= costs.load_time_tiered(
+                r.bytes_from_host, r.bytes_from_store) + 1e-9, (cap, r)
+
+
+def test_prefetch_decisions_pinned_replay_exact(prefetch_results):
+    """Decision-for-decision golden pin for the prefetch policy: the whole
+    hinted decision sequence (placements, tier splits, hidden bytes,
+    overlap-priced load times) replays bit-for-bit."""
+    replay, sim = _run_prefetch(TIER_CAPS[1])
+    key = lambda r: (r.model_id, r.arrival, r.start, r.warm, r.joined,
+                     r.prefetched, r.bytes_hit, r.bytes_from_host,
+                     r.bytes_from_store, r.bytes_store_hidden, r.load_s,
+                     r.decode_s)
+    assert list(map(key, prefetch_results[TIER_CAPS[1]])) == \
+        list(map(key, replay))
+    for w in sim.workers:
+        assert w.host_cache.nbytes() <= TIER_CAPS[1]
+
+
 def test_cold_reuse_fraction_monotone(golden_results):
     """reuse_fraction counts load-time Reuse Store hits only (Fig. 9
     semantics): zero for the exclusive baseline, substantial once the store

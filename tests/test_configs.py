@@ -1,8 +1,48 @@
 """Config registry: exact assigned hyperparameters, param counts in range,
-cell enumeration (40 total = 33 runnable + 7 documented skips)."""
+cell enumeration (40 total = 33 runnable + 7 documented skips).
+
+Also hosts the CI-subset drift guard: the fast-test list scripts/ci.sh runs
+is asserted against the actual contents of tests/, so a new test module
+cannot silently fall out of `make test-fast`.
+"""
+from pathlib import Path
+
 import pytest
 
 from repro.configs import SHAPES, all_configs, get_config, runnable_cells, skipped_cells
+
+# Test modules deliberately EXCLUDED from the fast subset: jax compile
+# subprocesses, kernel/model numerics, or multi-second engine paths.  A new
+# test module must be added either to tests/fast_tests.txt (so scripts/ci.sh
+# runs it) or here (with a reason); test_fast_subset_tracks_tests_directory
+# fails otherwise — the old hand-listed subset in ci.sh drifted silently.
+SLOW_TESTS = {
+    "tests/test_compress.py",      # jitted compression numerics
+    "tests/test_distributed.py",   # sharding/mesh compile subprocesses
+    "tests/test_engine.py",        # full engine decode compiles
+    "tests/test_fastpath.py",      # engine load/decode equivalence (jit)
+    "tests/test_kernels.py",       # Pallas kernel numerics
+    "tests/test_launchers.py",     # launch subprocesses
+    "tests/test_models.py",        # per-arch forward numerics
+    "tests/test_roofline.py",      # analysis over real configs
+    "tests/test_system.py",        # end-to-end serve scenarios
+    "tests/test_train.py",         # training-step compiles
+}
+
+
+def test_fast_subset_tracks_tests_directory():
+    root = Path(__file__).resolve().parent
+    listed = {line.strip() for line in
+              (root / "fast_tests.txt").read_text().splitlines()
+              if line.strip() and not line.lstrip().startswith("#")}
+    actual = {f"tests/{p.name}" for p in root.glob("test_*.py")}
+    missing_files = listed - actual
+    assert not missing_files, f"fast_tests.txt lists absent modules: {missing_files}"
+    assert not (listed & SLOW_TESTS), "a module is both fast and slow"
+    uncovered = actual - listed - SLOW_TESTS
+    assert not uncovered, (
+        f"test modules in neither tests/fast_tests.txt nor SLOW_TESTS "
+        f"(they would silently skip CI's fast gate): {uncovered}")
 
 EXPECT = {
     # name: (layers, d_model, heads, kv, d_ff, vocab)

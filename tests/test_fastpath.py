@@ -242,6 +242,180 @@ def test_register_seed_is_stable_digest():
     assert zlib.crc32(b"m") & 0xFFFF == zlib.crc32("m".encode()) & 0xFFFF
 
 
+# ------------------------------------------------- prefetch pipeline (§12)
+def test_prefetch_join_overlaps_store_read():
+    """A hint issued a lead window before the load pays the store read in
+    the background: the joining load sees the promoted bytes as host hits,
+    total store traffic is unchanged (overlap, not avoidance), and wall
+    time drops by the hidden part of the read."""
+    import time
+
+    cfg = small_cfg()
+    eng = Engine(256 << 20, host_cache_bytes=0)
+    eng.register("m", cfg)
+    total = eng.load("m").bytes_total
+    eng.persistent_store.store_bw = total * 10.0  # full read ~ 0.1 s
+
+    eng.drop_device_copies("m")
+    reads0 = eng.persistent_store.bytes_read
+    t0 = time.perf_counter()
+    eng.load("m")
+    cold = time.perf_counter() - t0
+    assert eng.persistent_store.bytes_read - reads0 == total
+
+    eng.drop_device_copies("m")
+    reads0 = eng.persistent_store.bytes_read
+    eng.prefetch("m")
+    time.sleep(0.15)  # the queueing/init window a placement hint buys
+    t0 = time.perf_counter()
+    rep = eng.load("m")
+    warm = time.perf_counter() - t0
+    s = eng.last_load
+    assert s.leaves_materialized == 0
+    assert s.bytes_prefetched + s.bytes_store == total  # traffic identical
+    assert s.bytes_prefetched > 0
+    assert eng.persistent_store.bytes_read - reads0 == total
+    assert rep.bytes_transferred == total  # h2d still moves every byte
+    assert warm < cold  # the hidden read no longer extends the load
+    assert eng.prefetcher.joins == 1
+
+
+def test_duplicate_hints_collapse_onto_one_job():
+    cfg = small_cfg()
+    eng = Engine(256 << 20, host_cache_bytes=0)
+    eng.register("m", cfg)
+    total = eng.load("m").bytes_total
+    eng.persistent_store.store_bw = total * 10.0
+    eng.drop_device_copies("m")
+    reads0 = eng.persistent_store.bytes_read
+    j1 = eng.prefetch("m")
+    j2 = eng.prefetch("m")  # duplicate hint must not double-read the store
+    assert j1 is j2
+    eng.load("m")
+    assert eng.persistent_store.bytes_read - reads0 == total
+
+
+def test_join_bypasses_unstarted_job_behind_other_hints():
+    """A load whose hint is still QUEUED behind another model's throttled
+    promotion must not wait for reads it never asked for: the un-started
+    job is withdrawn and the load falls back to the inline store path —
+    never slower than an unhinted load."""
+    cfg = small_cfg()
+    eng = Engine(256 << 20, host_cache_bytes=0)
+    eng.register("a", cfg)
+    eng.register("b", dataclasses.replace(cfg, num_layers=3))
+    total_a = eng.load("a").bytes_total
+    total_b = eng.load("b").bytes_total
+    eng.persistent_store.store_bw = total_a * 4.0  # a's read ~ 0.25 s
+    eng.drop_device_copies("a")
+    eng.drop_device_copies("b")
+    eng.prefetch("a")  # the worker starts on this immediately
+    jb = eng.prefetch("b")  # still queued behind a's throttled read
+    rep = eng.load("b")
+    s = eng.last_load
+    assert jb.cancelled and jb.done.is_set()
+    assert jb.bytes_promoted == 0  # withdrawn before any read
+    assert s.bytes_prefetched == 0 and s.bytes_store == total_b
+    assert rep.bytes_transferred == total_b
+    rep_a = eng.load("a")  # a's own job was started: joined normally
+    sa = eng.last_load
+    assert sa.bytes_prefetched + sa.bytes_store == total_a
+    assert rep_a.bytes_transferred == total_a
+
+
+def test_cancel_prefetch_releases_hint_pin():
+    """An abandoned hint must not leave the model pinned forever: cancel
+    stops the promotion and the bytes become spillable again."""
+    cfg = small_cfg()
+    eng = Engine(256 << 20, host_cache_bytes=0)
+    eng.register("m", cfg)
+    eng.load("m")
+    eng.drop_device_copies("m")
+    eng.prefetch("m")
+    assert "m" in eng._host_pins  # hint holds the pin while in flight
+    eng.cancel_prefetch("m")
+    assert "m" not in eng._host_pins
+    # whatever the worker promoted before the cancel re-spilled on unpin
+    assert eng.host_store.nbytes() == 0
+    eng.load("m")  # and a later unhinted load still resolves everything
+    assert eng.last_load.leaves_materialized == 0
+
+
+def test_rehint_after_completed_job_transfers_pin_ownership():
+    """A second hint replacing a completed-but-never-joined job must inherit
+    its pin ownership — cancelling the second hint releases the pin the
+    FIRST hint took (nothing leaks)."""
+    cfg = small_cfg()
+    eng = Engine(256 << 20, host_cache_bytes=0)
+    eng.register("m", cfg)
+    eng.load("m")
+    eng.drop_device_copies("m")
+    j1 = eng.prefetch("m")
+    j1.done.wait()  # first hint's promotion completes, job never joined
+    j2 = eng.prefetch("m")
+    assert j2 is not j1 and j2.owns_pin  # ownership carried forward
+    eng.cancel_prefetch("m")
+    assert "m" not in eng._host_pins  # the original hint's pin released
+    assert eng.host_store.nbytes() == 0  # and its bytes re-spilled (cap 0)
+
+
+def test_close_quiesces_in_flight_promotion():
+    """close() must stop the worker mid-job, not just drain the queue: no
+    store mutations may land after it returns."""
+    import time
+
+    cfg = small_cfg()
+    eng = Engine(256 << 20, host_cache_bytes=0)
+    eng.register("m", cfg)
+    total = eng.load("m").bytes_total
+    eng.drop_device_copies("m")
+    eng.persistent_store.store_bw = total * 0.5  # full read ~ 2 s
+    job = eng.prefetch("m")
+    t0 = time.perf_counter()
+    eng.close()  # returns after at most the in-flight tensor, not the job
+    assert time.perf_counter() - t0 < 5.0
+    assert job.done.is_set()
+    nb = eng.host_store.nbytes()
+    time.sleep(0.2)
+    assert eng.host_store.nbytes() == nb  # quiesced: nothing moved after
+
+
+def test_engine_close_stops_prefetch_worker():
+    cfg = small_cfg()
+    eng = Engine(256 << 20, host_cache_bytes=0)
+    eng.register("m", cfg)
+    eng.load("m")
+    eng.drop_device_copies("m")
+    eng.prefetch("m").done.wait()
+    eng.close()
+    assert eng.prefetcher._thread is None
+    job = eng.prefetch("m")  # hints after close degrade to pin-only no-ops
+    assert job.done.is_set() and job.bytes_promoted == 0
+    eng.load("m")  # and loads still resolve everything inline
+    assert eng.last_load.leaves_materialized == 0
+    eng.close()  # idempotent
+
+
+def test_engine_keep_alive_ages_host_tier_between_loads():
+    """With the keep-alive knob set, a released model's host copies expire
+    after idling past the TTL: the next load promotes them from the store
+    tier again — the churn the prefetch pipeline exists to hide."""
+    cfg = small_cfg()
+    eng = Engine(256 << 20, host_keep_alive_s=120.0)
+    eng.register("m", cfg)
+    total = eng.load("m").bytes_total
+    eng.drop_device_copies("m")  # released, but TTL keeps it host-resident
+    eng.load("m")
+    assert eng.last_load.bytes_host_hit == total
+    eng.drop_device_copies("m")
+    for fp in list(eng.host_store._last_access):  # idle past the TTL
+        eng.host_store._last_access[fp] -= 300.0
+    eng.load("m")
+    s = eng.last_load
+    assert s.bytes_store == total and s.bytes_host_hit == 0
+    assert s.leaves_materialized == 0  # aged out, never re-materialized
+
+
 # ------------------------------------------------------------- decode: equiv
 def test_fast_decode_matches_legacy_bit_for_bit():
     cfg = small_cfg()

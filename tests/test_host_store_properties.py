@@ -208,3 +208,82 @@ def test_pinned_bytes_may_exceed_cap_until_unpin():
     store.unpin("p0")  # last unpin re-enforces the cap immediately
     assert store.nbytes() == 80 and "p0" in store.spill
     assert "p1" in store and "p2" in store
+
+
+# ------------------------------------------------- keep-alive aging (§12)
+def test_keep_alive_ages_idle_unpinned_tensors():
+    """Aging spills unpinned tensors idle past the TTL; pinned tensors are
+    exempt (a hinted/loading model's bytes must survive churn)."""
+    ref = np.arange(10, dtype=np.uint8)
+    store = HostTensorStore(None, keep_alive_s=5.0)
+    store.put("a", ref.copy())
+    store.pin("p")
+    store.put("p", np.ones(10, np.uint8))
+    assert store.age() == 0  # everything freshly touched
+    for fp in ("a", "p"):  # backdate beyond the TTL (white-box clock skew)
+        store._last_access[fp] -= 10.0
+    assert store.age() == 1
+    assert store.expirations == 1
+    assert "a" in store.spill and "p" in store  # pinned survives aging
+    got = store.fetch("a")  # promote back: contents and counters intact
+    assert np.array_equal(got, ref)
+    assert store.nbytes() == sum(b.nbytes for b in store._bufs.values())
+
+
+def test_keep_alive_none_keeps_no_timestamps():
+    store = HostTensorStore(None)
+    store.put("a", np.ones(4, np.uint8))
+    assert store.age() == 0 and not store._last_access
+
+
+# ------------------------- concurrent prefetch + evict + load (DESIGN §12)
+def test_pin_safety_under_concurrent_prefetch_evict_load():
+    """The Prefetcher promotes model A store->host from its worker thread
+    while the main thread loads/evicts model B over a spill-everything cap.
+    Pins must keep every promotion safe: no tensor is ever unresolvable or
+    doubly resident, counters stay exact, and the loaded params are
+    bit-identical to an unpressured engine's."""
+    import dataclasses
+
+    from repro.configs import all_configs
+    from repro.serving.engine import Engine
+
+    cfg = dataclasses.replace(all_configs()["llama3.2-1b"].smoke(),
+                              num_layers=2, vocab_size=512)
+    cfg_b = dataclasses.replace(cfg, num_layers=3)
+    eng = Engine(256 << 20, host_cache_bytes=0)  # every unpin spills
+    eng.register("a", cfg)
+    eng.register("b", cfg_b)
+    total_a = eng.load("a").bytes_total
+    eng.load("b")
+    ref_a = [np.asarray(x).copy()
+             for x in __import__("jax").tree.leaves(eng.params_of("a"))]
+    # throttle promotions so the worker is genuinely mid-read while the
+    # main thread churns the other model through the same tiers
+    eng.persistent_store.store_bw = 40e6
+
+    all_fps = [r.fingerprint for m in ("a", "b")
+               for r in eng.models[m].records]
+    for _ in range(4):
+        eng.drop_device_copies("a")  # both models fully spilled (cap 0)
+        eng.drop_device_copies("b")
+        job = eng.prefetch("a")  # background store->host promotion of A
+        eng.load("b")  # interleaves with A's promotion under the store lock
+        rep = eng.load("a")  # joins the in-flight job
+        s = eng.last_load
+        assert s.leaves_materialized == 0
+        # every byte of A came up from the store exactly once: either the
+        # prefetcher moved it or the join's inline path did
+        assert s.bytes_prefetched + s.bytes_store == total_a
+        assert s.bytes_prefetched == job.bytes_promoted
+        assert rep.bytes_transferred == total_a
+        # tier invariants under concurrency: exactly-one-tier residence and
+        # counter-vs-scan equality (the shadow-spec rules, cross-thread)
+        for fp in all_fps:
+            assert (fp in eng.host_store) != (fp in eng.persistent_store), fp
+        assert eng.host_store.nbytes() == \
+            sum(b.nbytes for b in eng.host_store._bufs.values())
+        got = __import__("jax").tree.leaves(eng.params_of("a"))
+        assert all(np.array_equal(np.asarray(x), y)
+                   for x, y in zip(got, ref_a))
+        eng.release("b")

@@ -1,0 +1,248 @@
+"""Prefetch-on-affinity-hint, sim plane (DESIGN.md §12).
+
+The contract under test: a placement-time hint OVERLAPS the store->host
+read with the phases ahead of the load — it never changes which bytes move
+(tier byte counters are identical to the unhinted run) and never makes any
+load slower.  The overlap formula is pinned exactly against the cost model,
+and SimHostCache's TTL aging is pinned so prefetch is measured against
+churn, not a static cache.
+"""
+import dataclasses
+
+from repro.core import POLICIES, ClusterSim, generate_trace
+from repro.core.costmodel import PhaseCosts, paper_l40
+from repro.core.hostcache import SimHostCache
+from repro.core.reuse_store import ReuseStore
+from repro.core.trace import PAPER_MODELS
+from repro.models.tensors import TensorRecord
+
+
+def recs(model_id, sizes):
+    return [TensorRecord(name=f"{model_id}/t{i}", shape=(s,), dtype="uint8",
+                         fingerprint=f"{model_id}/t{i}", nbytes=s)
+            for i, s in enumerate(sizes)]
+
+
+HW = paper_l40()
+COSTS = PhaseCosts(HW)
+SLOW = min(HW.h2d_bw, HW.store_bw)
+
+
+# ------------------------------------------------------------- cost model
+def test_load_time_prefetched_degenerates_to_tiered_at_zero_overlap():
+    # with no host bytes and no window there is nothing to hide behind
+    assert COSTS.load_time_prefetched(0, 2e9, 0.0) == \
+        COSTS.load_time_tiered(0, 2e9)
+    # with host bytes the hinted read overlaps their h2d — something the
+    # serial tiered pipeline never does — so the price can only drop
+    assert COSTS.load_time_prefetched(3e9, 2e9, 0.0) <= \
+        COSTS.load_time_tiered(3e9, 2e9)
+
+
+def test_load_time_prefetched_monotone_and_floored_at_all_host():
+    host, store = 1e9, 8e9
+    prev = COSTS.load_time_tiered(host, store)
+    floor = COSTS.load_time_tiered(host + store, 0)
+    for w in (0.1, 0.5, 1.0, 2.0, 10.0, 1e4):
+        t = COSTS.load_time_prefetched(host, store, w)
+        assert t <= prev + 1e-12  # longer window never hurts
+        assert t >= floor - 1e-9  # and never beats an all-host load
+        prev = t
+    assert COSTS.load_time_prefetched(host, store, 1e4) == floor
+
+
+def test_prefetch_hidden_bytes_clipped_by_window_and_store():
+    # window too small to hide everything: hidden = window * store_bw
+    w = 0.5
+    hidden = COSTS.prefetch_hidden_bytes(0, 8e9, w)
+    assert hidden == w * HW.store_bw < 8e9
+    # huge window: hidden clips at the store bytes themselves
+    assert COSTS.prefetch_hidden_bytes(0, 8e9, 1e4) == 8e9
+    # host bytes extend the window by their own h2d time
+    assert COSTS.prefetch_hidden_bytes(2e9, 8e9, w) == \
+        (w + 2e9 / HW.h2d_bw) * HW.store_bw
+
+
+# ---------------------------------------------------------- SimHostCache
+def test_take_prefetch_returns_elapsed_and_covered_once():
+    hc = SimHostCache(10**9)
+    r = recs("m", [100, 200])
+    hc.prefetch("m", r, now=5.0)
+    assert hc.take_prefetch("other", 9.0, r) is None
+    assert hc.take_prefetch("m", 9.0, r) == (4.0, 300)  # both still absent
+    assert hc.take_prefetch("m", 9.0, r) is None  # consumed
+
+
+def test_take_prefetch_covers_only_hint_time_absences():
+    """Tensors that spill AFTER the hint were never part of its background
+    read — the covered bytes (and therefore the hidden cap) exclude them."""
+    hc = SimHostCache(10**9)
+    r = recs("m", [100, 200])
+    hc.plan_fetch(r[:1], now=0.0)  # t0 host-resident at hint time
+    hc.prefetch("m", r, now=1.0)  # snapshot: only t1 (200) absent
+    hc._evict(r[0].fingerprint)  # t0 spills after the hint fired
+    elapsed, covered = hc.take_prefetch("m", 3.0, r)
+    assert elapsed == 2.0
+    assert covered == 200  # t0's 100 bytes get no overlap credit
+
+
+def test_hint_ttl_expires_unconsumed_hints():
+    """A hint whose placement never followed through (dropped schedule,
+    warm start) must not grant a much-later load its overlap window."""
+    hc = SimHostCache(10**9, hint_ttl_s=10.0)
+    r = recs("m", [100])
+    hc.prefetch("m", r, now=0.0)
+    assert hc.take_prefetch("m", 50.0, r) is None  # stale: no credit
+    hc.prefetch("m", r, now=60.0)  # a fresh hint works normally
+    assert hc.take_prefetch("m", 65.0, r) == (5.0, 100)
+
+
+def test_ttl_ages_idle_tensors_into_store_traffic():
+    hc = SimHostCache(10**9, keep_alive_s=5.0)
+    r = recs("m", [100, 200])
+    assert hc.plan_fetch(r, now=0.0) == (0, 300)  # cold: all store
+    assert hc.plan_fetch(r, now=4.0) == (300, 0)  # inside TTL: host hits
+    host, store = hc.plan_fetch(r, now=20.0)  # idle > TTL: aged out
+    assert (host, store) == (0, 300)
+    assert hc.expirations == 2
+    assert hc.nbytes() == 300  # re-admitted by the fetch
+
+
+def test_ttl_none_never_expires():
+    hc = SimHostCache(10**9)
+    r = recs("m", [100])
+    hc.plan_fetch(r, now=0.0)
+    assert hc.plan_fetch(r, now=1e9) == (100, 0)
+    assert hc.expirations == 0
+
+
+# --------------------------------------------- ReuseStore overlap pricing
+def _loaded_store(cap_cache=150):
+    store = ReuseStore(10**9, COSTS)
+    store.host_cache = SimHostCache(cap_cache)
+    return store
+
+
+def test_overlap_accounting_exact_vs_unhinted_run():
+    """The hinted run moves EXACTLY the same bytes through each tier as the
+    unhinted run — only the modeled wall time shrinks, by the overlapped
+    window's worth of store read re-priced from the store pipeline to
+    h2d_bw."""
+    r = recs("m", [100, 100, 100])
+    rx = recs("x", [150])
+
+    def run(hinted: bool):
+        store = _loaded_store(cap_cache=350)
+        store.load_model("m", r, now=0.0)  # cold: cache holds all of m
+        store.release("m")
+        # x's admission over the 350-byte cap LRU-spills m's oldest tensor,
+        # so m's reload faces a genuine host/store split
+        store.load_model("x", rx, now=1.0)
+        store.drop_model("m")  # force a full device-pool transfer next load
+        if hinted:
+            store.hint_prefetch("m", r, now=10.0)
+        return store.load_model("m", r, now=12.0, overlap_s=0.5)
+
+    plain, hinted = run(False), run(True)
+    # identical tier byte split: overlap, not avoidance
+    assert (hinted.bytes_from_host, hinted.bytes_from_store) == \
+        (plain.bytes_from_host, plain.bytes_from_store)
+    assert plain.bytes_from_store > 0  # the cap actually spilled something
+    assert not plain.prefetched and hinted.prefetched
+    # exact overlap formula: window = (12 - 10) elapsed + 0.5 init
+    window = 2.0 + 0.5
+    assert hinted.bytes_store_hidden == int(COSTS.prefetch_hidden_bytes(
+        hinted.bytes_from_host, hinted.bytes_from_store, window))
+    assert hinted.load_seconds == COSTS.load_time_prefetched(
+        hinted.bytes_from_host, hinted.bytes_from_store, window)
+    assert plain.load_seconds == COSTS.load_time_tiered(
+        plain.bytes_from_host, plain.bytes_from_store)
+    # wall time shrinks by exactly the hidden bytes' pipeline-vs-h2d delta
+    hidden = hinted.bytes_store_hidden
+    expect_gain = hidden / SLOW - hidden / HW.h2d_bw
+    assert abs((plain.load_seconds - hinted.load_seconds) - expect_gain) \
+        < 1e-9
+
+
+def test_hint_is_consumed_by_one_load():
+    r = recs("m", [100, 100, 100])
+    rx = recs("x", [150])
+    store = _loaded_store(cap_cache=350)
+    store.load_model("m", r, now=0.0)
+    store.release("m")
+    store.load_model("x", rx, now=1.0)  # spills m's LRU tensor
+    store.drop_model("m")
+    store.hint_prefetch("m", r, now=2.0)
+    first = store.load_model("m", r, now=3.0)
+    assert first.prefetched and first.bytes_store_hidden > 0
+    store.release("m")
+    store.drop_model("m")
+    second = store.load_model("m", r, now=4.0)  # no fresh hint
+    assert not second.prefetched and second.bytes_store_hidden == 0
+
+
+def test_hint_covering_no_bytes_does_not_count_as_prefetched():
+    """A hint issued while everything was host-resident covered nothing —
+    the load must not be flagged prefetched even if bytes move later."""
+    r = recs("m", [100, 100, 100])
+    store = _loaded_store(cap_cache=10**9)
+    store.load_model("m", r, now=0.0)
+    store.release("m")
+    store.drop_model("m")  # device-pool drop only: host tier still full
+    store.hint_prefetch("m", r, now=1.0)  # snapshot: nothing absent
+    rep = store.load_model("m", r, now=2.0)
+    assert rep.bytes_transferred == 300 and rep.bytes_from_store == 0
+    assert not rep.prefetched and rep.bytes_store_hidden == 0
+
+
+def test_hint_without_host_cache_is_noop():
+    store = ReuseStore(10**9, COSTS)
+    r = recs("m", [100])
+    store.hint_prefetch("m", r, now=0.0)  # must not raise
+    rep = store.load_model("m", r, now=1.0)
+    assert not rep.prefetched
+
+
+# ------------------------------------------------------------- cluster sim
+def _run_policy(policy_name, **overrides):
+    trace = generate_trace(n_requests=160, locality="L3",
+                           mean_interarrival=8.0, seed=77,
+                           max_output_tokens=128)
+    pol = dataclasses.replace(POLICIES[policy_name], **overrides)
+    sim = ClusterSim(PAPER_MODELS, pol, n_workers=2, seed=77)
+    return sim.run(trace), sim
+
+
+def test_cluster_prefetch_invariants():
+    res, _ = _run_policy("tangram-prefetch")
+    assert len(res) == 160
+    prefetched = [r for r in res if r.prefetched]
+    assert prefetched, "no load ever carried a hint"
+    for r in res:
+        # tier identity holds with hidden bytes a subset of store bytes
+        assert r.bytes_from_host + r.bytes_from_store == r.bytes_transferred
+        assert 0 <= r.bytes_store_hidden <= r.bytes_from_store
+        if r.prefetched:
+            # overlap pricing is never worse than the unhinted tier price
+            assert r.load_s <= COSTS.load_time_tiered(
+                r.bytes_from_host, r.bytes_from_store) + 1e-9
+    assert any(r.bytes_store_hidden > 0 for r in prefetched)
+
+
+def test_cluster_prefetch_never_slower_than_tier_on_same_trace():
+    """Same workload, same seeds: hints only ever shrink modeled load time,
+    so the fleet-wide load total cannot grow."""
+    tier, _ = _run_policy("tangram-tier")
+    pf, _ = _run_policy("tangram-prefetch")
+    assert sum(r.load_s for r in pf) <= sum(r.load_s for r in tier) + 1e-6
+
+
+def test_cluster_host_keep_alive_increases_store_traffic():
+    """Aging the host tier (TTL) forces re-promotions: store traffic with a
+    short keep-alive must exceed the static cache's, and expirations must
+    actually have happened."""
+    static, _ = _run_policy("tangram-tier")
+    aged, sim = _run_policy("tangram-tier", host_keep_alive=30.0)
+    assert sum(w.host_cache.expirations for w in sim.workers) > 0
+    assert sum(r.bytes_from_store for r in aged) > \
+        sum(r.bytes_from_store for r in static)
