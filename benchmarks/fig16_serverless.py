@@ -1,0 +1,183 @@
+"""Fig. 16 (beyond-paper): serverless control-plane sweep.
+
+Runs the SAME seeded workload trace through the cluster sim for every cell
+of (arrival process x keep-alive policy x tenant pressure) and reports
+whole-system serverless metrics — cold-start rate and TTFT percentiles —
+instead of the load-path microbenchmarks of fig15:
+
+  arrival    poisson | diurnal | burst (serverless.workload)
+  keep-alive zero (scale-to-zero-always) | fixed:40 | adaptive
+             (histogram-adaptive à la Serverless in the Wild)
+  pressure   none | a 50%-budget square wave squeezing every node's
+             host-tier byte cap while requests are in flight
+
+Acceptance (asserted here, gated by scripts/check_bench.py):
+  * adaptive keep-alive achieves a strictly lower cold-start rate AND a
+    strictly lower p95 TTFT than scale-to-zero-always on every arrival
+    process (same trace, same seeds);
+  * the 50%-budget squeeze never deadlocks pinned loads — every request
+    completes, and the squeeze provably evicted host bytes (the eviction-
+    on-shrink path ran, not a no-op).
+
+All numbers are MODELED seconds from the deterministic cost plane, so they
+are machine-independent: check_bench gates them everywhere, and any change
+is an algorithm change, not scheduler jitter.  ``--merge-into`` attaches
+the results to the newest BENCH_fastpath.json entry (the one the fig15 run
+just appended) so the perf trajectory stays one history.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from benchmarks.common import emit
+from repro.serverless.workload import ARRIVALS
+
+KEEP_ALIVES = ("zero", "fixed:40", "adaptive")
+
+
+def _one_cell(models, trace, keep_alive: str, pressure, *, n_workers: int,
+              seed: int, pool_bytes: int) -> dict:
+    from repro.core import POLICIES
+    from repro.serverless import run_serverless_sim
+
+    pol = dataclasses.replace(POLICIES["tangram-serverless"],
+                              name=f"serverless-{keep_alive}",
+                              lifecycle=keep_alive)
+    sim, sink = run_serverless_sim(models, trace, pol, n_workers=n_workers,
+                                   seed=seed, pressure=pressure,
+                                   pool_bytes=pool_bytes)
+    s = sink.summary()
+    s["expirations"] = sim.lifecycle.counters.expirations
+    s["pressure_evictions"] = sum(w.host_cache.pressure_evictions
+                                  for w in sim.workers
+                                  if w.host_cache is not None)
+    return s
+
+
+def run(*, smoke: bool = False,
+        merge_into: str = "BENCH_fastpath.json") -> dict:
+    from repro.core.trace import PAPER_MODELS
+    from repro.serverless import make_trace, pressure_wave
+
+    n_requests = 160 if smoke else 400
+    n_workers = 2
+    seed = 7
+    mean_ia = 12.0
+    # a serving cell the fleet CAN keep warm (the ServerlessLLM /
+    # LLM-Mesh few-endpoints-per-node-group setting): the four smallest
+    # paper models (~29 GB — they fit one device TOGETHER, so keep-alive
+    # is a policy choice, not a capacity fight).  With the full 8-model
+    # pool the irreducible cold fraction (unpopular models' long-gap
+    # arrivals, make_room capacity churn) keeps BOTH policies' p95 in the
+    # cold region and the comparison degenerates to identical worst-case
+    # loads; at fleet-warmable scale the quantile actually separates.
+    models = PAPER_MODELS[4:8]  # opt6.7B llama3B qwen3B opt1.3B
+    # constrain the DEVICE pool below the working set (20 GB vs ~28.6 GB):
+    # with the default 45 GB pool the Reuse Store keeps every tensor
+    # device-resident, reloads never consult the host tier, and the whole
+    # pressure axis is vacuous — the squeeze must contend with a host tier
+    # that loads actually read through
+    pool_bytes = int(20e9)
+    # the pressure wave squeezes relative to the WORKING SET, not the
+    # configured cap: "50% budget" must actually contend with what a node
+    # hosts, or the squeeze is a no-op against a half-empty cache
+    working_set = sum(m.bytes for m in models)
+
+    out: dict = {"smoke": smoke, "n_requests": n_requests,
+                 "working_set_bytes": working_set, "cells": {}}
+    for arrival in ARRIVALS:
+        trace = make_trace(arrival, n_requests=n_requests, seed=seed,
+                           models=models, mean_interarrival=mean_ia,
+                           max_output_tokens=128)
+        horizon = trace[-1].time
+        schedules = {
+            "none": (),
+            "p50": pressure_wave(horizon_s=horizon,
+                                 base_bytes=int(working_set),
+                                 low_frac=0.5, period_s=240.0),
+        }
+        for ka in KEEP_ALIVES:
+            for pname, press in schedules.items():
+                cell = _one_cell(models, trace, ka, press,
+                                 n_workers=n_workers, seed=seed,
+                                 pool_bytes=pool_bytes)
+                key = f"{arrival}.{ka}.{pname}"
+                out["cells"][key] = cell
+                emit(f"fig16.{key}", cell["ttft_p95"] * 1e6,
+                     f"cold_rate={cell['cold_start_rate']:.3f}"
+                     f";p50={cell['ttft_p50']:.2f}"
+                     f";p99={cell['ttft_p99']:.2f}"
+                     f";n={cell['n']}")
+
+    # ---- acceptance: every cell completed the full trace; the squeeze
+    # actually squeezed; adaptive strictly beats scale-to-zero-always
+    cells = out["cells"]
+    for key, c in cells.items():
+        assert c["n"] == n_requests, f"{key}: dropped requests (deadlock?)"
+        # the host tier is actually on the load path (device pool < working
+        # set): a regression that stops pricing store-tier promotions
+        # cannot hide behind an all-device-resident fleet
+        assert c["bytes_from_store"] > 0, f"{key}: host tier off the load path"
+    for arrival in ARRIVALS:
+        assert cells[f"{arrival}.adaptive.p50"]["pressure_evictions"] > 0, \
+            f"{arrival}: 50% budget squeeze never evicted (pressure no-op)"
+        for pname in ("none", "p50"):
+            zero = cells[f"{arrival}.zero.{pname}"]
+            adpt = cells[f"{arrival}.adaptive.{pname}"]
+            assert adpt["cold_start_rate"] < zero["cold_start_rate"], \
+                f"{arrival}/{pname}: adaptive cold rate not below zero's"
+            assert adpt["ttft_p95"] < zero["ttft_p95"], \
+                f"{arrival}/{pname}: adaptive p95 TTFT not below zero's"
+
+    # headline metrics for the regression gate (poisson, no pressure):
+    # lower-is-better absolutes + the adaptive-vs-zero gains as ratios
+    zero = cells["poisson.zero.none"]
+    adpt = cells["poisson.adaptive.none"]
+    out["headline"] = {
+        "cold_start_rate": adpt["cold_start_rate"],
+        "ttft_p95": adpt["ttft_p95"],
+        "cold_rate_gain_vs_zero": (zero["cold_start_rate"]
+                                   / max(adpt["cold_start_rate"], 1e-9)),
+        "p95_gain_vs_zero": zero["ttft_p95"] / max(adpt["ttft_p95"], 1e-9),
+    }
+    h = out["headline"]
+    emit("fig16.headline", h["ttft_p95"] * 1e6,
+         f"cold_rate={h['cold_start_rate']:.3f}"
+         f";cold_gain=x{h['cold_rate_gain_vs_zero']:.2f}"
+         f";p95_gain=x{h['p95_gain_vs_zero']:.2f}")
+
+    if merge_into:
+        # attach to the newest BENCH entry (the fig15 run that preceded us
+        # in `make bench-smoke`), or start a fresh entry when run alone —
+        # ONE history file, one regression gate
+        from benchmarks.common import load_bench_entries
+
+        try:
+            history = load_bench_entries(merge_into)
+        except (FileNotFoundError, json.JSONDecodeError):
+            history = []
+        if history and history[-1].get("smoke") == smoke \
+                and "serverless" not in history[-1]:
+            history[-1]["serverless"] = out
+        else:
+            history.append({"smoke": smoke, "serverless": out})
+        with open(merge_into, "w") as f:
+            json.dump({"entries": history[-40:]}, f, indent=2)
+        emit("fig16.json", 0.0, f"merged={merge_into};entries={len(history)}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy scale for CI (make bench-smoke)")
+    ap.add_argument("--merge-into", default="BENCH_fastpath.json",
+                    help="BENCH history to attach results to ('' disables)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, merge_into=args.merge_into)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,12 +13,27 @@ from repro.core import POLICIES, ClusterSim, PAPER_MODELS, generate_trace
 
 
 def run():
+    from repro.serverless import MetricsSink
+
     trace = generate_trace(n_requests=500, locality="L3", mean_interarrival=25.0,
                            seed=8)
     per_policy = {}
     for pol in ["sllm", "sllm-c", "sllm-cm", "tangram"]:
         sim = ClusterSim(PAPER_MODELS, POLICIES[pol], n_workers=1, seed=3)
         res = sim.run(trace)
+        # whole-distribution + cold-start TTFT percentiles through the
+        # control plane's metrics sink (one percentile vocabulary for
+        # fig8 and fig16)
+        sink = MetricsSink()
+        for r in res:
+            sink.add_sim(r)
+        s = sink.summary()
+        emit(f"fig8.percentiles.{pol}", s["ttft_p95"] * 1e6,
+             f"p50={s['ttft_p50']:.2f};p99={s['ttft_p99']:.2f};"
+             f"cold_p50={s['cold_ttft_p50']:.2f};"
+             f"cold_p95={s['cold_ttft_p95']:.2f};"
+             f"cold_p99={s['cold_ttft_p99']:.2f};"
+             f"cold_rate={s['cold_start_rate']:.3f}")
         cold = [r for r in res if not r.warm]
         by_model = defaultdict(list)
         for r in cold:

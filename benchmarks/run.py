@@ -23,6 +23,8 @@ SUITES = [
      "Fig 14 concurrent multi-instance workers + queueing-aware affinity"),
     ("fig15", "benchmarks.fig15_fastpath",
      "Fig 15 data-plane fast-path load / sync-free decode / indexed sim"),
+    ("fig16", "benchmarks.fig16_serverless",
+     "Fig 16 serverless control plane: keep-alive x pressure x arrivals"),
 ]
 
 

@@ -29,9 +29,18 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks.common import load_bench_entries  # noqa: E402
 
 
+#: Metrics where an INCREASE is the regression (cold-start rate, latency
+#: percentiles).  They come from the deterministic cost plane, so they are
+#: machine-independent and always gate — any movement is an algorithm
+#: change, not scheduler jitter (the smoke noise floor still applies, since
+#: smoke entries run a smaller trace).
+LOWER_IS_BETTER = {"serverless.cold_rate", "serverless.ttft_p95"}
+
+
 def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
-    """Higher-is-better metrics to gate.  Tolerant of older entries that
-    predate a section (missing metrics are skipped, not failed).
+    """Gated metrics (higher-is-better unless listed in LOWER_IS_BETTER).
+    Tolerant of older entries that predate a section (missing metrics are
+    skipped, not failed).
 
     Machine-relative ratios (load speedups vs the same run's full-init
     baseline) are comparable across machines and always gate.  Absolute
@@ -43,6 +52,17 @@ def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
     for tier, row in load.get("tiers", {}).items():
         if "speedup_vs_full_init" in row:
             out[f"load.speedup.reuse{tier}"] = row["speedup_vs_full_init"]
+    # fig16 serverless control plane: modeled (machine-independent) cold
+    # start rate + p95 TTFT of the headline cell, and the adaptive-vs-zero
+    # gains — the whole-system numbers the subsystem exists to improve
+    sv = entry.get("serverless", {}).get("headline", {})
+    if "cold_start_rate" in sv:
+        out["serverless.cold_rate"] = sv["cold_start_rate"]
+    if "ttft_p95" in sv:
+        out["serverless.ttft_p95"] = sv["ttft_p95"]
+    for gain in ("cold_rate_gain_vs_zero", "p95_gain_vs_zero"):
+        if gain in sv:
+            out[f"serverless.{gain}"] = sv[gain]
     if absolute:
         if "decode" in entry:
             out["decode.fused_steps_per_s"] = \
@@ -70,7 +90,10 @@ def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
         before, after = pm[name], cm[name]
         if before <= 0:
             continue
-        drop = 1.0 - after / before
+        if name in LOWER_IS_BETTER:
+            drop = after / before - 1.0  # an increase is the regression
+        else:
+            drop = 1.0 - after / before
         status = "REGRESSED" if drop > threshold else "ok"
         print(f"  {name}: {before:.2f} -> {after:.2f} "
               f"({-drop:+.1%}) [{status}]")

@@ -84,6 +84,13 @@ class SimPolicy:
     # host-tier aging: tensors idle in a node's host cache longer than this
     # TTL are spilled (keep-alive expiry / co-tenant churn).  None = static.
     host_keep_alive: Optional[float] = None
+    # ---- serverless control plane (DESIGN.md §13): instance lifecycle.
+    # None keeps the legacy fixed `keep_alive` TTL.  Otherwise a keep-alive
+    # spec for serverless.lifecycle.make_keep_alive ("zero", "fixed:T",
+    # "adaptive[:P]") — idle instances scale to zero on the TTL the
+    # LifecycleManager picks per model, and cold/warm transitions are
+    # logged for golden replay.
+    lifecycle: Optional[str] = None
 
 
 POLICIES = {
@@ -113,6 +120,14 @@ POLICIES = {
                                   reuse=True, odkv=True, affinity=True,
                                   concurrent=True, queue_aware=True,
                                   host_cache_bytes=64e9, prefetch=True),
+    # full serverless control plane (DESIGN.md §13): the prefetching tiered
+    # system with histogram-adaptive keep-alive driving per-model
+    # scale-to-zero instead of the fixed 40 s TTL
+    "tangram-serverless": SimPolicy("tangram-serverless", criu=True,
+                                    medusa=True, reuse=True, odkv=True,
+                                    affinity=True, concurrent=True,
+                                    queue_aware=True, host_cache_bytes=64e9,
+                                    prefetch=True, lifecycle="adaptive"),
 }
 
 
@@ -171,6 +186,10 @@ class WorkerInstance:
     model_id: str
     weight_bytes: int
     seq: int  # monotone token: invalidates stale idle_expire timers
+    # idle-period token: bumped each time a keep-alive timer is armed, so a
+    # timer from a PREVIOUS idle period (instance warm-reused meanwhile,
+    # same seq) cannot truncate the TTL the latest idle transition chose
+    idle_epoch: int = 0
     kv: Optional[ElasticKV] = None
     kv_reserved: list[tuple[int, int]] = field(default_factory=list)  # (off, size)
     running: int = 0  # in-flight requests
@@ -213,6 +232,9 @@ class SimWorker:
         self._seq = itertools.count()
         self.last_assign = -1.0
         self.failed = False
+        # serverless lifecycle manager (shared, set by ClusterSim): every
+        # instance termination reports an expiry to it
+        self.lifecycle = None
 
     # ----------------------------------------------------------------- views
     def busy_instances(self) -> list[WorkerInstance]:
@@ -330,7 +352,12 @@ class SimWorker:
         return any(q.model_id == model_id for q in self.queue)
 
     # -------------------------------------------------------------- instance
-    def terminate_instance(self, model_id: str):
+    def terminate_instance(self, model_id: str, now: Optional[float] = None):
+        """Scale an instance to zero.  `now` (when known) notifies the
+        lifecycle manager — EVERY termination is an expiry from the control
+        plane's view, whether a timer, capacity pressure (make_room /
+        terminate_idle), or a node failure killed it; otherwise the
+        manager's state and expiration counters drift from the sim."""
         inst = self.instances.pop(model_id)
         self.store.release(model_id)
         if not self.policy.reuse:
@@ -339,18 +366,20 @@ class SimWorker:
             inst.kv.finish_instance()
         for off, _ in inst.kv_reserved:
             self.store.pool.free(off)
+        if self.lifecycle is not None and now is not None:
+            self.lifecycle.on_expire(model_id, now)
 
-    def terminate_idle(self):
+    def terminate_idle(self, now: Optional[float] = None):
         for inst in list(self.idle_instances()):
-            self.terminate_instance(inst.model_id)
+            self.terminate_instance(inst.model_id, now)
 
-    def make_room(self, need_bytes: int):
+    def make_room(self, need_bytes: int, now: Optional[float] = None):
         """LRU-terminate idle co-tenants until `need_bytes` fits beside the
         still-pinned instances (warm younger tenants survive)."""
         for inst in sorted(self.idle_instances(), key=lambda i: i.last_used):
             if need_bytes <= self.capacity - self.pinned_bytes():
                 return
-            self.terminate_instance(inst.model_id)
+            self.terminate_instance(inst.model_id, now)
 
 class ClusterSim:
     def __init__(self, models: Sequence[SimModel], policy: SimPolicy, *,
@@ -378,6 +407,20 @@ class ClusterSim:
         for w in self.workers:
             w.kv_rate = kv_rates
         self.rng = random.Random(seed)
+        # serverless lifecycle manager (DESIGN.md §13).  Lazy import: the
+        # serverless package's gateway imports repro.core back — importing
+        # it at module scope would cycle through core/__init__.
+        self.lifecycle = None
+        if policy.lifecycle is not None:
+            from repro.serverless.lifecycle import (LifecycleManager,
+                                                    make_keep_alive)
+            self.lifecycle = LifecycleManager(make_keep_alive(policy.lifecycle))
+        for w in self.workers:
+            w.lifecycle = self.lifecycle
+        # current fleet-wide host-tier budget: pressure events move it, and
+        # a failed node that recovers must rejoin at the CURRENT budget,
+        # not the policy's original one
+        self._host_cap = policy.host_cache_bytes
         self.results: list[RequestResult] = []
         self.global_queue: deque[Request] = deque()
         self._events: list = []
@@ -568,9 +611,9 @@ class ClusterSim:
         if not warm:
             if self.policy.concurrent:
                 kv_need = w.kv_admit_need(model, req.batch_size)
-                w.make_room(model.bytes + kv_need)  # LRU-free idle co-tenants
+                w.make_room(model.bytes + kv_need, now)  # LRU-free idle co-tenants
             else:
-                w.terminate_idle()
+                w.terminate_idle(now)
         w.last_assign = now
         res = RequestResult(model_id=req.model_id, arrival=req.time, start=now,
                             warm=warm, queue_s=now - req.time,
@@ -595,7 +638,7 @@ class ClusterSim:
                                          now=now, overlap_s=res.init_s)
             except AllocationError:
                 # model cannot fit: drop idle co-tenants then retry once
-                w.terminate_idle()
+                w.terminate_idle(now)
                 try:
                     rep = w.store.load_model(req.model_id,
                                              self.records[req.model_id],
@@ -624,6 +667,11 @@ class ClusterSim:
             inst = WorkerInstance(req.model_id, model.bytes, next(w._seq))
             w.instances[req.model_id] = inst
 
+        if self.lifecycle is not None:
+            # recorded HERE, past every defer/requeue path, so lifecycle
+            # starts match emitted results one-for-one (a placement parked
+            # by admission control is not a start yet)
+            self.lifecycle.on_start(req.model_id, now, warm=warm)
         output_tokens = self._run_kv(req, w, inst, res, model)
         res.decode_s = (self.costs.decode_time(model.bytes, output_tokens)
                         * res.concurrency + res.kv_overhead_s)
@@ -642,6 +690,8 @@ class ClusterSim:
         """Continuous batching: the request's sequences join the model's
         running decode batch — no load, no init, no new slot."""
         self._refresh_miss_probs(w)
+        if self.lifecycle is not None:
+            self.lifecycle.on_start(req.model_id, now, warm=True)
         model = self.models[req.model_id]
         res = RequestResult(model_id=req.model_id, arrival=req.time, start=now,
                             warm=True, joined=True, queue_s=now - req.time,
@@ -669,9 +719,15 @@ class ClusterSim:
         with a COLD pool — the elastic-scaling path."""
         self._push(time, "fail", (worker_id, recover_after))
 
-    def run(self, trace: Sequence[Request]) -> list[RequestResult]:
+    def run(self, trace: Sequence[Request], *,
+            pressure: Sequence = ()) -> list[RequestResult]:
         for r in trace:
             self._push(r.time, "arrival", r)
+        for p in pressure:
+            # tenant-pressure feed (DESIGN.md §13): at p.time the co-located
+            # tenants leave p.capacity_bytes of host memory to every node's
+            # model-store tier
+            self._push(p.time, "pressure", p.capacity_bytes)
         byid = {w.device_id: w for w in self.workers}
         while self._events:
             now, _, kind, payload = heapq.heappop(self._events)
@@ -679,6 +735,8 @@ class ClusterSim:
             if kind == "arrival":
                 req: Request = payload
                 self._record_access(req.model_id)
+                if self.lifecycle is not None:
+                    self.lifecycle.observe_arrival(req.model_id, now)
                 if self.policy.concurrent:
                     # decode batching: join a running instance of the model
                     # when KV headroom and the batch cap allow it — but never
@@ -723,13 +781,31 @@ class ClusterSim:
                 # instance may have been terminated/replaced by the drain
                 cur = w.instances.get(model_id)
                 if cur is inst and inst.running == 0:
-                    self._push(now + self.policy.keep_alive, "idle_expire",
-                               (w.device_id, model_id, inst.seq))
+                    # keep-alive decision: the lifecycle manager's per-model
+                    # TTL (scale-to-zero at <= 0) or the legacy fixed TTL
+                    ttl = (self.lifecycle.on_idle(model_id, now)
+                           if self.lifecycle is not None
+                           else self.policy.keep_alive)
+                    if ttl <= 0.0:
+                        w.terminate_instance(model_id, now)
+                        self._try_schedule(now)
+                    else:
+                        # arm the timer under a fresh idle epoch: a pending
+                        # timer from an earlier idle period (instance warm-
+                        # reused since, seq unchanged) must not fire and
+                        # truncate THIS period's TTL
+                        inst.idle_epoch += 1
+                        self._push(now + ttl, "idle_expire",
+                                   (w.device_id, model_id, inst.seq,
+                                    inst.idle_epoch))
                 if not served or self.policy.concurrent:
                     self._try_schedule(now)
             elif kind == "fail":
                 wid, recover_after = payload
                 w = byid[wid]
+                if self.lifecycle is not None:
+                    for model in w.instances:  # node death scales all to zero
+                        self.lifecycle.on_expire(model, now)
                 # drop device state entirely
                 w.instances = {}
                 w.store = ReuseStore(w.capacity, self.costs,
@@ -738,9 +814,10 @@ class ClusterSim:
                                      indexed=w.indexed)
                 if w.host_cache is not None:
                     # the node died: its host cache dies with it; recovery
-                    # rejoins with a cold host tier backed by the store
+                    # rejoins with a cold host tier backed by the store, at
+                    # the CURRENT pressure budget (not the policy default)
                     w.host_cache = SimHostCache(
-                        int(self.policy.host_cache_bytes),
+                        int(self._host_cap),
                         keep_alive_s=self.policy.host_keep_alive,
                         hint_ttl_s=self.policy.prefetch_ttl)
                     w.store.host_cache = w.host_cache
@@ -756,13 +833,20 @@ class ClusterSim:
                 byid[payload].failed = False
                 self._try_schedule(now)
             elif kind == "idle_expire":
-                wid, model, seq = payload
+                wid, model, seq, epoch = payload
                 w = byid[wid]
                 inst = w.instances.get(model)
                 if (inst is not None and inst.running == 0
-                        and inst.seq == seq and not w.failed):
-                    w.terminate_instance(model)
+                        and inst.seq == seq and inst.idle_epoch == epoch
+                        and not w.failed):
+                    w.terminate_instance(model, now)
                     self._try_schedule(now)
+            elif kind == "pressure":
+                # co-located tenants resized the host tier on every node;
+                # eviction-on-shrink happens inside the cache (LRU spill)
+                self._host_cap = payload
+                for w in self.workers:
+                    w.store.set_host_capacity(payload)
         return self.results
 
 

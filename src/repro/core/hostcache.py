@@ -53,6 +53,7 @@ class SimHostCache:
         self.bytes_spilled = 0
         self.bytes_fetched = 0  # cumulative store -> host promotions
         self.expirations = 0  # cumulative TTL-aged spills (subset of evictions)
+        self.pressure_evictions = 0  # spills forced by set_capacity_bytes
 
     def __contains__(self, fingerprint: str) -> bool:
         return fingerprint in self._res
@@ -67,6 +68,24 @@ class SimHostCache:
         """Bytes of `records` currently in this node's host tier (read-only:
         no recency touch — scoring a candidate is not an access)."""
         return sum(r.nbytes for r in records if r.fingerprint in self._res)
+
+    # ------------------------------------------------------ tenant pressure
+    def set_capacity_bytes(self, capacity_bytes: Optional[int]) -> int:
+        """Resize the host-tier byte budget (serverless control plane: the
+        tenant-pressure feed squeezing this node's host memory).  Shrinking
+        below the resident set LRU-spills immediately — the co-located
+        tenant takes the pages NOW, not at the next load.  The sim cache has
+        no pin concept (the data-plane `HostTensorStore` enforces pin
+        exemption); growth just raises the cap.  Returns bytes spilled."""
+        self.capacity_bytes = capacity_bytes
+        spilled = 0
+        if capacity_bytes is not None:
+            while self._nbytes > capacity_bytes and self._res:
+                fp = next(iter(self._res))  # oldest = LRU order
+                spilled += self._res[fp]
+                self._evict(fp)
+                self.pressure_evictions += 1
+        return spilled
 
     # ------------------------------------------------------------- prefetch
     def prefetch(self, model_id: str, records: Sequence[TensorRecord],

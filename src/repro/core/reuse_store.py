@@ -128,6 +128,15 @@ class ReuseStore:
         for fp in list(self._model_tensors.get(model_id, ())):
             self._evict(fp)
 
+    def set_host_capacity(self, capacity_bytes) -> int:
+        """Tenant-pressure feed (serverless control plane): resize this
+        node's host Model Store tier.  The device pool is untouched —
+        co-located tenants contend for HOST memory; accelerator memory stays
+        the LLM worker's.  No-op (0) without a modeled host cache."""
+        if self.host_cache is None:
+            return 0
+        return self.host_cache.set_capacity_bytes(capacity_bytes)
+
     def _admit(self, entry: TensorEntry):
         if entry.record.fingerprint in self.tensor_map:
             # re-admission without a drop (policy="none" reload): release the

@@ -7,6 +7,17 @@ cluster simulation.
 
   PYTHONPATH=src python -m repro.launch.serve \
       --models llama3.2-1b,deepseek-7b --smoke --requests 8
+
+With ``--trace {poisson,diurnal,burst}`` the launcher replays a synthesized
+serverless workload through the control-plane Gateway instead of the
+round-robin sequence (DESIGN.md §13): arrivals follow the chosen process,
+``--keep-alive-policy`` (zero | fixed[:T] | adaptive[:P]) drives per-model
+scale-to-zero / retain on the trace clock, and the run ends with cold-start
+rate + TTFT percentile summaries from the metrics sink.
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --models llama3.2-1b,deepseek-7b --trace poisson --requests 8 \
+      --keep-alive-policy adaptive
 """
 from __future__ import annotations
 
@@ -34,6 +45,16 @@ def main():
                     help="bound the host Model Store tier (spills beyond)")
     ap.add_argument("--no-prefetch", dest="prefetch", action="store_false",
                     help="disable the next-request prefetch hint (§12)")
+    from repro.serverless.workload import ARRIVALS
+
+    ap.add_argument("--trace", default=None, choices=list(ARRIVALS),
+                    help="replay a synthesized serverless workload through "
+                         "the control-plane Gateway (§13)")
+    ap.add_argument("--keep-alive-policy", default="fixed:60",
+                    help="zero | fixed[:T] | adaptive[:P] (with --trace)")
+    ap.add_argument("--mean-interarrival", type=float, default=20.0,
+                    help="trace mean inter-arrival seconds (with --trace)")
+    ap.add_argument("--trace-seed", type=int, default=0)
     args = ap.parse_args()
 
     names = args.models.split(",")
@@ -47,6 +68,37 @@ def main():
             cfg = cfg.smoke()
         cfgs[n] = cfg
         engine.register(n, cfg)
+
+    if args.trace is not None:
+        # serverless control plane (§13): synthesize the arrival process
+        # over the registered models and replay it through the Gateway —
+        # keep-alive decisions run on the trace clock, phase durations are
+        # measured wall time
+        from repro.core.trace import SimModel
+        from repro.serverless import Gateway, make_trace
+
+        sim_models = [SimModel(n, 1e6, 1) for n in names]
+        trace = make_trace(args.trace, n_requests=args.requests,
+                           models=sim_models, seed=args.trace_seed,
+                           mean_interarrival=args.mean_interarrival)
+        gw = Gateway(engine, keep_alive=args.keep_alive_policy,
+                     prefetch=args.prefetch, prompt_len=args.prompt_len,
+                     gen_tokens=args.gen_tokens)
+        sink = gw.run_trace(trace)
+        for i, r in enumerate(sink.records):
+            print(f"req {i}: {r.model_id:16s} "
+                  f"{'cold' if r.cold else 'warm'} "
+                  f"load {r.load_s*1e3:7.1f}ms prefill {r.prefill_s:.2f}s "
+                  f"decode {r.decode_s/max(args.gen_tokens,1)*1e3:.0f}ms/tok")
+        s = sink.summary()
+        ls = gw.lifecycle.summary()
+        print(f"serverless summary: n={s['n']} "
+              f"cold_rate={s['cold_start_rate']:.2f} "
+              f"ttft_p50={s['ttft_p50']:.2f}s ttft_p95={s['ttft_p95']:.2f}s "
+              f"expirations={int(ls['expirations'])} "
+              f"policy={args.keep_alive_policy} trace={args.trace}")
+        engine.close()
+        return
 
     import dataclasses
     seq = list(itertools.islice(itertools.cycle(names), args.requests))

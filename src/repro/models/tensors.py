@@ -168,6 +168,7 @@ class HostTensorStore:
         self._pinned_nbytes = 0  # incremental: resident AND pinned bytes
         self.leaves_stored = 0  # cumulative leaves materialized into the store
         self.evictions = 0  # cumulative host -> store spills
+        self.bytes_spilled = 0  # cumulative bytes of those spills
         self.promotions = 0  # cumulative store -> host promotes
         self.expirations = 0  # cumulative keep-alive-aged spills
 
@@ -264,6 +265,21 @@ class HostTensorStore:
     def pinned(self, fingerprint: str) -> bool:
         return self._pins.get(fingerprint, 0) > 0
 
+    # ------------------------------------------------------ tenant pressure
+    def set_capacity_bytes(self, capacity_bytes: Optional[int]) -> int:
+        """Resize the host-tier byte budget (serverless control plane: a
+        co-located tenant's memory demand shrinking/growing this node's
+        share).  Shrinking spills LRU unpinned tensors immediately; pinned
+        tensors (loading or device-active models) are EXEMPT — pinned bytes
+        may sit above the new cap, exactly like cap-exceeding pinned loads,
+        so a pressure squeeze can never deadlock an in-flight
+        `ChunkedTransfer`.  Returns the BYTES spilled (the same unit as the
+        sim plane's `SimHostCache.set_capacity_bytes`)."""
+        before = self.bytes_spilled
+        self.capacity_bytes = capacity_bytes
+        self._enforce_cap()
+        return self.bytes_spilled - before
+
     # ------------------------------------------------------------ eviction
     def evict(self, fingerprint: str) -> bool:
         """Spill one host-resident tensor to the persistent tier.  Refuses
@@ -279,6 +295,7 @@ class HostTensorStore:
         self._nbytes -= buf.nbytes
         self.spill.put(fingerprint, buf)
         self.evictions += 1
+        self.bytes_spilled += buf.nbytes
 
     def _enforce_cap(self):
         if self.capacity_bytes is None:

@@ -1,0 +1,19 @@
+"""Serverless control plane (DESIGN.md §13).
+
+The layer above per-request placement: a trace-driven workload generator
+with a co-located-tenant pressure feed (`workload`), a per-model instance
+lifecycle manager with pluggable keep-alive policies (`lifecycle`), and a
+request gateway with TTFT-breakdown metrics (`gateway`).  The cluster
+simulator (`SimPolicy.lifecycle`, `POLICIES["tangram-serverless"]`) and the
+real engine (`launch/serve.py --trace`) both run under it.
+"""
+from repro.serverless.gateway import (Gateway, MetricsSink,  # noqa: F401
+                                      TTFTRecord, percentile,
+                                      run_serverless_sim)
+from repro.serverless.lifecycle import (AdaptiveHistogram, FixedTTL,  # noqa: F401
+                                        InstanceState, LifecycleManager,
+                                        make_keep_alive)
+from repro.serverless.workload import (ARRIVALS, PressureEvent,  # noqa: F401
+                                       burst_trace, diurnal_trace,
+                                       make_trace, poisson_trace,
+                                       pressure_walk, pressure_wave)

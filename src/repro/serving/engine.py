@@ -148,27 +148,60 @@ class ChunkedTransfer:
         return out
 
 
-@dataclass(eq=False)  # identity semantics: the queue holds THIS job
+@dataclass(eq=False)  # identity semantics: the scheduler holds THIS job
 class PrefetchJob:
-    """One hinted model's store->host promotion batch."""
+    """One hinted model's store->host promotion batch.
+
+    ``deadlines`` parallels ``fingerprints``: for each spilled tensor, the
+    bytes the joining load's chunked h2d traversal must move BEFORE it
+    reaches that tensor (its promotion deadline, in bytes).  The worker
+    promotes the globally earliest deadline across all in-flight jobs, so
+    when several hints race one store the un-hidden tail of each load
+    shrinks — FIFO whole-model order would finish one model's read while
+    another load's first tensor (deadline 0) sat unpromoted."""
 
     model_id: str
     fingerprints: list[str]
+    deadlines: list[float] = field(default_factory=list)
     done: threading.Event = field(default_factory=threading.Event)
     owns_pin: bool = False  # the hint (not a load) created the model pin
     promoted: list = field(default_factory=list)  # (fp, nbytes) actually read
     tensors_promoted: int = 0
     bytes_promoted: int = 0
     cancelled: bool = False
+    started: bool = False  # the worker promoted (or is promoting) a tensor
+    urgent: bool = False  # a load joined: drain this job ahead of deadlines
+    cursor: int = 0  # next fingerprint index
+
+    def __post_init__(self):
+        if len(self.deadlines) != len(self.fingerprints):
+            # direct submit() without deadlines: submission order stands in
+            self.deadlines = [float(i) for i in range(len(self.fingerprints))]
+
+    def next_deadline(self) -> float:
+        return self.deadlines[self.cursor]
+
+    def exhausted(self) -> bool:
+        return self.cursor >= len(self.fingerprints)
 
 
 class Prefetcher:
     """Background store->host promotion pipeline (DESIGN.md §12).
 
-    One daemon worker per engine (spawned lazily on the first hint) drains a
-    FIFO of per-model `PrefetchJob`s against the engine's tiered model
-    store, so the store_bw-limited read runs DURING queueing/init/h2d of
-    already-resident tensors instead of extending `Engine.load`.
+    One daemon worker per engine (spawned lazily on the first hint) drains
+    per-model `PrefetchJob`s against the engine's tiered model store, so the
+    store_bw-limited read runs DURING queueing/init/h2d of already-resident
+    tensors instead of extending `Engine.load`.
+
+    Scheduling is bytes-until-deadline priority, NOT whole-model FIFO: each
+    pending tensor's deadline is the h2d prefix bytes its load must move
+    before needing it (computed by `Engine.prefetch` in the chunked-transfer
+    traversal order), and the worker always promotes the globally earliest
+    deadline across every in-flight job.  When several hints race one
+    store, the reads interleave so every load's earliest-needed tensors
+    land first and the un-hidden tail shrinks fleet-wide.  A job a load has
+    JOINED is urgent — drained ahead of all deadlines, since its load is
+    now blocked on `job.done`.
 
     Safety contract: the hinted model is refcount-pinned in the host store
     BEFORE its job is enqueued (promoted bytes cannot be LRU-spilled or aged
@@ -182,32 +215,49 @@ class Prefetcher:
     def __init__(self, engine: "Engine"):
         self.engine = engine
         self._cv = threading.Condition()
-        self._queue: deque[PrefetchJob] = deque()
+        self._active: list[PrefetchJob] = []  # jobs with pending tensors
         self._jobs: dict[str, PrefetchJob] = {}  # model_id -> in-flight job
         self._thread: Optional[threading.Thread] = None
         self._stop = False
+        self._paused = False  # test seam: freeze scheduling, not submission
         self.hints = 0  # cumulative prefetch() calls
         self.joins = 0  # loads that joined an in-flight/completed job
         self.bytes_promoted = 0  # cumulative bytes moved store -> host
         self.errors = 0  # promotions that raised (job degraded to inline)
+        self.promote_log: list[tuple[str, str]] = []  # (model, fp) in order
 
     def close(self):
-        """Stop the worker thread (idempotent).  Queued jobs complete their
+        """Stop the worker thread (idempotent).  Pending jobs complete their
         events un-promoted so no joiner can hang; the thread releases its
         engine reference — an engine that issued hints is collectable after
         `Engine.close()`."""
         with self._cv:
             self._stop = True
-            for job in self._queue:
+            for job in self._active:
                 job.done.set()
-            self._queue.clear()
+            self._active.clear()
             self._cv.notify_all()
             thread, self._thread = self._thread, None
         if thread is not None:
             thread.join(timeout=5.0)
 
+    def pause(self):
+        """Freeze deadline scheduling between tensor promotions
+        (submissions still queue; URGENT jobs — ones a load has joined —
+        still drain, so a pause can never deadlock `Engine.load` or
+        `cancel_prefetch`).  Test seam: lets several hints accumulate so
+        the deadline interleaving is deterministic to assert."""
+        with self._cv:
+            self._paused = True
+
+    def resume(self):
+        with self._cv:
+            self._paused = False
+            self._cv.notify_all()
+
     def submit(self, model_id: str, fingerprints: Sequence[str],
-               owns_pin: bool) -> PrefetchJob:
+               owns_pin: bool,
+               deadlines: Optional[Sequence[float]] = None) -> PrefetchJob:
         """Enqueue a promotion job (collapses onto an in-flight job for the
         same model — a duplicate hint must not double-read the store)."""
         with self._cv:
@@ -220,12 +270,13 @@ class Prefetcher:
                 # never released, so ownership transfers to the new job
                 # (dropping it here would leak the pin forever)
                 owns_pin = owns_pin or prev.owns_pin
-            job = PrefetchJob(model_id, list(fingerprints), owns_pin=owns_pin)
+            job = PrefetchJob(model_id, list(fingerprints),
+                              list(deadlines or ()), owns_pin=owns_pin)
             self._jobs[model_id] = job
             if not job.fingerprints or self._stop:
                 job.done.set()  # nothing store-resident (or closed): pin only
                 return job
-            self._queue.append(job)
+            self._active.append(job)
             if self._thread is None:
                 self._thread = threading.Thread(
                     target=self._run, daemon=True, name="tangram-prefetcher")
@@ -238,52 +289,100 @@ class Prefetcher:
         caller waits on `job.done` and accounts its bytes).
 
         A job the worker has not STARTED is withdrawn instead of waited on:
-        behind other models' throttled promotions in the FIFO, waiting
-        would serialize this load after reads it never asked for — the
-        unhinted inline path is never slower, so the load falls back to it
-        (head-of-line bypass; the hint's pin transfers either way)."""
+        behind other models' throttled promotions, waiting would serialize
+        this load after reads it never asked for — the unhinted inline path
+        is never slower, so the load falls back to it (head-of-line bypass;
+        the hint's pin transfers either way).  A STARTED job is marked
+        urgent instead: its remaining tensors jump every other job's
+        deadlines, because a real load is now blocked on them."""
         with self._cv:
             job = self._jobs.pop(model_id, None)
-            if job is not None and job in self._queue:
-                self._queue.remove(job)  # never started: nothing promoted
+            if job is None:
+                return None
+            if not job.started and not job.done.is_set():
+                self._retire(job)  # never started: nothing promoted
                 job.cancelled = True
                 job.done.set()
+            elif not job.done.is_set():
+                job.urgent = True
+                self._cv.notify()
             return job
+
+    # ------------------------------------------------------------ worker
+    def _retire(self, job: PrefetchJob):
+        if job in self._active:
+            self._active.remove(job)
+
+    def _pick(self, urgent_only: bool = False) -> Optional[PrefetchJob]:
+        """Earliest-deadline-first over every runnable job (urgent jobs
+        first — their loads are blocked).  Retires cancelled/exhausted jobs
+        on the way.  `urgent_only` still serves joined loads while the
+        scheduler is paused — a pause must never deadlock an `Engine.load`
+        blocked on a started job's event.  Caller holds the condition
+        lock."""
+        best = None
+        for job in list(self._active):
+            if job.cancelled or job.exhausted():
+                self._retire(job)
+                self._finish(job)
+                continue
+            if urgent_only and not job.urgent:
+                continue
+            if best is None or ((not best.urgent, best.next_deadline())
+                                > (not job.urgent, job.next_deadline())):
+                best = job
+        return best
+
+    def _finish(self, job: PrefetchJob):
+        job.done.set()  # idempotent; bytes accounted per-tensor in _run
 
     def _run(self):
         while True:
             with self._cv:
-                while not self._queue and not self._stop:
+                job = None
+                while not self._stop:
+                    job = self._pick(urgent_only=self._paused)
+                    if job is not None:
+                        break
                     self._cv.wait()
                 if self._stop:
                     return
-                job = self._queue.popleft()
+                job.started = True
+                fp = job.fingerprints[job.cursor]
+                job.cursor += 1
             eng = self.engine
             try:
-                for fp in job.fingerprints:
-                    if job.cancelled or self._stop:
-                        break  # close() must quiesce mid-job, not just
-                        # drain the queue — no store mutations after it
-                    # per-tensor lock scope: the store_bw-throttled read
-                    # happens inside, so a concurrent load waits at most
-                    # one tensor
-                    with eng._store_lock:
-                        if (fp in eng.persistent_store
-                                and fp not in eng.host_store):
-                            arr = eng.host_store.fetch(fp)
-                            job.promoted.append((fp, arr.nbytes))
-                            job.tensors_promoted += 1
-                            job.bytes_promoted += arr.nbytes
+                # per-tensor lock scope: the store_bw-throttled read happens
+                # inside, so a concurrent load waits at most one tensor
+                with eng._store_lock:
+                    if (fp in eng.persistent_store
+                            and fp not in eng.host_store):
+                        arr = eng.host_store.fetch(fp)
+                        job.promoted.append((fp, arr.nbytes))
+                        job.tensors_promoted += 1
+                        job.bytes_promoted += arr.nbytes
+                        # cumulative counter advances per TENSOR (the worker
+                        # is its only writer): a close() mid-job cannot lose
+                        # the partial read's bytes
+                        self.bytes_promoted += arr.nbytes
+                        self.promote_log.append((job.model_id, fp))
+                        if len(self.promote_log) > 4096:
+                            # bounded: long-lived engines must not grow an
+                            # audit trail nothing in production reads
+                            del self.promote_log[:2048]
             except BaseException:
                 # a failed promotion must not kill the worker: un-promoted
                 # tensors are still store-resolvable, the joining load reads
                 # them inline, and later hints keep working
                 self.errors += 1
+                job.cancelled = True  # skip the job's remaining tensors
             finally:
-                # the event MUST fire even if a promotion raises (a joining
-                # load would otherwise hang forever)
-                self.bytes_promoted += job.bytes_promoted
-                job.done.set()
+                # the event MUST fire even when a promotion raises (a
+                # joining load would otherwise hang forever)
+                with self._cv:
+                    if job.cancelled or job.exhausted():
+                        self._retire(job)
+                        self._finish(job)
 
 
 class SharedKVSlab:
@@ -524,12 +623,22 @@ class Engine:
             self.host_store.age()  # expired entries are exactly what we fetch
             owns_pin = model_id not in self._host_pins
             self._pin_model(model_id)
-            spilled = [r.fingerprint for r in reg.records
-                       if r.fingerprint not in self._tensors  # device hit:
-                       # the load will never touch this tensor, don't read it
-                       and r.fingerprint not in self.host_store
-                       and r.fingerprint in self.persistent_store]
-        return self.prefetcher.submit(model_id, spilled, owns_pin)
+            spilled: list[str] = []
+            deadlines: list[float] = []
+            prefix = 0.0  # h2d bytes the load moves before this tensor
+            for r in reg.records:
+                if r.fingerprint in self._tensors:
+                    continue  # device hit: the load never touches this tensor
+                if (r.fingerprint not in self.host_store
+                        and r.fingerprint in self.persistent_store):
+                    # deadline = bytes the chunked pipeline streams ahead of
+                    # this tensor: the worker promotes smaller-prefix tensors
+                    # first, fleet-wide (bytes-until-deadline priority)
+                    spilled.append(r.fingerprint)
+                    deadlines.append(prefix)
+                prefix += r.nbytes
+        return self.prefetcher.submit(model_id, spilled, owns_pin,
+                                      deadlines=deadlines)
 
     def close(self):
         """Release the engine's background resources (the prefetch worker).
@@ -571,6 +680,23 @@ class Engine:
     def release(self, model_id: str):
         self.store.release(model_id)
         self._unpin_model(model_id)  # host copies become LRU-evictable
+
+    def retain(self, model_id: str):
+        """Keep-alive retain (serverless control plane): the lifecycle
+        manager decided this model stays WARM after its last instance
+        finished — re-activate it in the store (never an eviction victim)
+        and re-pin its host copies (exempt from cap pressure and aging)
+        until `release` scales it to zero."""
+        self.store.activate(model_id)
+        self._pin_model(model_id)
+
+    def set_host_capacity(self, capacity_bytes: Optional[int]) -> int:
+        """Tenant-pressure feed: resize the host Model Store budget under
+        the store lock (a co-located tenant grabbed or returned host
+        memory).  Pinned models are exempt — see
+        `HostTensorStore.set_capacity_bytes`.  Returns bytes spilled."""
+        with self._store_lock:
+            return self.host_store.set_capacity_bytes(capacity_bytes)
 
     def finish_instance(self, model_id: str):
         """Instance-path release, refcounted: the model stays ACTIVE in the

@@ -142,10 +142,12 @@ def test_tiered_decisions_pinned_replay_exact(tiered_results):
                      r.load_s, r.decode_s)
     assert list(map(key, tiered_results[TIER_CAPS[1]])) == \
         list(map(key, replay))
-    # the per-node caches respected their byte cap throughout
+    # the per-node caches respected their byte cap throughout; pressure
+    # occurred somewhere in the fleet (full-TTL keep-alives — PR 5's
+    # idle-epoch fix — leave one node's cache below its cap on this trace)
     for w in sim.workers:
         assert w.host_cache.nbytes() <= TIER_CAPS[1]
-        assert w.host_cache.evictions > 0  # pressure actually occurred
+    assert sum(w.host_cache.evictions for w in sim.workers) > 0
 
 
 # -------------------------------------- prefetch-on-affinity-hint (DESIGN §12)
@@ -228,4 +230,103 @@ def test_cold_reuse_fraction_monotone(golden_results):
         frac[pol] = st.fmean(r.reuse_fraction for r in cold) if cold else 0.0
     assert frac["sllm"] == 0.0
     assert frac["tangram"] > frac["sllm"]
-    assert frac["tangram"] > 0.3
+    # calibration pin, re-anchored for PR 5's idle-epoch fix: full-TTL
+    # keep-alives leave fewer (and colder) cold loads, so the mean cold
+    # reuse fraction sits lower than under the stale-timer truncation
+    assert frac["tangram"] > 0.2
+
+
+# ------------------------------- serverless control plane (DESIGN.md §13)
+def _run_serverless(keep_alive: str, *, pressured: bool):
+    """tangram-serverless over a bursty serverless workload with (optionally)
+    a 50%-budget tenant-pressure square wave squeezing every node's host
+    tier mid-flight."""
+    from repro.serverless import make_trace, pressure_wave
+
+    models = PAPER_MODELS[2:6]
+    trace = make_trace("burst", n_requests=160, models=models,
+                       seed=GOLDEN_SEED, mean_interarrival=12.0,
+                       max_output_tokens=128)
+    pressure = ()
+    if pressured:
+        # harsher than fig16's 50% wave: the burst workload concentrates on
+        # two hot models, so the host tier must be squeezed below THEIR
+        # footprint for eviction-on-shrink to provably run
+        pressure = pressure_wave(horizon_s=trace[-1].time,
+                                 base_bytes=sum(m.bytes for m in models),
+                                 low_frac=0.2, period_s=120.0)
+    pol = dataclasses.replace(POLICIES["tangram-serverless"],
+                              name=f"serverless-golden-{keep_alive}",
+                              lifecycle=keep_alive)
+    sim = ClusterSim(models, pol, n_workers=2, seed=GOLDEN_SEED)
+    return sim.run(trace, pressure=pressure), sim
+
+
+@pytest.fixture(scope="module")
+def serverless_results():
+    return {(ka, pressured): _run_serverless(ka, pressured=pressured)
+            for ka in ("zero", "adaptive") for pressured in (False, True)}
+
+
+def test_serverless_every_request_completes_under_pressure(serverless_results):
+    """The fig16 acceptance: a 50%-budget squeeze (eviction-on-shrink) can
+    cost store traffic but never deadlock or drop a request."""
+    for key, (res, sim) in serverless_results.items():
+        assert len(res) == 160, key
+    _, sim = serverless_results[("adaptive", True)]
+    assert sum(w.host_cache.pressure_evictions for w in sim.workers) > 0
+
+
+def test_serverless_lifecycle_decisions_replay_exact(serverless_results):
+    """Golden lifecycle pin: re-running the sim reproduces the ENTIRE
+    decision sequence — every cold/warm classification, every idle TTL,
+    every expiry — event-for-event, under pressure included."""
+    for ka in ("zero", "adaptive"):
+        first_res, first_sim = serverless_results[(ka, True)]
+        replay_res, replay_sim = _run_serverless(ka, pressured=True)
+        assert first_sim.lifecycle.log == replay_sim.lifecycle.log, ka
+        key = lambda r: (r.model_id, r.arrival, r.start, r.warm, r.joined,
+                         r.bytes_hit, r.bytes_from_host, r.bytes_from_store,
+                         r.load_s, r.decode_s)
+        assert list(map(key, first_res)) == list(map(key, replay_res)), ka
+
+
+def test_serverless_lifecycle_log_matches_results(serverless_results):
+    """Every emitted result has a matching lifecycle start event with the
+    same cold/warm classification — the manager and the sim cannot drift."""
+    for key, (res, sim) in serverless_results.items():
+        starts = [(e, m) for _, e, m, _ in sim.lifecycle.log
+                  if e in ("cold", "warm")]
+        assert len(starts) == len(res), key
+        by_time = sorted(res, key=lambda r: (r.start, r.arrival))
+        # counts must agree exactly (order within one timestamp may differ)
+        from collections import Counter
+        assert Counter(starts) == Counter(
+            ("warm" if r.warm else "cold", r.model_id) for r in by_time), key
+
+
+def test_serverless_zero_expires_every_idle_and_adaptive_keeps_warm(
+        serverless_results):
+    zero_sim = serverless_results[("zero", False)][1]
+    adpt_sim = serverless_results[("adaptive", False)][1]
+    zc, ac = zero_sim.lifecycle.counters, adpt_sim.lifecycle.counters
+    # scale-to-zero: every idle transition expires (cold next time)
+    assert zc.expirations >= zc.cold_starts - len(zero_sim.models)
+    assert ac.cold_starts < zc.cold_starts
+    # warm instances may outlive the trace under adaptive keep-alive
+    assert ac.expirations < zc.expirations
+
+
+def test_serverless_pressure_costs_store_bytes_not_correctness(
+        serverless_results):
+    calm, _ = serverless_results[("adaptive", False)]
+    squeezed, _ = serverless_results[("adaptive", True)]
+    # >=, not >: LRU eviction-on-shrink spills the bytes least likely to be
+    # re-read, so a tidy squeeze often costs nothing — the strict re-pay
+    # contract is pinned at cache level in tests/test_serverless.py
+    assert sum(r.bytes_from_store for r in squeezed) >= \
+        sum(r.bytes_from_store for r in calm)
+    # byte-accounting identity holds under dynamic resize too
+    for r in squeezed:
+        assert r.bytes_from_host + r.bytes_from_store == r.bytes_transferred
+        assert r.bytes_hit + r.bytes_transferred == r.bytes_total

@@ -43,3 +43,19 @@ def test_serve_launcher():
         capture_output=True, text=True, timeout=600, env=ENV)
     assert out.returncode == 0, out.stderr[-1500:]
     assert "reuse=100%" in out.stdout  # second request fully reused
+
+
+def test_serve_launcher_trace_replay():
+    """--trace replays a synthesized serverless workload through the
+    control-plane Gateway (DESIGN.md §13): lifecycle-classified requests
+    plus a cold-rate/percentile summary from the metrics sink."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--models", "llama3.2-1b", "--trace", "poisson", "--requests", "3",
+         "--keep-alive-policy", "adaptive", "--mean-interarrival", "5",
+         "--prompt-len", "16", "--gen-tokens", "2"],
+        capture_output=True, text=True, timeout=600, env=ENV)
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "serverless summary:" in out.stdout
+    assert "cold" in out.stdout and "warm" in out.stdout  # keep-alive hit
+    assert "policy=adaptive trace=poisson" in out.stdout

@@ -246,3 +246,112 @@ def test_cluster_host_keep_alive_increases_store_traffic():
     assert sum(w.host_cache.expirations for w in sim.workers) > 0
     assert sum(r.bytes_from_store for r in aged) > \
         sum(r.bytes_from_store for r in static)
+
+
+# --------------------------------------- real-plane deadline scheduling
+def _stub_engine(spilled: dict[str, bytes]):
+    """A minimal engine facade for the Prefetcher: a real tiered host store
+    (numpy-backed) plus the store lock — no jax, no model registry."""
+    import threading
+    import types
+
+    import numpy as np
+
+    from repro.models.tensors import HostTensorStore
+
+    eng = types.SimpleNamespace()
+    eng.host_store = HostTensorStore(10**9)
+    eng.persistent_store = eng.host_store.spill
+    eng._store_lock = threading.RLock()
+    for fp, size in spilled.items():
+        eng.persistent_store.put(fp, np.zeros(size, np.uint8))
+    return eng
+
+
+def test_prefetcher_interleaves_racing_hints_by_deadline():
+    """Bytes-until-deadline priority (the ROADMAP item FIFO left open):
+    with two hinted models racing one store, promotions must follow the
+    globally smallest h2d-prefix deadline — each load's earliest-needed
+    tensors first — not whole-model FIFO order."""
+    from repro.serving.engine import Prefetcher
+
+    a = {f"a{i}": 10 for i in range(3)}
+    b = {f"b{i}": 10 for i in range(3)}
+    eng = _stub_engine({**a, **b})
+    pf = Prefetcher(eng)
+    pf.pause()  # freeze scheduling so both hints are pending together
+    # deadlines: a's tensors sit at h2d prefixes 0/100/400, b's at 50/150/200
+    ja = pf.submit("a", ["a0", "a1", "a2"], False, deadlines=[0.0, 100.0, 400.0])
+    jb = pf.submit("b", ["b0", "b1", "b2"], False, deadlines=[50.0, 150.0, 200.0])
+    pf.resume()
+    for job in (ja, jb):
+        job.done.wait(5.0)
+        assert job.done.is_set()
+    # merged global deadline order, NOT [a0 a1 a2 b0 b1 b2] (FIFO)
+    assert pf.promote_log == [("a", "a0"), ("b", "b0"), ("a", "a1"),
+                              ("b", "b1"), ("b", "b2"), ("a", "a2")]
+    assert pf.bytes_promoted == 60
+    pf.close()
+
+
+def test_prefetcher_urgent_join_drains_job_first():
+    """A load joining a STARTED job blocks on job.done — its remaining
+    tensors must jump every other job's deadlines."""
+    import time as _t
+
+    from repro.serving.engine import Prefetcher
+
+    sizes = {f"a{i}": 10 for i in range(3)} | {f"b{i}": 10 for i in range(3)}
+    eng = _stub_engine(sizes)
+    pf = Prefetcher(eng)
+    pf.pause()
+    # interleaved deadlines: unhinted EDF order would be a0 b0 a1 b1 a2 b2
+    pf.submit("a", ["a0", "a1", "a2"], False, deadlines=[0.0, 2.0, 4.0])
+    job_b = pf.submit("b", ["b0", "b1", "b2"], False, deadlines=[1.0, 3.0, 5.0])
+    job_b.started = True  # as if the worker already promoted from b
+    pf.resume()
+    taken = pf.take("b")  # a load joins b mid-flight -> urgent
+    assert taken is job_b and job_b.urgent
+    job_b.done.wait(5.0)
+    assert job_b.done.is_set()
+    deadline = _t.monotonic() + 5.0
+    while len(pf.promote_log) < 6 and _t.monotonic() < deadline:
+        _t.sleep(0.01)
+    b_positions = [i for i, (m, _) in enumerate(pf.promote_log) if m == "b"]
+    # every b promotion lands before a's tail: urgent beats deadline order
+    assert b_positions and max(b_positions) <= 3, pf.promote_log
+    pf.close()
+
+
+def test_prefetcher_unstarted_take_withdraws_job():
+    """Head-of-line bypass survives the EDF rewrite: taking a job the
+    worker never started withdraws it (nothing promoted, no waiting)."""
+    from repro.serving.engine import Prefetcher
+
+    eng = _stub_engine({"a0": 10})
+    pf = Prefetcher(eng)
+    pf.pause()
+    job = pf.submit("a", ["a0"], False, deadlines=[0.0])
+    taken = pf.take("a")
+    assert taken is job and job.cancelled and job.done.is_set()
+    assert job.tensors_promoted == 0
+    pf.resume()
+    pf.close()
+
+
+def test_prefetcher_paused_still_serves_urgent_joins():
+    """pause() freezes deadline scheduling but must never deadlock a load
+    blocked on a STARTED job — urgent jobs drain through the pause."""
+    from repro.serving.engine import Prefetcher
+
+    eng = _stub_engine({"a0": 10, "a1": 10})
+    pf = Prefetcher(eng)
+    pf.pause()
+    job = pf.submit("a", ["a0", "a1"], False, deadlines=[0.0, 1.0])
+    job.started = True  # as if the worker was mid-job when paused
+    taken = pf.take("a")  # a load joins: urgent, must finish while paused
+    assert taken is job and job.urgent
+    assert job.done.wait(5.0), "paused prefetcher deadlocked an urgent join"
+    assert job.tensors_promoted == 2
+    pf.resume()
+    pf.close()

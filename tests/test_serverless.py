@@ -1,0 +1,296 @@
+"""Serverless control plane (DESIGN.md §13): workload driver, lifecycle
+manager, tenant-pressure resize paths, gateway metrics, and the end-to-end
+cluster-sim wiring.  Deterministic and subprocess-free — part of the fast
+CI subset (tests/fast_tests.txt)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import POLICIES, ClusterSim, PAPER_MODELS
+from repro.core.hostcache import SimHostCache
+from repro.models.tensors import HostTensorStore, TensorRecord
+from repro.serverless import (MetricsSink, PressureEvent, burst_trace,
+                              diurnal_trace, make_trace, percentile,
+                              poisson_trace, pressure_walk, pressure_wave,
+                              run_serverless_sim)
+from repro.serverless.lifecycle import (AdaptiveHistogram, FixedTTL,
+                                        InstanceState, LifecycleManager,
+                                        make_keep_alive)
+
+MODELS = PAPER_MODELS[2:6]
+
+
+def recs(model_id, sizes):
+    return [TensorRecord(name=f"{model_id}/t{i}", shape=(s,), dtype="uint8",
+                         fingerprint=f"{model_id}/t{i}", nbytes=s)
+            for i, s in enumerate(sizes)]
+
+
+# ---------------------------------------------------------------- workload
+@pytest.mark.parametrize("kind", ["poisson", "diurnal", "burst"])
+def test_traces_deterministic_sorted_and_sized(kind):
+    a = make_trace(kind, n_requests=80, models=MODELS, seed=5)
+    b = make_trace(kind, n_requests=80, models=MODELS, seed=5)
+    c = make_trace(kind, n_requests=80, models=MODELS, seed=6)
+    assert a == b  # seeded: replay-exact
+    assert a != c  # and the seed actually matters
+    assert len(a) == 80
+    assert all(x.time <= y.time for x, y in zip(a, a[1:]))
+    ids = {m.model_id for m in MODELS}
+    assert all(r.model_id in ids for r in a)
+
+
+def test_unknown_arrival_kind_rejected():
+    with pytest.raises(ValueError):
+        make_trace("weibull", n_requests=4)
+
+
+def test_diurnal_rate_actually_modulates():
+    """Lewis thinning must produce more arrivals near the sinusoid's peak
+    than its trough — count arrivals per half-period phase."""
+    period = 200.0
+    trace = diurnal_trace(n_requests=600, models=MODELS, seed=3,
+                          mean_interarrival=2.0, period_s=period,
+                          amplitude=0.8)
+    peak = sum(1 for r in trace if (r.time % period) < period / 2)
+    trough = len(trace) - peak
+    assert peak > 1.5 * trough
+
+
+def test_burst_trace_has_volleys_at_hot_models():
+    trace = burst_trace(n_requests=200, models=MODELS, seed=11,
+                        mean_interarrival=10.0, burst_every_s=120.0,
+                        burst_size=6, burst_models=2, burst_window_s=2.0)
+    # find a window of 6 consecutive requests inside 2 s: a volley
+    volleys = [trace[i : i + 6] for i in range(len(trace) - 5)
+               if trace[i + 5].time - trace[i].time <= 2.0]
+    assert volleys, "no burst volley landed"
+    # volleys target the configured number of hot models (a background
+    # arrival may straddle a window, so SOME pure volley must exist)
+    assert any(len({r.model_id for r in v}) <= 2 for v in volleys)
+
+
+def test_poisson_mean_interarrival_in_range():
+    trace = poisson_trace(n_requests=500, models=MODELS, seed=1,
+                          mean_interarrival=10.0)
+    gaps = [y.time - x.time for x, y in zip(trace, trace[1:])]
+    assert 8.0 < sum(gaps) / len(gaps) < 12.0
+
+
+def test_pressure_wave_alternates_and_walk_stays_bounded():
+    base = 1000
+    wave = pressure_wave(horizon_s=1000.0, base_bytes=base, low_frac=0.5,
+                         period_s=200.0, duty=0.5)
+    assert wave and wave[0].capacity_bytes == 500
+    caps = [p.capacity_bytes for p in wave]
+    assert set(caps) == {500, 1000}
+    assert caps == [500, 1000] * (len(caps) // 2) + [500] * (len(caps) % 2)
+    assert all(x.time < y.time for x, y in zip(wave, wave[1:]))
+    walk = pressure_walk(horizon_s=1000.0, base_bytes=base, step_s=50.0,
+                         low_frac=0.4, seed=2)
+    assert walk == pressure_walk(horizon_s=1000.0, base_bytes=base,
+                                 step_s=50.0, low_frac=0.4, seed=2)
+    assert all(400 <= p.capacity_bytes <= 1000 for p in walk)
+
+
+# --------------------------------------------------------------- lifecycle
+def test_make_keep_alive_specs():
+    assert make_keep_alive("zero").ttl("m") == 0.0
+    assert make_keep_alive("fixed:17.5").ttl("m") == 17.5
+    assert isinstance(make_keep_alive("adaptive"), AdaptiveHistogram)
+    assert make_keep_alive("adaptive:0.5").percentile == 0.5
+    with pytest.raises(ValueError):
+        make_keep_alive("sometimes")
+
+
+def test_adaptive_learns_typical_gap():
+    pol = AdaptiveHistogram(bucket_s=5.0, percentile=0.95, margin=1.0,
+                            min_ttl=2.0, max_ttl=300.0, default_ttl=60.0,
+                            min_samples=4)
+    assert pol.ttl("m") == 60.0  # unseen model: default
+    for _ in range(20):
+        pol.observe("m", 12.0)  # gaps land in the [10, 15) bucket
+    assert pol.ttl("m") == 15.0  # covers the bucket's upper edge
+    # a model whose gaps exceed the window scales down fast, not up
+    for _ in range(20):
+        pol.observe("sparse", 1e6)
+    assert pol.ttl("sparse") == 2.0
+
+
+def test_adaptive_percentile_tracks_tail_not_mode():
+    pol = AdaptiveHistogram(bucket_s=5.0, percentile=0.95, margin=1.0,
+                            min_samples=4, default_ttl=60.0)
+    for _ in range(90):
+        pol.observe("m", 3.0)
+    for _ in range(10):
+        pol.observe("m", 43.0)  # 10% of gaps are ~45 s
+    assert pol.ttl("m") == 45.0  # p95 sits inside the tail bucket
+
+
+def test_manager_states_counters_and_log_are_deterministic():
+    def run():
+        mgr = LifecycleManager(FixedTTL(10.0))
+        mgr.observe_arrival("m", 1.0)
+        assert mgr.state_of("m") is InstanceState.COLD
+        mgr.on_start("m", 1.0, warm=False)
+        assert mgr.state_of("m") is InstanceState.LIVE
+        assert mgr.on_idle("m", 5.0) == 10.0
+        assert mgr.state_of("m") is InstanceState.WARM
+        mgr.observe_arrival("m", 9.0)
+        mgr.on_start("m", 9.0, warm=True)
+        mgr.on_idle("m", 12.0)
+        mgr.on_expire("m", 22.0)
+        assert mgr.state_of("m") is InstanceState.COLD
+        return mgr
+
+    a, b = run(), run()
+    assert a.log == b.log
+    assert a.counters.cold_starts == 1 and a.counters.warm_starts == 1
+    assert a.counters.expirations == 1 and a.counters.arrivals == 2
+    assert a.summary()["cold_start_rate"] == 0.5
+
+
+def test_scale_to_zero_manager_goes_cold_at_idle():
+    mgr = LifecycleManager(make_keep_alive("zero"))
+    mgr.on_start("m", 0.0, warm=False)
+    assert mgr.on_idle("m", 1.0) == 0.0
+    assert mgr.state_of("m") is InstanceState.COLD
+
+
+# ---------------------------------------------------- capacity resize paths
+def test_sim_hostcache_shrink_spills_lru_first():
+    hc = SimHostCache(1000)
+    r = recs("m", [400, 300, 200])
+    hc.plan_fetch(r, now=0.0)
+    hc.plan_fetch(r[:1], now=1.0)  # touch t0: it becomes MRU
+    spilled = hc.set_capacity_bytes(500)
+    # LRU order spills t1 (300) then t2 (200); MRU t0 survives
+    assert spilled == 500
+    assert r[0].fingerprint in hc
+    assert r[1].fingerprint not in hc and r[2].fingerprint not in hc
+    assert hc.nbytes() == 400
+    assert hc.pressure_evictions == 2
+    assert hc.set_capacity_bytes(2000) == 0  # growth never spills
+    assert hc.nbytes() == 400
+    # the strict cost contract: re-reading the shrink-spilled tensors pays
+    # the store tier again (a set_capacity_bytes that only bumped counters
+    # without evicting would return (500, 0) here and fail)
+    assert hc.plan_fetch(r, now=2.0) == (400, 500)
+
+
+def test_host_store_shrink_respects_pins():
+    """Eviction-on-shrink must skip pinned (loading / device-active)
+    tensors even when that leaves the store over its new cap — a pressure
+    squeeze can never deadlock a pinned load (the fig16 acceptance)."""
+    hs = HostTensorStore(1000)
+    for fp, n in (("a", 400), ("b", 300), ("c", 200)):
+        hs.put(fp, np.zeros(n, np.uint8))
+    hs.pin("a")
+    hs.pin("b")
+    # returns BYTES spilled (same unit as SimHostCache.set_capacity_bytes)
+    assert hs.set_capacity_bytes(100) == 200
+    # only the unpinned tensor spilled; pinned bytes sit above the cap
+    assert "a" in hs and "b" in hs and "c" not in hs
+    assert hs.nbytes() == 700 > 100
+    assert hs.pinned_nbytes() == 700
+    # releasing a pin makes its bytes evictable immediately
+    hs.unpin("b")
+    assert "b" not in hs and hs.nbytes() == 400
+    # and the spilled tensors stayed resolvable (promote path intact)
+    assert hs.spill.nbytes() == 500
+    hs.set_capacity_bytes(1000)
+    assert hs.fetch("c").nbytes == 200
+
+
+# ----------------------------------------------------------------- gateway
+def test_metrics_sink_percentiles_and_cold_rate():
+    sink = MetricsSink()
+    from repro.serverless.gateway import TTFTRecord
+
+    for i in range(100):
+        sink.add(TTFTRecord(model_id="m", arrival=float(i), cold=i < 20,
+                            load_s=float(i)))
+    s = sink.summary()
+    assert s["n"] == 100 and s["cold_start_rate"] == 0.2
+    assert s["ttft_p50"] == 50.0 and s["ttft_p95"] == 95.0
+    assert s["cold_ttft_p95"] == 19.0  # over the 20 cold records only
+    assert percentile([], 0.5) == 0.0
+    assert MetricsSink().summary() == {"n": 0}
+
+
+# -------------------------------------------------------------- end to end
+def _sweep(ka: str, pressure=()):
+    trace = make_trace("poisson", n_requests=100, models=MODELS, seed=7,
+                       mean_interarrival=12.0, max_output_tokens=128)
+    pol = dataclasses.replace(POLICIES["tangram-serverless"],
+                              name=f"t-{ka}", lifecycle=ka)
+    return run_serverless_sim(MODELS, trace, pol, n_workers=2, seed=7,
+                              pressure=pressure)
+
+
+def test_sim_lifecycle_counters_match_results():
+    sim, sink = _sweep("adaptive")
+    s = sink.summary()
+    ls = sim.lifecycle.summary()
+    assert s["n"] == 100
+    assert ls["cold_starts"] + ls["warm_starts"] == s["n"]
+    assert ls["cold_starts"] == s["cold_starts"]
+
+
+def test_sim_scale_to_zero_leaves_no_idle_instances():
+    sim, _ = _sweep("zero")
+    for w in sim.workers:
+        assert not w.idle_instances()  # every idle terminated immediately
+
+
+def test_sim_adaptive_beats_scale_to_zero():
+    _, zero = _sweep("zero")
+    _, adpt = _sweep("adaptive")
+    assert adpt.summary()["cold_start_rate"] < \
+        zero.summary()["cold_start_rate"]
+    assert adpt.summary()["ttft_p95"] <= zero.summary()["ttft_p95"]
+
+
+def test_sim_pressure_squeeze_spills_but_never_deadlocks():
+    trace = make_trace("poisson", n_requests=100, models=MODELS, seed=7,
+                       mean_interarrival=12.0, max_output_tokens=128)
+    press = pressure_wave(horizon_s=trace[-1].time,
+                          base_bytes=sum(m.bytes for m in MODELS),
+                          low_frac=0.5, period_s=120.0)
+    sim, sink = _sweep("adaptive", pressure=press)
+    s = sink.summary()
+    assert s["n"] == 100  # every request completed under the squeeze
+    assert sum(w.host_cache.pressure_evictions for w in sim.workers) > 0
+    # >=, not >: a tidy squeeze's LRU spills the bytes LEAST likely to be
+    # re-read, so store traffic often matches the calm run exactly — the
+    # strict re-pay contract is pinned at the cache level in
+    # test_sim_hostcache_shrink_spills_lru_first; this is the fleet-level
+    # safety half (evictions happened, nothing deadlocked or got cheaper)
+    _, calm = _sweep("adaptive")
+    assert s["bytes_from_store"] >= calm.summary()["bytes_from_store"]
+
+
+def test_sim_legacy_policies_unaffected_by_lifecycle_field():
+    """tangram-prefetch (lifecycle=None) must be byte-for-byte identical to
+    its pre-control-plane behaviour — the subsystem is opt-in."""
+    trace = make_trace("poisson", n_requests=60, models=MODELS, seed=3,
+                       mean_interarrival=12.0, max_output_tokens=128)
+    runs = []
+    for _ in range(2):
+        sim = ClusterSim(MODELS, POLICIES["tangram-prefetch"], n_workers=2,
+                         seed=3)
+        runs.append(sim.run(trace))
+        assert sim.lifecycle is None
+    assert runs[0] == runs[1]
+
+
+def test_pressure_event_reaches_every_worker():
+    trace = make_trace("poisson", n_requests=30, models=MODELS, seed=2,
+                       mean_interarrival=12.0, max_output_tokens=64)
+    sim = ClusterSim(MODELS, POLICIES["tangram-serverless"], n_workers=2,
+                     seed=2)
+    cap = int(1e9)
+    sim.run(trace, pressure=[PressureEvent(1.0, cap)])
+    for w in sim.workers:
+        assert w.host_cache.capacity_bytes == cap
