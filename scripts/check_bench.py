@@ -21,6 +21,7 @@ on every push, not just when someone remembers to look.
 from __future__ import annotations
 
 import argparse
+import math
 import os
 import sys
 from pathlib import Path
@@ -34,7 +35,8 @@ from benchmarks.common import load_bench_entries  # noqa: E402
 #: machine-independent and always gate — any movement is an algorithm
 #: change, not scheduler jitter (the smoke noise floor still applies, since
 #: smoke entries run a smaller trace).
-LOWER_IS_BETTER = {"serverless.cold_rate", "serverless.ttft_p95"}
+LOWER_IS_BETTER = {"serverless.cold_rate", "serverless.ttft_p95",
+                   "serverless.fleet.cold_rate", "serverless.fleet.ttft_p95"}
 
 
 def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
@@ -63,6 +65,17 @@ def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
     for gain in ("cold_rate_gain_vs_zero", "p95_gain_vs_zero"):
         if gain in sv:
             out[f"serverless.{gain}"] = sv[gain]
+    # fig16 fleet sweep (DESIGN.md §14): the multi-engine gateway's
+    # headline cell (adaptive keep-alive + predictive pre-warm, no
+    # pressure) and its gains over reactive prefetch
+    fl = entry.get("serverless", {}).get("fleet", {}).get("headline", {})
+    if "cold_start_rate" in fl:
+        out["serverless.fleet.cold_rate"] = fl["cold_start_rate"]
+    if "ttft_p95" in fl:
+        out["serverless.fleet.ttft_p95"] = fl["ttft_p95"]
+    for gain in ("cold_rate_gain_vs_reactive", "p95_gain_vs_reactive"):
+        if gain in fl:
+            out[f"serverless.fleet.{gain}"] = fl[gain]
     if absolute:
         if "decode" in entry:
             out["decode.fused_steps_per_s"] = \
@@ -121,6 +134,19 @@ def main() -> int:
         print("check_bench: no entries — nothing to gate")
         return 0
     cur = entries[-1]
+    # a non-finite value in the NEWEST entry is a producer bug (a gain
+    # ratio divided by zero upstream), and comparing against inf/nan would
+    # silently pass or poison every later gate — reject it outright, even
+    # when there is no previous entry to compare against
+    bad = [(name, val) for name, val in
+           sorted(metrics_of(cur, absolute=True).items())
+           if not math.isfinite(val)]
+    if bad:
+        print("check_bench: FAIL — non-finite metric values in the newest "
+              "entry (did a gain ratio divide by zero?):")
+        for name, val in bad:
+            print(f"  - {name} = {val}")
+        return 1
     prev = next((e for e in reversed(entries[:-1])
                  if e.get("smoke") == cur.get("smoke")), None)
     if prev is None:

@@ -21,5 +21,5 @@ from repro.core.scheduler import (AFFINITY_POLICIES, ScheduleEntry,  # noqa: F40
                                   affinity_schedule, random_schedule)
 from repro.core.trace import (DATASETS, LOCALITY, PAPER_MODELS, Request,  # noqa: F401
                               SimModel, access_intervals, generate_trace,
-                              generate_multi_tenant_trace,
+                              generate_multi_tenant_trace, percentile,
                               synthetic_tensor_sizes)

@@ -42,7 +42,8 @@ from repro.core.hostcache import SimHostCache
 from repro.core.regions import RState
 from repro.core.reuse_store import AllocationError, ReuseStore
 from repro.core.scheduler import affinity_schedule, random_schedule
-from repro.core.trace import Request, SimModel, synthetic_tensor_sizes
+from repro.core.trace import (Request, SimModel, percentile,
+                              synthetic_tensor_sizes)
 from repro.models.tensors import TensorRecord
 
 
@@ -860,8 +861,8 @@ def summarize(results: Sequence[RequestResult]) -> dict[str, float]:
     return {
         "n": len(results),
         "ttft_mean": st.fmean(ttfts),
-        "ttft_p50": ttfts[len(ttfts) // 2],
-        "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
+        "ttft_p50": percentile(ttfts, 0.50),
+        "ttft_p99": percentile(ttfts, 0.99),
         "load_mean": st.fmean(r.load_phase for r in results),
         "warm_frac": sum(r.warm for r in results) / len(results),
         "joined_frac": sum(r.joined for r in results) / len(results),

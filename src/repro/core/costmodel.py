@@ -111,6 +111,28 @@ class PhaseCosts:
         return ((host_bytes + hidden) / self.hw.h2d_bw
                 + (store_bytes - hidden) / slow)
 
+    # ----------------------------------------- predictive pre-warm (§14)
+    def prewarm_cost(self, store_bytes: float,
+                     displaced_bytes: float = 0.0) -> float:
+        """Shared-resource seconds a speculative pre-warm takes from
+        co-located tenants (DESIGN.md §14): the store-bandwidth slot its
+        promotion occupies, plus the re-promotion debt of host bytes it
+        displaces (each displaced byte must come back through the
+        overlapped ``min(h2d_bw, store_bw)`` pipeline if its model
+        re-arrives)."""
+        slow = min(self.hw.h2d_bw, self.hw.store_bw)
+        return store_bytes / self.hw.store_bw + displaced_bytes / slow
+
+    def prewarm_net_benefit(self, saved_s: float, prob: float,
+                            store_bytes: float,
+                            displaced_bytes: float = 0.0) -> float:
+        """Expected seconds a pre-warm wins: cold-start seconds saved if
+        the predicted arrival lands (discounted by its probability) minus
+        the resource seconds the speculation costs whether or not it does.
+        The fleet pre-warms only when this is positive."""
+        return prob * saved_s - self.prewarm_cost(store_bytes,
+                                                  displaced_bytes)
+
     def merge_time(self, moved_bytes: float) -> float:
         return moved_bytes / self.hw.d2d_bw
 

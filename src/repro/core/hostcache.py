@@ -98,6 +98,13 @@ class SimHostCache:
                            if r.fingerprint not in self._res)
         self._pending[model_id] = (now, absent)
 
+    def cancel_prefetch(self, model_id: str) -> bool:
+        """Withdraw a pending hint (the placement it belonged to expired or
+        was re-routed): the background read stops crediting overlap to any
+        later load.  Sim mirror of `Engine.cancel_prefetch`.  Returns True
+        when a hint was actually pending."""
+        return self._pending.pop(model_id, None) is not None
+
     def take_prefetch(self, model_id: str, now: float,
                       records: Sequence[TensorRecord] = ()
                       ) -> Optional[tuple[float, int]]:

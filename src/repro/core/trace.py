@@ -74,6 +74,18 @@ class Request:
     batch_size: int
 
 
+def percentile(xs: Sequence[float], q: float) -> float:
+    """The ONE percentile index convention every plane reports with:
+    sorted values, index ``min(n - 1, int(n * q))``, 0.0 on empty input.
+    ``core.cluster.summarize`` and the serverless ``MetricsSink`` both
+    route through here, so fig8/fig16 percentiles cannot drift apart
+    (tests/test_serverless.py pins the convention)."""
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    return xs[min(len(xs) - 1, int(len(xs) * q))]
+
+
 def synthetic_tensor_sizes(model: SimModel, rng: random.Random) -> list[int]:
     """Split a model's bytes into realistic per-tensor sizes: a few large
     (embeddings) + many medium (layer weights), 256-byte aligned."""

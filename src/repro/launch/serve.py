@@ -18,6 +18,13 @@ rate + TTFT percentile summaries from the metrics sink.
   PYTHONPATH=src python -m repro.launch.serve \
       --models llama3.2-1b,deepseek-7b --trace poisson --requests 8 \
       --keep-alive-policy adaptive
+
+With ``--n-engines N`` (N >= 2, requires ``--trace``) the trace replays
+through the multi-engine ``FleetGateway`` instead (DESIGN.md §14): each
+engine owns its own device pool + host Model Store, arrivals route by the
+shared eq3+queue affinity score, and ``--prewarm`` additionally promotes
+models AHEAD of their predicted re-arrivals when the cost/benefit check
+passes (adaptive keep-alive only — fixed TTLs carry no arrival model).
 """
 from __future__ import annotations
 
@@ -55,19 +62,33 @@ def main():
     ap.add_argument("--mean-interarrival", type=float, default=20.0,
                     help="trace mean inter-arrival seconds (with --trace)")
     ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--n-engines", type=int, default=1,
+                    help="with --trace: route across N engines via the "
+                         "FleetGateway's shared affinity score (§14)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="with --n-engines: promote models ahead of "
+                         "predicted re-arrivals (adaptive keep-alive)")
     args = ap.parse_args()
+    if args.n_engines < 1:
+        ap.error("--n-engines must be >= 1")
+    if args.n_engines > 1 and args.trace is None:
+        ap.error("--n-engines > 1 requires --trace (fleet replay)")
 
     names = args.models.split(",")
-    engine = Engine(args.pool_mb * 1024 * 1024,
-                    host_cache_bytes=(None if args.host_cache_mb is None
-                                      else args.host_cache_mb * 1024 * 1024))
+    host_bytes = (None if args.host_cache_mb is None
+                  else args.host_cache_mb * 1024 * 1024)
+    engines = [Engine(args.pool_mb * 1024 * 1024, host_cache_bytes=host_bytes,
+                      engine_id=f"engine{i}")
+               for i in range(args.n_engines)]
+    engine = engines[0]
     cfgs = {}
     for n in names:
         cfg = get_config(n)
         if args.smoke:
             cfg = cfg.smoke()
         cfgs[n] = cfg
-        engine.register(n, cfg)
+        for eng in engines:
+            eng.register(n, cfg)
 
     if args.trace is not None:
         # serverless control plane (§13): synthesize the arrival process
@@ -75,29 +96,47 @@ def main():
         # keep-alive decisions run on the trace clock, phase durations are
         # measured wall time
         from repro.core.trace import SimModel
-        from repro.serverless import Gateway, make_trace
+        from repro.serverless import FleetGateway, Gateway, make_trace
 
         sim_models = [SimModel(n, 1e6, 1) for n in names]
         trace = make_trace(args.trace, n_requests=args.requests,
                            models=sim_models, seed=args.trace_seed,
                            mean_interarrival=args.mean_interarrival)
-        gw = Gateway(engine, keep_alive=args.keep_alive_policy,
-                     prefetch=args.prefetch, prompt_len=args.prompt_len,
-                     gen_tokens=args.gen_tokens)
-        sink = gw.run_trace(trace)
-        for i, r in enumerate(sink.records):
-            print(f"req {i}: {r.model_id:16s} "
-                  f"{'cold' if r.cold else 'warm'} "
-                  f"load {r.load_s*1e3:7.1f}ms prefill {r.prefill_s:.2f}s "
-                  f"decode {r.decode_s/max(args.gen_tokens,1)*1e3:.0f}ms/tok")
+        if args.n_engines > 1:
+            # fleet replay (§14): shared-score routing + optional pre-warm
+            gw = FleetGateway(engines, keep_alive=args.keep_alive_policy,
+                              prefetch=args.prefetch, prewarm=args.prewarm,
+                              prompt_len=args.prompt_len,
+                              gen_tokens=args.gen_tokens)
+            sink = gw.run_trace(trace)
+            for i, (r, d) in enumerate(zip(sink.records, gw.decisions)):
+                print(f"req {i}: {r.model_id:16s} -> {d[2]} "
+                      f"{'cold' if r.cold else 'warm'} "
+                      f"load {r.load_s*1e3:7.1f}ms "
+                      f"prefill {r.prefill_s:.2f}s")
+        else:
+            gw = Gateway(engine, keep_alive=args.keep_alive_policy,
+                         prefetch=args.prefetch, prompt_len=args.prompt_len,
+                         gen_tokens=args.gen_tokens)
+            sink = gw.run_trace(trace)
+            for i, r in enumerate(sink.records):
+                print(f"req {i}: {r.model_id:16s} "
+                      f"{'cold' if r.cold else 'warm'} "
+                      f"load {r.load_s*1e3:7.1f}ms prefill {r.prefill_s:.2f}s "
+                      f"decode {r.decode_s/max(args.gen_tokens,1)*1e3:.0f}ms/tok")
         s = sink.summary()
         ls = gw.lifecycle.summary()
+        fleet_note = (f" engines={args.n_engines} "
+                      f"prewarms={gw.prewarms} hits={gw.prewarm_hits}"
+                      if args.n_engines > 1 else "")
         print(f"serverless summary: n={s['n']} "
               f"cold_rate={s['cold_start_rate']:.2f} "
               f"ttft_p50={s['ttft_p50']:.2f}s ttft_p95={s['ttft_p95']:.2f}s "
               f"expirations={int(ls['expirations'])} "
-              f"policy={args.keep_alive_policy} trace={args.trace}")
-        engine.close()
+              f"policy={args.keep_alive_policy} trace={args.trace}"
+              f"{fleet_note}")
+        for eng in engines:
+            eng.close()
         return
 
     import dataclasses

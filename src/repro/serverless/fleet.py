@@ -1,0 +1,547 @@
+"""Multi-engine fleet gateway with predictive pre-warm (DESIGN.md §14).
+
+PR 5's real-plane ``Gateway`` replays traces against exactly one engine, so
+the affinity score — the paper's headline mechanism — was only ever
+exercised inside the cluster simulator.  This module is the control plane
+above N engines:
+
+  * **Routing** — every arrival is placed by the SAME ``affinity_schedule``
+    code path the cluster sim runs (``core.scheduler``, eq3+queue by
+    default): device-resident bytes beat host-resident bytes beat store
+    promotions (Eq. 3 tiered), discounted by the per-engine expected queue
+    delay.  The fleet cannot drift from the sim because there is one
+    scoring function, consumed through the same ``DeviceView`` protocol
+    (``EngineNode`` adapts an engine to it).
+  * **Lifecycle** — one ``LifecycleManager`` arbitrates cold/warm/live for
+    the whole fleet; ``retain``/``release`` and prefetch hints are driven
+    per engine, and tenant-pressure events resize every engine's host tier
+    (``set_host_capacity``), exactly like the sim's pressure feed.
+  * **Predictive pre-warm** — the adaptive keep-alive histogram already
+    models per-model inter-arrival gaps, so when a model scales to zero the
+    fleet asks ``LifecycleManager.predict_next_arrival`` for (eta, prob)
+    and arms a timer at ``eta - lead``.  When it fires, the model is routed
+    (same affinity score), and promoted/loaded AHEAD of the arrival iff the
+    cost/benefit check passes: expected cold-load seconds saved x arrival
+    probability vs. the store-bandwidth slot and displaced host bytes taken
+    from co-tenants (``PhaseCosts.prewarm_net_benefit``).  A reactive-only
+    fleet (``prewarm=False``) still prefetches on placement but always eats
+    the cold start — the ablation benchmarks/fig16_serverless.py sweeps.
+
+Two engine flavours implement one protocol (engine_id, records_of, load,
+prefetch/cancel_prefetch, retain/release, prewarm, host_resident_bytes,
+host_free_bytes, set_host_capacity):
+
+  * ``serving.engine.Engine`` — the real jax data plane (measured walls),
+    driven from ``launch/serve.py --n-engines``;
+  * ``ModeledEngine`` (here) — jax-free: a ``ReuseStore`` + ``SimHostCache``
+    + ``PhaseCosts`` node whose durations are modeled seconds, so fleet
+    benchmarks and golden tests are deterministic and machine-independent.
+
+The trace clock is virtual in both cases; the real plane measures phase
+walls (the Gateway's split), the modeled plane prices them.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+import time as _time
+from typing import Optional, Sequence
+
+from repro.core.costmodel import Hardware, PhaseCosts, paper_l40
+from repro.core.hostcache import SimHostCache
+from repro.core.reuse_store import LoadReport, ReuseStore
+from repro.core.scheduler import ScheduleEntry, affinity_schedule
+from repro.core.trace import Request, SimModel, synthetic_tensor_sizes
+from repro.models.tensors import TensorRecord
+from repro.serverless.gateway import (MetricsSink, TTFTRecord,
+                                      make_prefill_batch)
+from repro.serverless.lifecycle import LifecycleManager, make_keep_alive
+from repro.serverless.workload import PressureEvent
+
+
+class ModeledEngine:
+    """A jax-free engine-protocol node for the modeled fleet plane.
+
+    Exactly the state one real ``Engine`` owns — a device ``ReuseStore``
+    over its own pool and a bounded ``SimHostCache`` host tier with the
+    persistent store below — minus the data plane: loads resolve through
+    ``ReuseStore.load_model`` (which consumes prefetch hints and prices
+    tier-aware, overlap-aware Eq. 3), and durations are modeled seconds.
+    """
+
+    def __init__(self, engine_id: str, capacity_bytes: int, *,
+                 costs: Optional[PhaseCosts] = None,
+                 host_cache_bytes: Optional[int] = None,
+                 host_keep_alive_s: Optional[float] = None,
+                 hint_ttl_s: Optional[float] = None):
+        self.engine_id = engine_id
+        self.store = ReuseStore(capacity_bytes,
+                                costs or PhaseCosts(paper_l40()))
+        self.store.host_cache = SimHostCache(host_cache_bytes,
+                                             keep_alive_s=host_keep_alive_s,
+                                             hint_ttl_s=hint_ttl_s)
+        self.models: dict[str, list[TensorRecord]] = {}
+        self.last_report: Optional[LoadReport] = None
+
+    # ------------------------------------------------------ engine protocol
+    def register(self, model_id: str, records: Sequence[TensorRecord]):
+        self.models[model_id] = list(records)
+
+    def records_of(self, model_id: str) -> list[TensorRecord]:
+        return self.models[model_id]
+
+    def load(self, model_id: str, *, now: float = 0.0,
+             overlap_s: float = 0.0) -> LoadReport:
+        rep = self.store.load_model(model_id, self.models[model_id],
+                                    now=now, overlap_s=overlap_s)
+        self.last_report = rep
+        return rep
+
+    def prefetch(self, model_id: str, *, now: float = 0.0):
+        self.store.hint_prefetch(model_id, self.models[model_id], now)
+
+    def cancel_prefetch(self, model_id: str):
+        self.store.host_cache.cancel_prefetch(model_id)
+
+    def retain(self, model_id: str):
+        self.store.activate(model_id)
+
+    def release(self, model_id: str):
+        self.store.release(model_id)
+
+    def prewarm(self, model_id: str, *, now: float = 0.0) -> LoadReport:
+        """Load ahead of the predicted arrival and retain (WARM)."""
+        rep = self.load(model_id, now=now)
+        self.retain(model_id)
+        return rep
+
+    def set_host_capacity(self, capacity_bytes: Optional[int]) -> int:
+        return self.store.set_host_capacity(capacity_bytes)
+
+    def host_resident_bytes(self, records: Sequence[TensorRecord]) -> int:
+        """Mirror of `SimWorker.host_resident_bytes` / the real engine's:
+        host-tier bytes among the DEVICE pool's misses only."""
+        misses = [r for r in records
+                  if r.fingerprint not in self.store.tensor_map]
+        return self.store.host_cache.host_resident_bytes(misses)
+
+    def host_free_bytes(self) -> Optional[int]:
+        cache = self.store.host_cache
+        if cache.capacity_bytes is None:
+            return None
+        return max(0, cache.capacity_bytes - cache.nbytes())
+
+
+class EngineNode:
+    """``DeviceView`` adapter: what ``affinity_schedule`` may ask about one
+    engine (real or modeled), plus the fleet's per-engine control state —
+    a virtual busy-until horizon (the queueing term of eq3+queue) and the
+    warm-until map the keep-alive policy maintains."""
+
+    def __init__(self, engine, *, prefetch: bool = True):
+        self.engine = engine
+        self.device_id: str = engine.engine_id
+        self.prefetch_enabled = prefetch
+        self.allow_hint = True  # scoring-only routing passes clear this
+        self.busy_until = 0.0  # trace-clock horizon of queued service
+        self.warm: dict[str, float] = {}  # model_id -> warm-until (trace s)
+        self.prewarmed: dict[str, float] = {}  # model_id -> predicted eta
+
+    # ---------------------------------------------------------- DeviceView
+    def can_run(self, model_bytes: int,
+                model_id: Optional[str] = None) -> bool:
+        return model_bytes <= self.engine.store.pool.capacity
+
+    def reusable_bytes(self, records: Sequence[TensorRecord]) -> int:
+        return self.engine.store.reusable_bytes(records)
+
+    def host_resident_bytes(self, records: Sequence[TensorRecord]) -> int:
+        return self.engine.host_resident_bytes(records)
+
+    def expected_queue_delay(self, now: float) -> float:
+        return max(0.0, self.busy_until - now)
+
+    def hint_prefetch(self, model_id: str, records: Sequence[TensorRecord],
+                      now: float):
+        if self.prefetch_enabled and self.allow_hint:
+            self.engine.prefetch(model_id, now=now)
+
+
+class FleetGateway:
+    """Trace replay against N engines: shared-score routing, per-engine
+    lifecycle/pressure, and predictive pre-warm.
+
+    The default serve path drives real ``Engine``s (measured phase walls on
+    a virtual trace clock, like the single-engine ``Gateway``);
+    ``ModeledFleetGateway`` overrides `_serve` with the deterministic cost
+    plane.  ``decisions`` records the replay-exact (time, model, engine,
+    cold, queue) routing sequence the golden tests pin.
+    """
+
+    def __init__(self, engines: Sequence, *, keep_alive="adaptive",
+                 hw: Optional[Hardware] = None, prefetch: bool = True,
+                 prewarm: bool = True, prewarm_min_benefit: float = 0.0,
+                 policy: str = "eq3+queue", prompt_len: int = 16,
+                 gen_tokens: int = 4, num_pages: int = 64):
+        assert len(engines) >= 1
+        self.nodes = [EngineNode(e, prefetch=prefetch) for e in engines]
+        ids = [n.device_id for n in self.nodes]
+        assert len(set(ids)) == len(ids), f"duplicate engine ids: {ids}"
+        self.costs: PhaseCosts = engines[0].store.costs
+        self.hw = hw or self.costs.hw
+        self.lifecycle = LifecycleManager(make_keep_alive(keep_alive))
+        self.prefetch = prefetch
+        self.prewarm_enabled = prewarm
+        self.prewarm_min_benefit = prewarm_min_benefit
+        self.policy = policy
+        self.prompt_len = prompt_len
+        self.gen_tokens = gen_tokens
+        self.num_pages = num_pages
+        self.sink = MetricsSink()
+        # replay-exact routing log: (time, model, engine, cold, queue_s)
+        self.decisions: list[tuple[float, str, str, bool, float]] = []
+        # pre-warm decision log: (event, time, model, engine, detail)
+        self.log: list[tuple[str, float, str, str, float]] = []
+        self.prewarms = 0  # speculative loads issued
+        self.prewarm_hits = 0  # predicted arrival landed inside the window
+        self.prewarm_wasted = 0  # window lapsed unused (release + charge)
+        self._timers: list[tuple[float, int, str, float, float]] = []
+        self._armed: dict[str, float] = {}  # model -> predicted eta
+        self._seq = itertools.count()
+        self._req_seq = itertools.count()  # prefill batch seeds (real plane)
+
+    # ------------------------------------------------------------- helpers
+    def _records(self, model_id: str) -> list[TensorRecord]:
+        return self.nodes[0].engine.records_of(model_id)
+
+    def _bytes(self, model_id: str) -> int:
+        return sum(r.nbytes for r in self._records(model_id))
+
+    def _find_warm(self, model_id: str) -> Optional[EngineNode]:
+        for n in self.nodes:
+            if model_id in n.warm:
+                return n
+        return None
+
+    def _route(self, model_id: str, now: float, *,
+               hint: bool) -> tuple[ScheduleEntry, EngineNode]:
+        """Place one model by the sim's affinity score — literally the same
+        ``affinity_schedule`` call the cluster sim makes, over DeviceView
+        nodes.  `hint=False` runs a scoring-only pass (pre-warm cost checks
+        must not leave a prefetch hint behind when they decline)."""
+        records = self._records(model_id)
+        for n in self.nodes:
+            n.allow_hint = hint
+        try:
+            scheds, queued = affinity_schedule(
+                [(model_id, records, self._bytes(model_id))], self.nodes,
+                self.hw, policy=self.policy, now=now)
+        finally:
+            for n in self.nodes:
+                n.allow_hint = True
+        if not scheds:
+            raise RuntimeError(f"no engine can run {model_id} "
+                               f"({self._bytes(model_id)} B)")
+        entry = scheds[0]
+        node = next(n for n in self.nodes if n.device_id == entry.device_id)
+        return entry, node
+
+    def _device_free_for(self, node: EngineNode, model_id: str) -> float:
+        """Device-pool bytes not pinned by OTHER active (warm/live) models —
+        what a load of `model_id` can claim on this node, since inactive
+        residents are evictable but retained co-tenants are not."""
+        store = node.engine.store
+        active = sum(store.resident_bytes(m) for m in store.active_models
+                     if m != model_id)
+        return store.pool.capacity - active
+
+    def _make_room(self, node: EngineNode, model_id: str, now: float):
+        """Scale down warm instances (soonest-to-expire first) until the
+        cold load fits beside the node's remaining pins — a real arrival
+        outranks keep-alive squatters, warm or pre-warmed.  Evicted models
+        go through the same expiry path (withdraw hint, release, notify or
+        charge the speculation) so the decision log stays replay-exact."""
+        mbytes = self._bytes(model_id)
+        while (self._device_free_for(node, model_id) < mbytes
+               and node.warm):
+            victim, until = min(node.warm.items(), key=lambda kv: kv[1])
+            del node.warm[victim]
+            node.engine.cancel_prefetch(victim)
+            node.engine.release(victim)
+            eta = node.prewarmed.pop(victim, None)
+            if eta is not None:
+                self.prewarm_wasted += 1
+                self.log.append(("prewarm-evicted", round(now, 6), victim,
+                                 node.device_id, round(eta, 6)))
+            else:
+                self.lifecycle.on_expire(victim, now)
+                self._arm_prewarm(victim, now)
+
+    # ------------------------------------------------------------ lifecycle
+    def _expire_all(self, now: float):
+        """Release keep-alive lapses (trace order) on every node: withdraw
+        the in-flight hint FIRST (its pin would otherwise survive the
+        expiry), then drop pins and notify the lifecycle.  A lapsed
+        pre-warm window counts as wasted speculation and is NOT re-armed —
+        only a real arrival refreshes the prediction, so a dead model
+        cannot pre-warm itself in a loop."""
+        for node in self.nodes:
+            for model, until in sorted(node.warm.items(),
+                                       key=lambda kv: kv[1]):
+                if until > now:
+                    continue
+                del node.warm[model]
+                node.engine.cancel_prefetch(model)
+                node.engine.release(model)
+                eta = node.prewarmed.pop(model, None)
+                if eta is not None:
+                    self.prewarm_wasted += 1
+                    self.log.append(("prewarm-wasted", round(until, 6),
+                                     model, node.device_id, round(eta, 6)))
+                else:
+                    self.lifecycle.on_expire(model, until)
+                    self._arm_prewarm(model, until)
+
+    def _arm_prewarm(self, model: str, now: float):
+        """The model just went cold: if the policy can predict its next
+        arrival, schedule a pre-warm check at eta minus the worst-case lead
+        (full store promotion + init) so a positive decision finishes
+        loading BEFORE the arrival lands."""
+        if not self.prewarm_enabled or model in self._armed:
+            return
+        pred = self.lifecycle.predict_next_arrival(model, now)
+        if pred is None:
+            return
+        eta, prob = pred
+        if eta <= now:
+            return  # the predicted arrival is already overdue
+        mbytes = self._bytes(model)
+        lead = (self.costs.load_time(mbytes, in_host_cache=False)
+                + self.costs.init_time(mbytes))
+        fire = max(now, eta - lead)
+        self._armed[model] = eta
+        heapq.heappush(self._timers, (fire, next(self._seq), model, eta,
+                                      prob))
+
+    def _fire_prewarm(self, now: float, model: str, eta: float, prob: float):
+        armed = self._armed.pop(model, None)
+        if armed is None or armed != eta:
+            return  # an arrival (or a newer prediction) superseded the timer
+        if self._find_warm(model) is not None:
+            return
+        entry, node = self._route(model, now, hint=False)
+        records = self._records(model)
+        mbytes = self._bytes(model)
+        if self._device_free_for(node, model) < mbytes:
+            # speculation never evicts certain warm hits to make room
+            self.log.append(("prewarm-nofit", round(now, 6), model,
+                             node.device_id, 0.0))
+            return
+        missing = max(0, mbytes - node.reusable_bytes(records))
+        host = min(node.host_resident_bytes(records), missing)
+        store_b = missing - host
+        free = node.engine.host_free_bytes()
+        displaced = 0 if free is None else max(0, store_b - free)
+        # what a cold arrival would pay here (load score minus the queueing
+        # term — pre-warm cannot save queueing) plus the Init phase
+        saved = (max(0.0, entry.expected_load_seconds
+                     - node.expected_queue_delay(now))
+                 + self.costs.init_time(mbytes))
+        net = self.costs.prewarm_net_benefit(saved, prob, store_b, displaced)
+        self.log.append(("prewarm-check", round(now, 6), model,
+                         node.device_id, round(net, 6)))
+        if net <= self.prewarm_min_benefit:
+            return
+        node.engine.prewarm(model, now=now)
+        ttl = max(1.0, self.lifecycle.policy.ttl(model))
+        node.warm[model] = eta + ttl  # hold through the arrival's jitter
+        node.prewarmed[model] = eta
+        self.prewarms += 1
+        self.log.append(("prewarm", round(now, 6), model, node.device_id,
+                         round(eta, 6)))
+
+    def _advance(self, now: float, press: Sequence[PressureEvent],
+                 pi: int) -> int:
+        """Process pressure events and pre-warm timers due by `now`, merged
+        in trace-clock order (like the sim's event heap); keep-alives that
+        lapsed before each event release their pins first."""
+        while True:
+            tp = press[pi].time if pi < len(press) else math.inf
+            tt = self._timers[0][0] if self._timers else math.inf
+            t = min(tp, tt)
+            if t > now:
+                break
+            self._expire_all(t)
+            if tt <= tp:
+                fire, _, model, eta, prob = heapq.heappop(self._timers)
+                self._fire_prewarm(fire, model, eta, prob)
+            else:
+                for node in self.nodes:
+                    node.engine.set_host_capacity(press[pi].capacity_bytes)
+                pi += 1
+        self._expire_all(now)
+        return pi
+
+    # ------------------------------------------------------------ trace run
+    def run_trace(self, trace: Sequence[Request], *,
+                  pressure: Sequence[PressureEvent] = ()) -> MetricsSink:
+        press = sorted(pressure, key=lambda p: p.time)
+        pi = 0
+        for req in trace:
+            now = req.time
+            pi = self._advance(now, press, pi)
+            model = req.model_id
+            self.lifecycle.observe_arrival(model, now)
+            self._armed.pop(model, None)  # the arrival voids the prediction
+            # ALWAYS score — never short-circuit to a warm node.  A warm
+            # node wins naturally (device-resident bytes -> t_load ~ 0),
+            # but under eq3+queue a saturated warm engine loses to an idle
+            # cold one: exactly the trap Algorithm 2's queueing term exists
+            # for, and the sim scores every arrival the same way.
+            _, node = self._route(model, now, hint=self.prefetch)
+            cold = model not in node.warm
+            if cold:
+                self._make_room(node, model, now)
+            else:
+                node.warm.pop(model)  # LIVE while serving
+                eta = node.prewarmed.pop(model, None)
+                if eta is not None:
+                    self.prewarm_hits += 1
+                    self.log.append(("prewarm-hit", round(now, 6), model,
+                                     node.device_id, round(eta, 6)))
+            self.lifecycle.on_start(model, now, warm=not cold)
+            queue_s = max(0.0, node.busy_until - now)
+            rec, service_s = self._serve(node, req, now, cold, queue_s)
+            t_end = now + queue_s + service_s
+            node.busy_until = t_end
+            self.decisions.append((round(now, 6), model, node.device_id,
+                                   cold, round(queue_s, 6)))
+            self.sink.add(rec)
+            # post-serve keep-alive: the warm entry was popped at admission,
+            # so a stale warm-until can never truncate the fresh TTL (the
+            # same idle_epoch-style guard the Gateway and sim carry)
+            ttl = self.lifecycle.on_idle(model, t_end)
+            if ttl > 0:
+                node.engine.retain(model)
+                node.warm[model] = t_end + ttl
+            else:
+                self.lifecycle.on_expire(model, t_end)
+                node.engine.release(model)
+                self._arm_prewarm(model, t_end)
+        return self.sink
+
+    # ----------------------------------------------------------- serve seam
+    def _serve(self, node: EngineNode, req: Request, now: float, cold: bool,
+               queue_s: float) -> tuple[TTFTRecord, float]:
+        """Real-plane serve on the routed engine: measured phase walls (the
+        single-engine Gateway's split), virtual trace clock for queueing."""
+        import jax.numpy as jnp
+
+        eng = node.engine
+        t0 = _time.perf_counter()
+        eng.load(req.model_id, now=now)
+        load_s = _time.perf_counter() - t0
+        stats = eng.last_load
+        load_s = max(0.0, load_s - stats.init_seconds
+                     - stats.profile_seconds)
+        inst = eng.start_instance(req.model_id, num_pages=self.num_pages)
+        batch = make_prefill_batch(eng, req.model_id, self.prompt_len,
+                                   next(self._req_seq))
+        t1 = _time.perf_counter()
+        tok = jnp.argmax(inst.prefill(batch), -1).astype(jnp.int32)
+        prefill_s = _time.perf_counter() - t1
+        t2 = _time.perf_counter()
+        for _ in range(self.gen_tokens):
+            tok = jnp.argmax(inst.decode(tok), -1).astype(jnp.int32)
+        decode_s = _time.perf_counter() - t2
+        inst.finish()
+        service_s = _time.perf_counter() - t0
+        rec = TTFTRecord(
+            model_id=req.model_id, arrival=now, cold=cold, queue_s=queue_s,
+            init_s=stats.init_seconds, load_s=load_s,
+            profile_s=stats.profile_seconds, prefill_s=prefill_s,
+            decode_s=decode_s, prefetched=stats.bytes_prefetched > 0,
+            bytes_from_store=stats.bytes_store)
+        return rec, service_s
+
+    # -------------------------------------------------------------- summary
+    def summary(self) -> dict[str, float]:
+        out = self.sink.summary()
+        ls = self.lifecycle.summary()
+        out["expirations"] = ls["expirations"]
+        out["prewarms"] = self.prewarms
+        out["prewarm_hits"] = self.prewarm_hits
+        out["prewarm_wasted"] = self.prewarm_wasted
+        out["pressure_evictions"] = sum(
+            getattr(n.engine.store.host_cache, "pressure_evictions", 0)
+            for n in self.nodes
+            if getattr(n.engine.store, "host_cache", None) is not None)
+        return out
+
+
+class ModeledFleetGateway(FleetGateway):
+    """Deterministic fleet over ``ModeledEngine`` nodes: every duration is
+    a modeled second from ``PhaseCosts``, so fig16's fleet sweep and the
+    golden routing tests are machine-independent and replay-exact.
+
+    Builds its own engines from ``SimModel``s the way ``ClusterSim`` does
+    (seeded ``synthetic_tensor_sizes`` records, one pool + host tier per
+    engine)."""
+
+    def __init__(self, models: Sequence[SimModel], *, n_engines: int = 2,
+                 pool_bytes: int, host_cache_bytes: Optional[int] = None,
+                 host_keep_alive_s: Optional[float] = None,
+                 hw: Optional[Hardware] = None, seed: int = 0,
+                 keep_alive="adaptive", prefetch: bool = True,
+                 prewarm: bool = True, prewarm_min_benefit: float = 0.0,
+                 policy: str = "eq3+queue"):
+        hw = hw or paper_l40()
+        costs = PhaseCosts(hw)
+        rng = random.Random(seed + 17)  # the sim's record-size convention
+        records: dict[str, list[TensorRecord]] = {}
+        for m in models:
+            sizes = synthetic_tensor_sizes(m, rng)
+            records[m.model_id] = [
+                TensorRecord(name=f"{m.model_id}/t{i}", shape=(s // 2,),
+                             dtype="bfloat16",
+                             fingerprint=f"{m.model_id}/t{i}", nbytes=s)
+                for i, s in enumerate(sizes)]
+        engines = []
+        for i in range(n_engines):
+            eng = ModeledEngine(f"engine{i}", pool_bytes, costs=costs,
+                                host_cache_bytes=host_cache_bytes,
+                                host_keep_alive_s=host_keep_alive_s)
+            for mid, recs in records.items():
+                eng.register(mid, recs)
+            engines.append(eng)
+        super().__init__(engines, keep_alive=keep_alive, hw=hw,
+                         prefetch=prefetch, prewarm=prewarm,
+                         prewarm_min_benefit=prewarm_min_benefit,
+                         policy=policy)
+        self._sim = {m.model_id: m for m in models}
+
+    def _serve(self, node: EngineNode, req: Request, now: float, cold: bool,
+               queue_s: float) -> tuple[TTFTRecord, float]:
+        m = self._sim[req.model_id]
+        eng = node.engine
+        start = now + queue_s
+        init_s = self.costs.init_time(m.bytes) if cold else 0.0
+        # the load lands after queueing + init on the trace clock, so a
+        # hint fired at routing time has (queue_s + init_s) of elapsed
+        # background read when `take_prefetch` prices the overlap
+        rep = eng.load(req.model_id, now=start + init_s)
+        load_s = rep.load_seconds + rep.merge_seconds
+        profile_s = self.costs.profile_time(m.bytes) if cold else 0.0
+        prefill_s = self.costs.prefill_time(m.params, req.prompt_tokens,
+                                            req.batch_size)
+        decode_s = self.costs.decode_time(m.bytes, req.output_tokens)
+        rec = TTFTRecord(
+            model_id=req.model_id, arrival=now, cold=cold, queue_s=queue_s,
+            init_s=init_s, load_s=load_s, profile_s=profile_s,
+            prefill_s=prefill_s, decode_s=decode_s,
+            prefetched=rep.prefetched,
+            bytes_from_store=rep.bytes_from_store)
+        service_s = init_s + load_s + profile_s + prefill_s + decode_s
+        return rec, service_s

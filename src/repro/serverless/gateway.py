@@ -24,17 +24,12 @@ import time as _time
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+# the ONE percentile convention (hoisted to core.trace so this module and
+# core.cluster.summarize cannot drift apart); re-exported here because the
+# serverless package is where metrics consumers historically import it from
+from repro.core.trace import percentile  # noqa: F401
 from repro.serverless.lifecycle import LifecycleManager, make_keep_alive
 from repro.serverless.workload import PressureEvent
-
-
-def percentile(xs: Sequence[float], q: float) -> float:
-    """The index convention ``core.cluster.summarize`` already uses, so
-    fig8/fig16 percentiles and the sim summary never disagree."""
-    xs = sorted(xs)
-    if not xs:
-        return 0.0
-    return xs[min(len(xs) - 1, int(len(xs) * q))]
 
 
 @dataclass(frozen=True)
@@ -124,6 +119,22 @@ def run_serverless_sim(models, trace, policy, *, n_workers: int = 2,
 
 
 # ------------------------------------------------------------- real plane
+def make_prefill_batch(engine, model_id: str, prompt_len: int, seed: int):
+    """Synthesize one prompt batch for a registered model (shared by the
+    single-engine Gateway and the fleet gateway's real-plane serve path)."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import SHAPES
+    from repro.models import build_model
+
+    cfg = engine.models[model_id].cfg
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=prompt_len,
+                                global_batch=1, kind="prefill")
+    return build_model(cfg).make_batch(jax.random.PRNGKey(seed), shape)
+
+
 class Gateway:
     """Trace replay against a live ``Engine`` under a keep-alive policy.
 
@@ -145,27 +156,51 @@ class Gateway:
         self.num_pages = num_pages
         self.sink = MetricsSink()
         self._warm: dict[str, float] = {}  # model_id -> warm-until (trace s)
+        # virtual single-server queue on the trace clock: arrivals that land
+        # while a previous request's MEASURED service is still in flight (on
+        # that clock) wait, and the wait is reported as the paper's Queue
+        # phase — previously dropped entirely on the real plane
+        self._busy_until = 0.0
 
     def _expire(self, now: float):
         for model, until in sorted(self._warm.items(), key=lambda kv: kv[1]):
             if until <= now:
                 del self._warm[model]
+                # withdraw any in-flight hint FIRST: an expired model's
+                # prefetch would otherwise keep its host pin and its
+                # store-bandwidth slot, so TTL lapses never actually freed
+                # host bytes under tenant pressure
+                self.engine.cancel_prefetch(model)
                 self.engine.release(model)  # pins drop: spillable again
                 self.lifecycle.on_expire(model, until)
 
+    def _admit(self, model: str, now: float) -> bool:
+        """Admission bookkeeping for one arrival: feed the gap histogram,
+        classify cold/warm, and take the model LIVE (its warm-until entry is
+        POPPED — see `_finish_request`).  Returns True when the start is
+        cold."""
+        self.lifecycle.observe_arrival(model, now)
+        cold = model not in self._warm
+        self.lifecycle.on_start(model, now, warm=not cold)
+        self._warm.pop(model, None)  # LIVE while serving
+        return cold
+
+    def _finish_request(self, model: str, now: float):
+        """Post-serve keep-alive bookkeeping: ask the policy for a fresh TTL
+        and retain (WARM) or scale to zero.  The warm entry was popped at
+        admission, so a STALE warm-until from the previous idle period can
+        never truncate the newly chosen TTL — the real-plane analogue of the
+        sim's ``WorkerInstance.idle_epoch`` guard, pinned by
+        tests/test_fleet.py."""
+        ttl = self.lifecycle.on_idle(model, now)
+        if ttl > 0:
+            self.engine.retain(model)  # stays pinned + active (WARM)
+            self._warm[model] = now + ttl
+        else:
+            self.lifecycle.on_expire(model, now)  # scale-to-zero
+
     def _prefill_batch(self, model_id: str, seed: int):
-        import dataclasses
-
-        import jax
-
-        from repro.configs import SHAPES
-        from repro.models import build_model
-
-        cfg = self.engine.models[model_id].cfg
-        shape = dataclasses.replace(SHAPES["train_4k"],
-                                    seq_len=self.prompt_len,
-                                    global_batch=1, kind="prefill")
-        return build_model(cfg).make_batch(jax.random.PRNGKey(seed), shape)
+        return make_prefill_batch(self.engine, model_id, self.prompt_len, seed)
 
     def run_trace(self, trace, *,
                   pressure: Sequence[PressureEvent] = ()) -> MetricsSink:
@@ -191,10 +226,10 @@ class Gateway:
                 pi += 1
             self._expire(now)
             model = req.model_id
-            self.lifecycle.observe_arrival(model, now)
-            cold = model not in self._warm
-            self.lifecycle.on_start(model, now, warm=not cold)
-            self._warm.pop(model, None)  # LIVE while serving
+            cold = self._admit(model, now)
+            # admission defers when the engine is still serving on the trace
+            # clock: the wait is the Queue phase of the paper's TTFT split
+            queue_s = max(0.0, self._busy_until - now)
 
             t0 = _time.perf_counter()
             self.engine.load(model, now=now)
@@ -202,8 +237,10 @@ class Gateway:
             stats = self.engine.last_load
             # keep the phase split disjoint (one vocabulary with the sim
             # plane): the measured load wall contains the first-ever
-            # init_fn materialization, which TTFTRecord reports as init_s
-            load_s = max(0.0, load_s - stats.init_seconds)
+            # init_fn materialization (init_s) and the param-tree assembly
+            # (profile_s), which TTFTRecord reports as their own phases
+            load_s = max(0.0, load_s - stats.init_seconds
+                         - stats.profile_seconds)
             if self.prefetch and next_model[i] is not None:
                 # routing decided the next placement: hint it now so its
                 # store read overlaps this request's prefill/decode
@@ -218,16 +255,17 @@ class Gateway:
                 tok = jnp.argmax(inst.decode(tok), -1).astype(jnp.int32)
             decode_s = _time.perf_counter() - t2
             inst.finish()
+            # measured service wall occupies the virtual server on the
+            # trace clock (decode included: the instance holds its slot
+            # until the last token)
+            service_s = _time.perf_counter() - t0
+            self._busy_until = now + queue_s + service_s
 
-            ttl = self.lifecycle.on_idle(model, now)
-            if ttl > 0:
-                self.engine.retain(model)  # stays pinned + active (WARM)
-                self._warm[model] = now + ttl
-            else:
-                self.lifecycle.on_expire(model, now)  # scale-to-zero
+            self._finish_request(model, now)
             self.sink.add(TTFTRecord(
-                model_id=model, arrival=now, cold=cold,
+                model_id=model, arrival=now, cold=cold, queue_s=queue_s,
                 init_s=stats.init_seconds, load_s=load_s,
+                profile_s=stats.profile_seconds,
                 prefill_s=prefill_s, decode_s=decode_s,
                 prefetched=stats.bytes_prefetched > 0,
                 bytes_from_store=stats.bytes_store))

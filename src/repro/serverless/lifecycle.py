@@ -28,6 +28,7 @@ from __future__ import annotations
 import enum
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 
 class InstanceState(enum.Enum):
@@ -49,6 +50,11 @@ class FixedTTL:
 
     def ttl(self, model_id: str) -> float:
         return self.ttl_s
+
+    def predict_gap(self, model_id: str, min_gap_s: float = 0.0):
+        """Fixed TTLs carry no arrival model: nothing to predict, so the
+        fleet's predictive pre-warm is a structural no-op under them."""
+        return None
 
 
 class AdaptiveHistogram:
@@ -107,11 +113,62 @@ class AdaptiveHistogram:
                 return min(self.max_ttl, max(self.min_ttl, ttl))
         return self.min_ttl  # unreachable (seen == n >= need at the end)
 
+    def predict_gap(self, model_id: str, min_gap_s: float = 0.0
+                    ) -> Optional[tuple[float, float]]:
+        """Predict the model's NEXT inter-arrival gap for pre-warm
+        scheduling: ``(gap_s, prob)`` or None when the histogram cannot say.
 
-def make_keep_alive(spec: str):
+        NOT the ``ttl()`` walk.  The TTL is a coverage percentile (stay warm
+        through 95% of gaps); prediction asks when the re-arrival actually
+        LANDS, so it takes the median — and, crucially, the median
+        CONDITIONED on the gap already exceeding ``min_gap_s``.  The fleet
+        arms pre-warm when the keep-alive lapses, i.e. the model has
+        already been idle ``ttl`` seconds, and serverless gap distributions
+        are bimodal (intra-burst seconds vs. inter-burst minutes): the
+        unconditional median sits in the burst spike the keep-alive
+        already absorbed, while the conditional walk lands on the
+        inter-burst mode — the arrivals pre-warm exists for.
+
+        The bucket midpoint is returned (unbiased within resolution),
+        unclamped and without the safety margin.  ``prob`` is the
+        conditional mass within one bucket either side of the prediction:
+        sharply periodic re-arrivals (burst volleys) score near 1, diffuse
+        Poisson tails spread over many buckets and score low — exactly the
+        discount the fleet's cost/benefit check needs.  None below
+        ``min_samples``, with fewer than 2 conditional in-window samples,
+        or when the surviving mass sits in the overflow bucket
+        (re-arrivals beyond the window are unpredictable)."""
+        n = self._count.get(model_id, 0)
+        if n < self.min_samples:
+            return None
+        hist = self._hist[model_id]
+        lo = min(int(min_gap_s / self.bucket_s), self.n_buckets)
+        cond = hist[lo:self.n_buckets]  # in-window mass with gap > min_gap
+        m = sum(cond)
+        if m < 2:
+            return None  # one straggler gap is an anecdote, not a model
+        need = 0.5 * m
+        seen = 0
+        for j, c in enumerate(cond):
+            seen += c
+            if seen >= need:
+                idx = lo + j
+                around = sum(hist[max(lo, idx - 1):
+                                  min(self.n_buckets, idx + 2)])
+                return (idx + 0.5) * self.bucket_s, around / m
+        return None  # unreachable (seen == m >= need at the end)
+
+
+def make_keep_alive(spec):
     """Parse a keep-alive policy spec: ``zero``, ``fixed`` / ``fixed:T``,
     ``adaptive`` / ``adaptive:P`` (P the percentile, e.g. ``adaptive:0.99``).
-    The ONE factory both planes and every CLI flag route through."""
+    The ONE factory both planes and every CLI flag route through.  An
+    already-constructed policy object (anything with a ``ttl`` method)
+    passes through unchanged, so callers that need non-default histogram
+    geometry — e.g. the fleet benchmark's wide prediction window — reuse
+    the same entry point."""
+    if hasattr(spec, "ttl"):
+        return spec
     name, _, arg = spec.partition(":")
     if name == "zero":
         return FixedTTL(0.0)
@@ -184,6 +241,28 @@ class LifecycleManager:
                                 else InstanceState.COLD)
         self._note(now, "idle", model_id, ttl)
         return ttl
+
+    def predict_next_arrival(self, model_id: str, now: Optional[float] = None
+                             ) -> Optional[tuple[float, float]]:
+        """Predictive pre-warm feed (fleet gateway): ``(eta, prob)`` — the
+        absolute trace time the model's next arrival is expected at, and the
+        probability mass behind the prediction — or None when the policy
+        cannot predict (fixed TTLs, cold history, out-of-window gaps).
+        With ``now`` given, the policy conditions on the gap already being
+        at least ``now - last_arrival`` (the model has provably been idle
+        that long — see ``AdaptiveHistogram.predict_gap``).  The estimate is
+        last-arrival + predicted gap, so it only moves when a new arrival
+        is observed — replay-deterministic."""
+        predict = getattr(self.policy, "predict_gap", None)
+        last = self._last_arrival.get(model_id)
+        if predict is None or last is None:
+            return None
+        min_gap = max(0.0, now - last) if now is not None else 0.0
+        pred = predict(model_id, min_gap)
+        if pred is None:
+            return None
+        gap, prob = pred
+        return last + gap, prob
 
     def on_expire(self, model_id: str, now: float):
         """An idle instance's keep-alive lapsed (or was scaled to zero)."""

@@ -95,6 +95,11 @@ class DataLoadStats:
     bytes_h2d: int = 0
     chunks_h2d: int = 0
     transfer_seconds: float = 0.0  # chunked-pipeline wall time (blocked)
+    # param-tree assembly (unflatten over resident buffers): the engine's
+    # equivalent of the paper's Profile phase memory-plan step.  Reported
+    # separately so the real plane's TTFT split has the same vocabulary as
+    # the sim plane (queue/init/load/profile/prefill).
+    profile_seconds: float = 0.0
     total_seconds: float = 0.0
 
 
@@ -447,7 +452,10 @@ class Engine:
                  transfer_depth: int = 2,
                  host_cache_bytes: Optional[int] = None,
                  store_bw: Optional[float] = None,
-                 host_keep_alive_s: Optional[float] = None):
+                 host_keep_alive_s: Optional[float] = None,
+                 engine_id: str = "engine0"):
+        # stable identity for fleet routing (the DeviceView's device_id)
+        self.engine_id = engine_id
         self.store = ReuseStore(capacity_bytes, costs or PhaseCosts(paper_l40()))
         self.block_tokens = block_tokens
         self.models: dict[str, RegisteredModel] = {}
@@ -485,6 +493,11 @@ class Engine:
         records = tensor_records(model_id, tree)
         self.models[model_id] = RegisteredModel(model_id, cfg, records, init_fn,
                                                 jax.tree.structure(tree))
+
+    def records_of(self, model_id: str) -> list[TensorRecord]:
+        """The model's tensor records (the fleet-protocol accessor shared
+        with `serverless.fleet.ModeledEngine`)."""
+        return self.models[model_id].records
 
     # ------------------------------------------------------------------ load
     def load(self, model_id: str, *, now: float = 0.0) -> LoadReport:
@@ -602,16 +615,22 @@ class Engine:
             stats.transfer_seconds = _time.perf_counter() - tt
             self._tensors.update(moved)
         if to_move or reg.model_id not in self._params_cache:
-            # assemble the param tree from resident buffers (no copies)
+            # assemble the param tree from resident buffers (no copies) —
+            # measured as the Profile phase of the TTFT split
+            tp = _time.perf_counter()
             self._params_cache[reg.model_id] = jax.tree.unflatten(
                 reg.treedef, [self._tensors[r.fingerprint] for r in reg.records])
+            stats.profile_seconds = _time.perf_counter() - tp
 
     # -------------------------------------------------------------- prefetch
-    def prefetch(self, model_id: str) -> PrefetchJob:
+    def prefetch(self, model_id: str, *, now: float = 0.0) -> PrefetchJob:
         """Affinity hint (DESIGN.md §12): the scheduler placed a request for
         `model_id` here — start promoting its store-resident tensors into
         the host tier NOW, so the store_bw read overlaps queueing/init/h2d
         instead of extending the coming `Engine.load` (which joins the job).
+        `now` is the caller's trace-clock stamp — accepted for protocol
+        parity with the modeled fleet engine; the data plane's promotion
+        runs on the wall clock, so it is not consulted here.
 
         The model's records are refcount-pinned immediately (host-resident
         bytes survive cap pressure and keep-alive aging until the load
@@ -689,6 +708,35 @@ class Engine:
         until `release` scales it to zero."""
         self.store.activate(model_id)
         self._pin_model(model_id)
+
+    def prewarm(self, model_id: str, *, now: float = 0.0) -> LoadReport:
+        """Predictive pre-warm (DESIGN.md §14): load the model AHEAD of its
+        predicted arrival and retain it, so the re-arrival finds a warm
+        instance — the load pays its store/host promotion now, in the
+        background window the fleet's cost/benefit check priced."""
+        rep = self.load(model_id, now=now)
+        self.retain(model_id)
+        return rep
+
+    def host_resident_bytes(self, records: Sequence[TensorRecord]) -> int:
+        """Tier-aware affinity scoring feed (DeviceView protocol): bytes of
+        `records` the DEVICE pool misses that the host Model Store holds —
+        those stream at h2d_bw, the rest must come up from the persistent
+        store.  Mirrors the sim plane's `SimWorker.host_resident_bytes`."""
+        with self._store_lock:
+            return sum(r.nbytes for r in records
+                       if r.fingerprint not in self._tensors
+                       and r.fingerprint in self.host_store)
+
+    def host_free_bytes(self) -> Optional[int]:
+        """Free bytes in the host Model Store budget (None = unbounded):
+        what a speculative pre-warm can promote into without displacing
+        co-tenants' host-resident bytes."""
+        with self._store_lock:
+            if self.host_store.capacity_bytes is None:
+                return None
+            return max(0, self.host_store.capacity_bytes
+                       - self.host_store.nbytes())
 
     def set_host_capacity(self, capacity_bytes: Optional[int]) -> int:
         """Tenant-pressure feed: resize the host Model Store budget under

@@ -1,0 +1,327 @@
+"""Fleet gateway (DESIGN.md §14): shared-score routing, predictive
+pre-warm, and the control-plane regression sweep.
+
+Everything here runs on the jax-free modeled plane (``ModeledEngine`` /
+``ModeledFleetGateway``) or against a stub engine, so the whole module is
+fast-CI material:
+
+  * the ONE percentile index convention every plane reports with;
+  * arrival prediction: the conditional-median histogram walk, its
+    probability mass, and the structural no-op under fixed TTLs;
+  * the pre-warm cost/benefit arithmetic (``PhaseCosts``);
+  * replay-exact fleet routing goldens + the affinity/queue properties
+    the shared ``affinity_schedule`` path must exhibit;
+  * the stale-warm-until regression (a reused model's OLD warm-until must
+    never truncate its freshly chosen TTL) on both the single-engine
+    Gateway and the fleet — the real-plane analogue of the sim's
+    ``idle_epoch`` guard;
+  * expiry withdraws in-flight prefetch hints before dropping pins;
+  * predictive pre-warm strictly beats reactive prefetch on the volley
+    workload (the fig16 fleet headline, pinned at test scale).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.costmodel import PhaseCosts, paper_l40
+from repro.core.trace import PAPER_MODELS, Request, percentile
+from repro.serverless import (Gateway, ModeledFleetGateway, burst_trace,
+                              pressure_wave)
+from repro.serverless.lifecycle import (AdaptiveHistogram, FixedTTL,
+                                        LifecycleManager)
+
+MODELS = PAPER_MODELS[4:8]  # opt6.7B llama3B qwen3B opt1.3B
+
+
+def volley_trace(n=96, seed=7):
+    """The fig16 fleet workload shape at test scale: periodic volleys at
+    the popular models, far apart relative to any keep-alive."""
+    return burst_trace(n_requests=n, models=MODELS, mean_interarrival=288.0,
+                       burst_every_s=240.0, burst_size=8, burst_models=2,
+                       burst_window_s=2.0, seed=seed)
+
+
+def make_fleet(*, prewarm=True, seed=7, keep_alive=None, n_engines=2, **kw):
+    if keep_alive is None:
+        keep_alive = AdaptiveHistogram(window_s=720.0, max_ttl=45.0)
+    return ModeledFleetGateway(MODELS, n_engines=n_engines,
+                               pool_bytes=int(20e9),
+                               host_cache_bytes=int(24e9), seed=seed,
+                               keep_alive=keep_alive, prewarm=prewarm,
+                               prewarm_min_benefit=1.0, **kw)
+
+
+def req(time: float, model_id: str) -> Request:
+    return Request(time=time, model_id=model_id, dataset="gsm8k",
+                   prompt_tokens=64, output_tokens=16, batch_size=1)
+
+
+# ------------------------------------------------------ percentile pinning
+class TestPercentileConvention:
+    def test_index_convention(self):
+        xs = list(range(1, 11))  # 1..10
+        assert percentile(xs, 0.50) == 6  # sorted[min(9, int(10*q))]
+        assert percentile(xs, 0.95) == 10
+        assert percentile(xs, 0.99) == 10
+        assert percentile([3.0], 0.95) == 3.0
+        assert percentile([], 0.95) == 0.0
+
+    def test_unsorted_input(self):
+        assert percentile([9, 1, 5], 0.5) == 5
+
+    def test_one_shared_helper_across_planes(self):
+        # the dedup is structural, not by coincidence: every plane's import
+        # resolves to the SAME function object in core.trace
+        from repro.core import cluster
+        from repro.serverless import gateway
+        from repro.serverless import percentile as pkg_percentile
+        assert cluster.percentile is percentile
+        assert gateway.percentile is percentile
+        assert pkg_percentile is percentile
+
+
+# ------------------------------------------------------ arrival prediction
+class TestPredictGap:
+    def test_fixed_ttl_predicts_nothing(self):
+        assert FixedTTL(40.0).predict_gap("m") is None
+        mgr = LifecycleManager(FixedTTL(40.0))
+        mgr.observe_arrival("m", 0.0)
+        assert mgr.predict_next_arrival("m", 100.0) is None
+
+    def test_below_min_samples(self):
+        h = AdaptiveHistogram(min_samples=4)
+        for _ in range(3):
+            h.observe("m", 10.0)
+        assert h.predict_gap("m") is None
+
+    def test_conditional_median_skips_the_burst_spike(self):
+        # bimodal gaps: six intra-volley seconds + two 240 s inter-volley
+        # gaps.  Unconditionally the median sits in the spike the
+        # keep-alive already covers; conditioned on 45 s of observed
+        # idleness, only the inter-volley mode survives.
+        h = AdaptiveHistogram(bucket_s=5.0, window_s=720.0)
+        for _ in range(6):
+            h.observe("m", 1.0)
+        for _ in range(2):
+            h.observe("m", 240.0)
+        gap, prob = h.predict_gap("m")
+        assert gap == pytest.approx(2.5)  # bucket-0 midpoint
+        assert prob == pytest.approx(6 / 8)
+        gap, prob = h.predict_gap("m", min_gap_s=45.0)
+        assert gap == pytest.approx(242.5)  # bucket-48 midpoint
+        assert prob == pytest.approx(1.0)  # all conditional mass is there
+
+    def test_diffuse_tail_scores_low_probability(self):
+        h = AdaptiveHistogram(bucket_s=5.0, window_s=720.0)
+        for g in (60.0, 120.0, 300.0, 480.0, 660.0):
+            h.observe("m", g)
+        _, prob = h.predict_gap("m", min_gap_s=45.0)
+        assert prob <= 3 / 5  # spread mass: at most 3 buckets near median
+
+    def test_single_conditional_sample_is_not_a_model(self):
+        h = AdaptiveHistogram(bucket_s=5.0, window_s=720.0)
+        for _ in range(5):
+            h.observe("m", 1.0)
+        h.observe("m", 240.0)
+        assert h.predict_gap("m", min_gap_s=45.0) is None
+
+    def test_overflow_gaps_are_unpredictable(self):
+        h = AdaptiveHistogram(bucket_s=5.0, window_s=240.0)
+        for _ in range(4):
+            h.observe("m", 10_000.0)
+        assert h.predict_gap("m") is None
+
+    def test_manager_eta_is_last_arrival_plus_gap(self):
+        mgr = LifecycleManager(AdaptiveHistogram(bucket_s=5.0,
+                                                 window_s=720.0))
+        for t in (0.0, 240.0, 480.0, 720.0, 960.0):
+            mgr.observe_arrival("m", t)
+        eta, prob = mgr.predict_next_arrival("m", now=1005.0)
+        assert eta == pytest.approx(960.0 + 242.5)
+        assert prob == pytest.approx(1.0)
+        assert mgr.predict_next_arrival("never-seen", now=1.0) is None
+
+
+# -------------------------------------------------- pre-warm cost/benefit
+class TestPrewarmCost:
+    def test_store_slot_and_displacement_pricing(self):
+        costs = PhaseCosts(paper_l40())  # store 3.2 GB/s, h2d 5 GB/s
+        assert costs.prewarm_cost(3.2e9) == pytest.approx(1.0)
+        # displaced host bytes come back through min(h2d, store)
+        assert costs.prewarm_cost(0.0, 3.2e9) == pytest.approx(1.0)
+        assert costs.prewarm_cost(3.2e9, 6.4e9) == pytest.approx(3.0)
+
+    def test_net_benefit_discounts_by_probability(self):
+        costs = PhaseCosts(paper_l40())
+        assert costs.prewarm_net_benefit(10.0, 0.5, 3.2e9) \
+            == pytest.approx(4.0)
+        # certain arrival, free promotion: pure win
+        assert costs.prewarm_net_benefit(10.0, 1.0, 0.0) \
+            == pytest.approx(10.0)
+        # unlikely arrival cannot pay for a large promotion
+        assert costs.prewarm_net_benefit(10.0, 0.1, 6.4e9) < 0.0
+
+
+# ------------------------------------------------------- routing goldens
+class TestFleetRouting:
+    def test_replay_exact_golden(self):
+        trace = volley_trace()
+        a, b = make_fleet(), make_fleet()
+        a.run_trace(trace)
+        b.run_trace(trace)
+        assert a.decisions == b.decisions
+        assert a.lifecycle.log == b.lifecycle.log
+        assert a.log == b.log
+        assert a.summary() == b.summary()
+
+    def test_fleet_actually_spreads(self):
+        fg = make_fleet()
+        fg.run_trace(volley_trace())
+        assert {d[2] for d in fg.decisions} == {"engine0", "engine1"}
+
+    def test_resident_engine_wins_until_saturated(self):
+        fg = make_fleet(prewarm=False)
+        mid = MODELS[1].model_id  # llama3B (6.4 GB)
+        hot = fg.nodes[1]
+        hot.engine.prewarm(mid, now=0.0)  # device-resident on engine1
+        _, node = fg._route(mid, 0.0, hint=False)
+        assert node is hot  # t_load ~ 0 beats a cold engine
+        hot.busy_until = 1000.0  # saturate its queue
+        _, node = fg._route(mid, 0.0, hint=False)
+        assert node is fg.nodes[0]  # eq3+queue: idle cold engine wins
+
+    def test_metrics_vocabulary(self):
+        fg = make_fleet(prewarm=False)
+        fg.run_trace(volley_trace())
+        recs = fg.sink.records
+        # volleys serialize on the virtual clock: Queue phase is recorded
+        assert any(r.queue_s > 0.0 for r in recs)
+        # cold starts carry Init + Profile, warm hits carry neither
+        assert all(r.profile_s > 0.0 and r.init_s > 0.0
+                   for r in recs if r.cold)
+        assert all(r.profile_s == 0.0 and r.init_s == 0.0
+                   for r in recs if not r.cold)
+
+
+# ------------------------------------------- stale warm-until regression
+class StubEngine:
+    """Just enough engine for lifecycle bookkeeping tests."""
+
+    def __init__(self):
+        self.calls: list[tuple[str, str]] = []
+
+    def retain(self, model_id):
+        self.calls.append(("retain", model_id))
+
+    def release(self, model_id):
+        self.calls.append(("release", model_id))
+
+    def cancel_prefetch(self, model_id):
+        self.calls.append(("cancel_prefetch", model_id))
+
+
+class GrowingTTL:
+    """Policy whose chosen TTL grows between idles — if a stale warm-until
+    entry survives readmission, it truncates the second window."""
+
+    def __init__(self, ttls):
+        self.ttls = list(ttls)
+
+    def observe(self, model_id, gap_s):
+        pass
+
+    def ttl(self, model_id):
+        return self.ttls.pop(0) if len(self.ttls) > 1 else self.ttls[0]
+
+
+class TestStaleWarmUntil:
+    def test_gateway_fresh_ttl_is_not_truncated(self):
+        eng = StubEngine()
+        gw = Gateway(eng, keep_alive=GrowingTTL([10.0, 100.0]))
+        assert gw._admit("m", 0.0) is True  # cold
+        gw._finish_request("m", 1.0)  # warm until 11
+        assert gw._warm["m"] == pytest.approx(11.0)
+        assert gw._admit("m", 5.0) is False  # keep-alive hit, entry popped
+        gw._finish_request("m", 6.0)  # fresh TTL 100 -> warm until 106
+        assert gw._warm["m"] == pytest.approx(106.0)
+        gw._expire(11.0)  # the STALE deadline from the first idle period
+        assert "m" in gw._warm, "stale warm-until truncated the fresh TTL"
+        assert ("release", "m") not in eng.calls
+        gw._expire(106.0)
+        assert "m" not in gw._warm
+
+    def test_gateway_expiry_withdraws_hint_before_release(self):
+        eng = StubEngine()
+        gw = Gateway(eng, keep_alive=GrowingTTL([10.0]))
+        gw._admit("m", 0.0)
+        gw._finish_request("m", 1.0)
+        gw._expire(50.0)
+        assert eng.calls.index(("cancel_prefetch", "m")) \
+            < eng.calls.index(("release", "m"))
+
+    def test_fleet_fresh_ttl_is_not_truncated(self):
+        # single engine: with two engines the always-score router may send
+        # the re-arrival to the idle peer (cold load beats queueing behind
+        # the warm node), which never exercises the warm-hit TTL path
+        fg = make_fleet(prewarm=False, n_engines=1,
+                        keep_alive=GrowingTTL([10.0, 100.0]))
+        mid = MODELS[3].model_id
+        fg.run_trace([req(0.0, mid), req(5.0, mid)])
+        node = fg._find_warm(mid)
+        assert node is not None
+        t_end = node.busy_until  # second service drained here
+        assert node.warm[mid] == pytest.approx(t_end + 100.0)
+        fg._expire_all(t_end + 10.0)  # the stale first-window deadline
+        assert mid in node.warm, "stale warm-until truncated the fresh TTL"
+        fg._expire_all(t_end + 100.0)
+        assert mid not in node.warm
+
+
+# --------------------------------------------------- predictive pre-warm
+class TestPredictivePrewarm:
+    def test_fixed_ttl_makes_prewarm_a_structural_noop(self):
+        trace = volley_trace()
+        a = make_fleet(prewarm=False, keep_alive="fixed:40")
+        b = make_fleet(prewarm=True, keep_alive="fixed:40")
+        a.run_trace(trace)
+        b.run_trace(trace)
+        assert b.prewarms == 0
+        assert a.decisions == b.decisions
+        assert a.summary() == b.summary()
+
+    def test_prewarm_beats_reactive_on_volley_workload(self):
+        trace = volley_trace(n=160)
+        react = make_fleet(prewarm=False)
+        prew = make_fleet(prewarm=True)
+        react.run_trace(trace)
+        prew.run_trace(trace)
+        assert prew.prewarm_hits > 0
+        rs, ps = react.summary(), prew.summary()
+        assert ps["cold_start_rate"] < rs["cold_start_rate"]
+        assert ps["ttft_p95"] < rs["ttft_p95"]
+
+    def test_wasted_prewarm_is_charged_and_released(self):
+        fg = make_fleet()
+        mid = MODELS[1].model_id
+        node = fg.nodes[0]
+        # hand-arm a prediction that never comes true
+        fg.lifecycle.observe_arrival(mid, 0.0)
+        node.engine.prewarm(mid, now=10.0)
+        node.warm[mid] = 50.0
+        node.prewarmed[mid] = 40.0
+        fg._expire_all(60.0)
+        assert fg.prewarm_wasted == 1
+        assert mid not in node.warm and mid not in node.prewarmed
+        # the speculative pins are gone: nothing is active on the store
+        assert not node.engine.store.active_models
+
+    def test_pressure_runs_through_every_engine(self):
+        trace = volley_trace()
+        horizon = trace[-1].time
+        press = pressure_wave(horizon_s=horizon, base_bytes=int(24e9),
+                              low_frac=0.5, period_s=240.0)
+        fg = make_fleet(prewarm=False)
+        fg.run_trace(trace, pressure=press)
+        s = fg.summary()
+        assert s["n"] == len(trace)
+        assert s["pressure_evictions"] > 0
