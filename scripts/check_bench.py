@@ -11,6 +11,9 @@ commits to keeping green and monotone:
   * load-path speedup vs full init at 0/50/90% reuse
   * fused decode steps/sec
   * indexed-pool simulator events/sec
+  * fig17 chaos reliability: TTFT inflation under faults (lower-is-better)
+    plus the absolute invariants dropped_requests == 0 and
+    faults_injected == faults_handled on the newest entry
 
 Improvements always pass; a single entry (nothing to compare) passes.
 Threshold override: --threshold or BENCH_REGRESSION_THRESHOLD (fraction,
@@ -36,7 +39,8 @@ from benchmarks.common import load_bench_entries  # noqa: E402
 #: change, not scheduler jitter (the smoke noise floor still applies, since
 #: smoke entries run a smaller trace).
 LOWER_IS_BETTER = {"serverless.cold_rate", "serverless.ttft_p95",
-                   "serverless.fleet.cold_rate", "serverless.fleet.ttft_p95"}
+                   "serverless.fleet.cold_rate", "serverless.fleet.ttft_p95",
+                   "chaos.ttft_inflation", "chaos.ttft_p95"}
 
 
 def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
@@ -76,6 +80,16 @@ def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
     for gain in ("cold_rate_gain_vs_reactive", "p95_gain_vs_reactive"):
         if gain in fl:
             out[f"serverless.fleet.{gain}"] = fl[gain]
+    # fig17 chaos replay (DESIGN.md §15): reliability metrics from the
+    # modeled fleet under the seeded fault schedule.  TTFT inflation (the
+    # faulted/clean p95 ratio) and the faulted p95 itself gate
+    # lower-is-better; dropped_requests and the injected==handled ledger
+    # balance are hard invariants checked separately in chaos_invariants().
+    ch = entry.get("chaos", {}).get("headline", {})
+    if "ttft_inflation" in ch:
+        out["chaos.ttft_inflation"] = ch["ttft_inflation"]
+    if "ttft_p95" in ch:
+        out["chaos.ttft_p95"] = ch["ttft_p95"]
     if absolute:
         if "decode" in entry:
             out["decode.fused_steps_per_s"] = \
@@ -84,6 +98,30 @@ def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
             out["sim.indexed_events_per_s"] = \
                 entry["sim"]["indexed"]["events_per_s"]
     return out
+
+
+def chaos_invariants(entry: dict) -> list[str]:
+    """Hard reliability gates on ONE entry's chaos section (no previous
+    entry needed): under the seeded fault schedule the fleet must drop
+    nothing, and every injected fault must be visible in the handled/
+    quarantined/failed-over counters (DESIGN.md §15).  Entries that
+    predate fig17 have no chaos section and pass vacuously."""
+    ch = entry.get("chaos", {}).get("headline", {})
+    if not ch:
+        return []
+    failures = []
+    dropped = ch.get("dropped_requests", 0)
+    if dropped != 0:
+        failures.append(f"chaos.dropped_requests = {dropped} (must be 0)")
+    inj = ch.get("faults_injected", 0)
+    handled = ch.get("faults_handled", 0)
+    if inj != handled:
+        failures.append(f"chaos fault ledger unbalanced: injected={inj} "
+                        f"handled={handled}")
+    for name, val in sorted(ch.items()):
+        if not math.isfinite(val):
+            failures.append(f"chaos.{name} is non-finite: {val}")
+    return failures
 
 
 def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
@@ -146,6 +184,14 @@ def main() -> int:
               "entry (did a gain ratio divide by zero?):")
         for name, val in bad:
             print(f"  - {name} = {val}")
+        return 1
+    # reliability invariants are absolute, not relative — they gate the
+    # newest entry even on the very first run
+    chaos_failures = chaos_invariants(cur)
+    if chaos_failures:
+        print("check_bench: FAIL — chaos reliability invariants:")
+        for f in chaos_failures:
+            print(f"  - {f}")
         return 1
     prev = next((e for e in reversed(entries[:-1])
                  if e.get("smoke") == cur.get("smoke")), None)

@@ -816,8 +816,11 @@ class ClusterSim:
                 if w.host_cache is not None:
                     # the node died: its host cache dies with it; recovery
                     # rejoins with a cold host tier backed by the store, at
-                    # the CURRENT pressure budget (not the policy default)
+                    # the CURRENT pressure budget (not the policy default).
+                    # None = unbounded budget — int(None) would crash the
+                    # fail handler exactly when a pressure wave lifted caps
                     w.host_cache = SimHostCache(
+                        None if self._host_cap is None else
                         int(self._host_cap),
                         keep_alive_s=self.policy.host_keep_alive,
                         hint_ttl_s=self.policy.prefetch_ttl)
@@ -831,7 +834,13 @@ class ClusterSim:
                 if recover_after is not None:
                     self._push(now + recover_after, "recover", wid)
             elif kind == "recover":
-                byid[payload].failed = False
+                w = byid[payload]
+                w.failed = False
+                # rejoin at the CURRENT budget in every policy: pressure
+                # events during the downtime already hit this worker (the
+                # pressure handler walks ALL workers), but re-applying here
+                # is the explicit, idempotent guarantee the golden test pins
+                w.store.set_host_capacity(self._host_cap)
                 self._try_schedule(now)
             elif kind == "idle_expire":
                 wid, model, seq, epoch = payload

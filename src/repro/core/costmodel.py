@@ -59,6 +59,10 @@ class PhaseCosts:
     profile_medusa: float = 0.05
     kernel_launch: float = 0.45  # lazy CUDA kernel load during Prefill
     decode_step_overhead: float = 0.020
+    # chaos-plane retry policy (DESIGN.md §15): the same capped exponential
+    # backoff schedule `HostTensorStore.fetch` sleeps on the real plane
+    retry_backoff_base: float = 0.01
+    retry_backoff_cap: float = 0.08
 
     # ------------------------------------------------------------- phases
     def init_time(self, model_bytes: float) -> float:
@@ -76,6 +80,23 @@ class PhaseCosts:
         slower medium wins (`min(h2d_bw, store_bw)`)."""
         slow = min(self.hw.h2d_bw, self.hw.store_bw)
         return host_bytes / self.hw.h2d_bw + store_bytes / slow
+
+    # ----------------------------------------------- chaos-plane retries
+    def retry_backoff_time(self, attempts: int = 1) -> float:
+        """Wall seconds the capped exponential backoff sleeps across
+        `attempts` retried reads (the schedule `HostTensorStore.fetch`
+        executes: base, 2x base, ... capped)."""
+        return sum(min(self.retry_backoff_cap,
+                       self.retry_backoff_base * (2 ** k))
+                   for k in range(max(0, attempts)))
+
+    def store_retry_time(self, nbytes: float, attempts: int = 1) -> float:
+        """Modeled cost of `attempts` transient store-read failures over an
+        `nbytes` promotion: each failed attempt re-reads at `store_bw` and
+        sleeps its backoff slot (DESIGN.md §15) — what the modeled fleet
+        plane adds to `load_seconds` when its ``store.read`` point fires."""
+        return (attempts * nbytes / self.hw.store_bw
+                + self.retry_backoff_time(attempts))
 
     # -------------------------------------------- prefetch overlap (§12)
     def prefetch_hidden_bytes(self, host_bytes: float, store_bytes: float,

@@ -25,6 +25,11 @@ engine owns its own device pool + host Model Store, arrivals route by the
 shared eq3+queue affinity score, and ``--prewarm`` additionally promotes
 models AHEAD of their predicted re-arrivals when the cost/benefit check
 passes (adaptive keep-alive only — fixed TTLs carry no arrival model).
+
+``--chaos`` (requires ``--trace``) arms the seeded chaos schedule
+(DESIGN.md §15): per-engine h2d stalls and a prefetch-worker death, plus an
+engine crash/recover on the fleet path; the run ends with the per-engine
+fault ledger and (fleet) the dropped/redriven counts.
 """
 from __future__ import annotations
 
@@ -68,17 +73,44 @@ def main():
     ap.add_argument("--prewarm", action="store_true",
                     help="with --n-engines: promote models ahead of "
                          "predicted re-arrivals (adaptive keep-alive)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --trace: arm the seeded chaos schedule "
+                         "(DESIGN.md §15) — one h2d stall + one prefetch-"
+                         "worker death per engine, plus an engine crash/"
+                         "recover on the fleet path — and print the fault "
+                         "ledger at the end")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args()
     if args.n_engines < 1:
         ap.error("--n-engines must be >= 1")
     if args.n_engines > 1 and args.trace is None:
         ap.error("--n-engines > 1 requires --trace (fleet replay)")
+    if args.chaos and args.trace is None:
+        ap.error("--chaos requires --trace (fault schedules replay on the "
+                 "trace clock)")
+
+    injectors = None
+    fault_events = []
+    if args.chaos:
+        # seeded chaos schedule, one injector PER engine (the fleet ledger
+        # sums per-engine injectors — sharing one would double-count).  The
+        # launcher leaves store_keys empty: keyed store.read specs name
+        # tensor fingerprints, which fig17 and tests/test_chaos.py control;
+        # here the h2d stall, worker death, and fleet crash/recover fire.
+        from repro.core.faults import FaultInjector
+        from repro.serverless.workload import chaos_schedule
+
+        specs, fault_events = chaos_schedule(seed=args.chaos_seed,
+                                             n_engines=args.n_engines)
+        injectors = [FaultInjector(specs=tuple(s), seed=args.chaos_seed)
+                     for s in specs]
 
     names = args.models.split(",")
     host_bytes = (None if args.host_cache_mb is None
                   else args.host_cache_mb * 1024 * 1024)
     engines = [Engine(args.pool_mb * 1024 * 1024, host_cache_bytes=host_bytes,
-                      engine_id=f"engine{i}")
+                      engine_id=f"engine{i}",
+                      faults=injectors[i] if injectors else None)
                for i in range(args.n_engines)]
     engine = engines[0]
     cfgs = {}
@@ -108,7 +140,7 @@ def main():
                               prefetch=args.prefetch, prewarm=args.prewarm,
                               prompt_len=args.prompt_len,
                               gen_tokens=args.gen_tokens)
-            sink = gw.run_trace(trace)
+            sink = gw.run_trace(trace, faults=fault_events)
             for i, (r, d) in enumerate(zip(sink.records, gw.decisions)):
                 print(f"req {i}: {r.model_id:16s} -> {d[2]} "
                       f"{'cold' if r.cold else 'warm'} "
@@ -135,6 +167,22 @@ def main():
               f"expirations={int(ls['expirations'])} "
               f"policy={args.keep_alive_policy} trace={args.trace}"
               f"{fleet_note}")
+        if args.chaos:
+            for eng in engines:
+                fs = eng.fault_summary()
+                print(f"chaos[{eng.engine_id}]: injected={fs['injected']} "
+                      f"h2d_stalls={fs['h2d_stalls']} "
+                      f"h2d_retries={fs['h2d_retries']} "
+                      f"worker_restarts={fs['worker_restarts']} "
+                      f"join_failovers={fs['join_failovers']} "
+                      f"quarantined={fs['store_quarantined']} "
+                      f"crashes={fs['crashes']}")
+            if args.n_engines > 1:
+                fsum = gw.summary()
+                print(f"chaos fleet: dropped={fsum['dropped_requests']} "
+                      f"crashes={fsum['engine_crashes']} "
+                      f"recoveries={fsum['engine_recoveries']} "
+                      f"redriven={fsum['requests_redriven']}")
         for eng in engines:
             eng.close()
         return

@@ -9,13 +9,30 @@ enabling cross-model dedup of shared base weights (beyond-paper).
 from __future__ import annotations
 
 import hashlib
+import logging
 import time as _time
+import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
+
+log = logging.getLogger(__name__)
+
+
+class StoreError(RuntimeError):
+    """A persistent-store read could not be satisfied (after retries)."""
+
+
+class StoreReadError(StoreError):
+    """Transient read failure — retryable with backoff."""
+
+
+class StoreCorruptionError(StoreError):
+    """Blob failed its crc32 integrity check — NOT retryable (the blob is
+    corrupt in place); the caller must quarantine and re-materialize."""
 
 
 @dataclass(frozen=True)
@@ -77,16 +94,28 @@ class PersistentStore:
     `min(h2d_bw, store_bw)` instead of the host-cache `h2d_bw`.  With
     `store_bw=None` reads are unthrottled (unit tests stay fast); the byte
     counters still record tier traffic either way.
+
+    Integrity (DESIGN.md §15): every blob carries its crc32, verified on
+    every read — a corrupt blob raises `StoreCorruptionError` instead of
+    silently promoting garbage weights.  `faults` is an optional
+    `FaultInjector` consulted at the ``store.read`` point (keyed by
+    fingerprint); `quarantine` drops a bad blob so the engine's `init_fn`
+    fallback can re-materialize it.
     """
 
-    def __init__(self, *, store_bw: Optional[float] = None):
-        # fingerprint -> (raw bytes, dtype, shape); the dtype OBJECT is kept
-        # (not its name) so extension dtypes like bfloat16 round-trip
-        self._blobs: dict[str, tuple[bytes, "np.dtype", tuple[int, ...]]] = {}
+    def __init__(self, *, store_bw: Optional[float] = None, faults=None):
+        # fingerprint -> (raw bytes, dtype, shape, crc32); the dtype OBJECT
+        # is kept (not its name) so extension dtypes like bfloat16 round-trip
+        self._blobs: dict[str, tuple[bytes, "np.dtype", tuple[int, ...], int]] = {}
         self.store_bw = store_bw
+        self.faults = faults  # FaultInjector or None (chaos plane)
         self._nbytes = 0
         self.bytes_written = 0  # cumulative spill traffic (host -> store)
         self.bytes_read = 0  # cumulative promote traffic (store -> host)
+        self.read_errors = 0  # transient read failures raised (injected)
+        self.checksum_failures = 0  # crc32 mismatches detected on read
+        self.quarantined = 0  # blobs dropped as unrecoverable
+        self.bytes_quarantined = 0  # bytes of those blobs
 
     def __contains__(self, fingerprint: str) -> bool:
         return fingerprint in self._blobs
@@ -102,13 +131,30 @@ class PersistentStore:
         prev = self._blobs.get(fingerprint)
         if prev is not None:
             self._nbytes -= len(prev[0])
-        self._blobs[fingerprint] = (raw, arr.dtype, tuple(arr.shape))
+        self._blobs[fingerprint] = (raw, arr.dtype, tuple(arr.shape),
+                                    zlib.crc32(raw))
         self._nbytes += len(raw)
         self.bytes_written += len(raw)
 
-    def _read(self, raw: bytes, dtype: "np.dtype",
-              shape: tuple[int, ...]) -> "np.ndarray":
+    def _read(self, fingerprint: str, raw: bytes, dtype: "np.dtype",
+              shape: tuple[int, ...], crc: int) -> "np.ndarray":
         t0 = _time.perf_counter()
+        if self.faults is not None:
+            spec = self.faults.fire("store.read", key=fingerprint)
+            if spec is not None:
+                if spec.mode == "corrupt":
+                    # flip a byte IN PLACE: every retry of this read sees the
+                    # corruption until the blob is quarantined
+                    self.corrupt(fingerprint)
+                    raw = self._blobs[fingerprint][0]
+                else:
+                    self.read_errors += 1
+                    raise StoreReadError(
+                        f"injected transient read error for {fingerprint}")
+        if zlib.crc32(raw) != crc:
+            self.checksum_failures += 1
+            raise StoreCorruptionError(
+                f"crc32 mismatch for {fingerprint} ({len(raw)} bytes)")
         arr = np.frombuffer(raw, dtype=dtype).reshape(shape)
         self.bytes_read += len(raw)
         if self.store_bw:
@@ -119,15 +165,43 @@ class PersistentStore:
         return arr
 
     def get(self, fingerprint: str) -> "np.ndarray":
-        raw, dtype, shape = self._blobs[fingerprint]
-        return self._read(raw, dtype, shape)
+        raw, dtype, shape, crc = self._blobs[fingerprint]
+        return self._read(fingerprint, raw, dtype, shape, crc)
 
     def pop(self, fingerprint: str) -> "np.ndarray":
         """Promoting read: return the array and drop the blob, so every
-        fingerprint stays resolvable from exactly one tier."""
-        raw, dtype, shape = self._blobs.pop(fingerprint)
+        fingerprint stays resolvable from exactly one tier.  The blob is
+        dropped only AFTER the read verifies — a failed read leaves it in
+        place so the caller can retry (or quarantine)."""
+        raw, dtype, shape, crc = self._blobs[fingerprint]
+        arr = self._read(fingerprint, raw, dtype, shape, crc)
+        del self._blobs[fingerprint]
         self._nbytes -= len(raw)
-        return self._read(raw, dtype, shape)
+        return arr
+
+    def corrupt(self, fingerprint: str) -> bool:
+        """Flip one byte of a stored blob (chaos plane / tests).  Persistent:
+        the crc check fails on every subsequent read until quarantined."""
+        ent = self._blobs.get(fingerprint)
+        if ent is None:
+            return False
+        raw, dtype, shape, crc = ent
+        flipped = bytes([raw[0] ^ 0xFF]) + raw[1:]
+        self._blobs[fingerprint] = (flipped, dtype, shape, crc)
+        return True
+
+    def quarantine(self, fingerprint: str) -> bool:
+        """Drop an unrecoverable blob so the fingerprint becomes
+        unresolvable — the engine's `init_fn` fallback re-materializes it."""
+        ent = self._blobs.pop(fingerprint, None)
+        if ent is None:
+            return False
+        self._nbytes -= len(ent[0])
+        self.quarantined += 1
+        self.bytes_quarantined += len(ent[0])
+        log.warning("persistent store: quarantined blob %s (%d bytes)",
+                    fingerprint, len(ent[0]))
+        return True
 
 
 class HostTensorStore:
@@ -153,7 +227,9 @@ class HostTensorStore:
 
     def __init__(self, capacity_bytes: Optional[int] = None, *,
                  spill: Optional[PersistentStore] = None,
-                 keep_alive_s: Optional[float] = None):
+                 keep_alive_s: Optional[float] = None,
+                 retry_max: int = 3, retry_base_s: float = 0.01,
+                 retry_cap_s: float = 0.08):
         self._bufs: "OrderedDict[str, np.ndarray]" = OrderedDict()  # LRU order
         self.capacity_bytes = capacity_bytes
         self.spill = spill if spill is not None else PersistentStore()
@@ -162,6 +238,12 @@ class HostTensorStore:
         # face realistic churn instead of a cache that only shrinks under cap
         # pressure.  None disables aging (no timestamps kept).
         self.keep_alive_s = keep_alive_s
+        # chaos-plane retry policy (DESIGN.md §15): transient spill-tier read
+        # failures are retried up to `retry_max` times with capped
+        # exponential backoff; corruption and exhausted retries quarantine.
+        self.retry_max = retry_max
+        self.retry_base_s = retry_base_s
+        self.retry_cap_s = retry_cap_s
         self._last_access: dict[str, float] = {}  # fp -> monotonic seconds
         self._pins: dict[str, int] = {}  # fingerprint -> refcount
         self._nbytes = 0  # incremental: sum of resident buffer bytes
@@ -171,6 +253,8 @@ class HostTensorStore:
         self.bytes_spilled = 0  # cumulative bytes of those spills
         self.promotions = 0  # cumulative store -> host promotes
         self.expirations = 0  # cumulative keep-alive-aged spills
+        self.read_retries = 0  # transient spill-read errors retried
+        self.quarantines = 0  # spill blobs given up on (corrupt/exhausted)
 
     def __contains__(self, fingerprint: str) -> bool:
         return fingerprint in self._bufs
@@ -213,10 +297,38 @@ class HostTensorStore:
     def fetch(self, fingerprint: str) -> "np.ndarray":
         """Resolve from the hierarchy: host hit is a dict lookup; a spill-tier
         hit promotes the tensor back into the host cache (store_bw-limited
-        read), evicting LRU unpinned tensors if the cap demands it."""
+        read), evicting LRU unpinned tensors if the cap demands it.
+
+        Failure-hardened (DESIGN.md §15): transient read errors retry with
+        capped exponential backoff; a crc32 corruption (never retryable) or
+        exhausted retries quarantine the blob and raise `StoreError` — the
+        fingerprint is then unresolvable and the engine re-materializes it
+        via `init_fn`.  Either way the host tier's pin/LRU accounting is
+        untouched by the failure (nothing was admitted)."""
         if fingerprint in self._bufs:
             return self.get(fingerprint)
-        arr = self.spill.pop(fingerprint)  # one-tier invariant: move, not copy
+        attempt = 0
+        while True:
+            try:
+                # one-tier invariant: move, not copy (pop drops only after
+                # the read verifies, so retries see the blob)
+                arr = self.spill.pop(fingerprint)
+                break
+            except StoreCorruptionError:
+                self.spill.quarantine(fingerprint)
+                self.quarantines += 1
+                raise
+            except StoreReadError as e:
+                attempt += 1
+                self.read_retries += 1
+                if attempt > self.retry_max:
+                    self.spill.quarantine(fingerprint)
+                    self.quarantines += 1
+                    raise StoreError(
+                        f"read of {fingerprint} failed after "
+                        f"{attempt} attempts") from e
+                _time.sleep(min(self.retry_cap_s,
+                                self.retry_base_s * (2 ** (attempt - 1))))
         self.promotions += 1
         self._admit(fingerprint, arr)
         return arr

@@ -17,7 +17,8 @@ from repro.serverless.fleet import (EngineNode, FleetGateway,  # noqa: F401
 from repro.serverless.lifecycle import (AdaptiveHistogram, FixedTTL,  # noqa: F401
                                         InstanceState, LifecycleManager,
                                         make_keep_alive)
-from repro.serverless.workload import (ARRIVALS, PressureEvent,  # noqa: F401
-                                       burst_trace, diurnal_trace,
+from repro.serverless.workload import (ARRIVALS, FaultEvent,  # noqa: F401
+                                       PressureEvent, burst_trace,
+                                       chaos_schedule, diurnal_trace,
                                        make_trace, poisson_trace,
                                        pressure_walk, pressure_wave)

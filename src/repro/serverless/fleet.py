@@ -50,6 +50,7 @@ import time as _time
 from typing import Optional, Sequence
 
 from repro.core.costmodel import Hardware, PhaseCosts, paper_l40
+from repro.core.faults import FaultInjector
 from repro.core.hostcache import SimHostCache
 from repro.core.reuse_store import LoadReport, ReuseStore
 from repro.core.scheduler import ScheduleEntry, affinity_schedule
@@ -58,7 +59,7 @@ from repro.models.tensors import TensorRecord
 from repro.serverless.gateway import (MetricsSink, TTFTRecord,
                                       make_prefill_batch)
 from repro.serverless.lifecycle import LifecycleManager, make_keep_alive
-from repro.serverless.workload import PressureEvent
+from repro.serverless.workload import FaultEvent, PressureEvent
 
 
 class ModeledEngine:
@@ -75,7 +76,8 @@ class ModeledEngine:
                  costs: Optional[PhaseCosts] = None,
                  host_cache_bytes: Optional[int] = None,
                  host_keep_alive_s: Optional[float] = None,
-                 hint_ttl_s: Optional[float] = None):
+                 hint_ttl_s: Optional[float] = None,
+                 faults: Optional[FaultInjector] = None):
         self.engine_id = engine_id
         self.store = ReuseStore(capacity_bytes,
                                 costs or PhaseCosts(paper_l40()))
@@ -84,6 +86,12 @@ class ModeledEngine:
                                              hint_ttl_s=hint_ttl_s)
         self.models: dict[str, list[TensorRecord]] = {}
         self.last_report: Optional[LoadReport] = None
+        # chaos plane (DESIGN.md §15): same injector protocol as the real
+        # engine, consulted at the modeled store-read point; per-engine
+        # injector (NOT shared) so the fleet ledger sums cleanly
+        self.faults = faults
+        self.store_retries = 0  # modeled transient-read retries priced in
+        self.crashes = 0
 
     # ------------------------------------------------------ engine protocol
     def register(self, model_id: str, records: Sequence[TensorRecord]):
@@ -96,8 +104,39 @@ class ModeledEngine:
              overlap_s: float = 0.0) -> LoadReport:
         rep = self.store.load_model(model_id, self.models[model_id],
                                     now=now, overlap_s=overlap_s)
+        if self.faults is not None and rep.bytes_from_store > 0:
+            # modeled plane's ``store.read`` point: a transient failure adds
+            # the re-read + backoff penalty the real plane would measure
+            spec = self.faults.fire("store.read", key=model_id)
+            if spec is not None:
+                self.store_retries += 1
+                rep.load_seconds += self.store.costs.store_retry_time(
+                    rep.bytes_from_store)
         self.last_report = rep
         return rep
+
+    # -------------------------------------------------------- chaos plane
+    def crash(self):
+        """Modeled engine crash, mirroring both `Engine.crash` and the
+        sim's fail handler: fresh device pool + fresh host tier at the
+        CURRENT capacity budget; durable (modeled) store state is implicit
+        — the next load of anything simply prices as fully cold."""
+        self.crashes += 1
+        cache = self.store.host_cache
+        costs = self.store.costs
+        self.store = ReuseStore(self.store.pool.capacity, costs)
+        self.store.host_cache = SimHostCache(cache.capacity_bytes,
+                                             keep_alive_s=cache.keep_alive_s,
+                                             hint_ttl_s=cache.hint_ttl_s)
+        self.last_report = None
+
+    def fault_summary(self) -> dict:
+        return {
+            "injected": (self.faults.ledger() if self.faults is not None
+                         else {}),
+            "store_retries": self.store_retries,
+            "crashes": self.crashes,
+        }
 
     def prefetch(self, model_id: str, *, now: float = 0.0):
         self.store.hint_prefetch(model_id, self.models[model_id], now)
@@ -145,6 +184,8 @@ class EngineNode:
         self.device_id: str = engine.engine_id
         self.prefetch_enabled = prefetch
         self.allow_hint = True  # scoring-only routing passes clear this
+        self.failed = False  # crashed (chaos plane): invisible to routing
+        self.score_dead = False  # shadow pass: score the node as if alive
         self.busy_until = 0.0  # trace-clock horizon of queued service
         self.warm: dict[str, float] = {}  # model_id -> warm-until (trace s)
         self.prewarmed: dict[str, float] = {}  # model_id -> predicted eta
@@ -152,6 +193,8 @@ class EngineNode:
     # ---------------------------------------------------------- DeviceView
     def can_run(self, model_bytes: int,
                 model_id: Optional[str] = None) -> bool:
+        if self.failed and not self.score_dead:
+            return False  # a crashed engine takes no placements
         return model_bytes <= self.engine.store.pool.capacity
 
     def reusable_bytes(self, records: Sequence[TensorRecord]) -> int:
@@ -209,6 +252,13 @@ class FleetGateway:
         self.prewarm_wasted = 0  # window lapsed unused (release + charge)
         self._timers: list[tuple[float, int, str, float, float]] = []
         self._armed: dict[str, float] = {}  # model -> predicted eta
+        # chaos plane (DESIGN.md §15): scheduled crash/recover events merged
+        # into `_advance`'s trace-clock ordering like pressure and timers
+        self._fault_events: list[tuple[float, int, str, str]] = []
+        self.engine_crashes = 0
+        self.engine_recoveries = 0
+        self.requests_redriven = 0  # arrivals a live crash re-routed
+        self._arrivals = 0  # total requests offered (drop accounting)
         self._seq = itertools.count()
         self._req_seq = itertools.count()  # prefill batch seeds (real plane)
 
@@ -225,15 +275,20 @@ class FleetGateway:
                 return n
         return None
 
-    def _route(self, model_id: str, now: float, *,
-               hint: bool) -> tuple[ScheduleEntry, EngineNode]:
+    def _route(self, model_id: str, now: float, *, hint: bool,
+               score_dead: bool = False) -> tuple[ScheduleEntry, EngineNode]:
         """Place one model by the sim's affinity score — literally the same
         ``affinity_schedule`` call the cluster sim makes, over DeviceView
         nodes.  `hint=False` runs a scoring-only pass (pre-warm cost checks
-        must not leave a prefetch hint behind when they decline)."""
+        must not leave a prefetch hint behind when they decline).
+        `score_dead=True` is the failover shadow pass: crashed nodes score
+        as if alive (hints required off), so the gateway can tell which
+        arrivals a crash actually re-routed (``requests_redriven``)."""
+        assert not (score_dead and hint), "shadow pass must not hint"
         records = self._records(model_id)
         for n in self.nodes:
             n.allow_hint = hint
+            n.score_dead = score_dead
         try:
             scheds, queued = affinity_schedule(
                 [(model_id, records, self._bytes(model_id))], self.nodes,
@@ -241,6 +296,7 @@ class FleetGateway:
         finally:
             for n in self.nodes:
                 n.allow_hint = True
+                n.score_dead = False
         if not scheds:
             raise RuntimeError(f"no engine can run {model_id} "
                                f"({self._bytes(model_id)} B)")
@@ -362,19 +418,85 @@ class FleetGateway:
         self.log.append(("prewarm", round(now, 6), model, node.device_id,
                          round(eta, 6)))
 
+    # ---------------------------------------------------------- chaos plane
+    def inject_failure(self, time: float, engine_id: str, *,
+                       recover_after: Optional[float] = None):
+        """Schedule an engine crash at `time` (trace clock) — the fleet
+        mirror of ``ClusterSim.inject_failure``.  The crashed engine's
+        arrivals re-route through `affinity_schedule` to survivors, its
+        lifecycle instances are expired consistently, and (with
+        `recover_after`) it rejoins with cold tiers at the CURRENT pressure
+        budget.  Call before `run_trace`; events interleave with pressure
+        and pre-warm timers in trace-clock order."""
+        assert any(n.device_id == engine_id for n in self.nodes), engine_id
+        heapq.heappush(self._fault_events,
+                       (time, next(self._seq), "crash", engine_id))
+        if recover_after is not None:
+            heapq.heappush(self._fault_events,
+                           (time + recover_after, next(self._seq),
+                            "recover", engine_id))
+
+    def _apply_fault(self, now: float, kind: str, engine_id: str):
+        node = next(n for n in self.nodes if n.device_id == engine_id)
+        injector = getattr(node.engine, "faults", None)
+        if kind == "crash":
+            self.engine_crashes += 1
+            # every warm/pre-warmed instance dies with the node: expire
+            # through the lifecycle (sim parity — its fail handler calls
+            # on_expire per instance); lost pre-warm windows are charged as
+            # wasted speculation.  No re-arm: a crash is not an idle lapse.
+            for model, until in sorted(node.warm.items(),
+                                       key=lambda kv: kv[1]):
+                eta = node.prewarmed.pop(model, None)
+                if eta is not None:
+                    self.prewarm_wasted += 1
+                    self.log.append(("prewarm-lost", round(now, 6), model,
+                                     engine_id, round(eta, 6)))
+                else:
+                    self.lifecycle.on_expire(model, now)
+            node.warm.clear()
+            node.prewarmed.clear()
+            node.failed = True
+            node.busy_until = now  # queued virtual work died with the node
+            if injector is not None:
+                injector.record("engine.crash", key=engine_id)
+            node.engine.crash()  # cold tiers at the CURRENT capacity budget
+            self.log.append(("crash", round(now, 6), "", engine_id, 0.0))
+            self.sink.record_fault(now, "crash", engine_id)
+        else:
+            node.failed = False
+            self.engine_recoveries += 1
+            # rejoin: tiers are cold (crash() already reset them at the
+            # then-current budget; pressure events during the downtime hit
+            # ALL nodes, failed included — same as the sim), queue horizon
+            # restarts from now
+            node.busy_until = max(node.busy_until, now)
+            if injector is not None:
+                injector.record("engine.recover", key=engine_id)
+            self.log.append(("recover", round(now, 6), "", engine_id, 0.0))
+            self.sink.record_fault(now, "recover", engine_id)
+
     def _advance(self, now: float, press: Sequence[PressureEvent],
                  pi: int) -> int:
-        """Process pressure events and pre-warm timers due by `now`, merged
-        in trace-clock order (like the sim's event heap); keep-alives that
-        lapsed before each event release their pins first."""
+        """Process pressure events, pre-warm timers, and fault events due by
+        `now`, merged in trace-clock order (like the sim's event heap);
+        keep-alives that lapsed before each event release their pins
+        first.  Tie-break at equal times: fault events first (a crash at t
+        pre-empts a timer at t), then timers, then pressure — fixed order,
+        so replays are event-for-event deterministic."""
         while True:
             tp = press[pi].time if pi < len(press) else math.inf
             tt = self._timers[0][0] if self._timers else math.inf
-            t = min(tp, tt)
+            tf = (self._fault_events[0][0] if self._fault_events
+                  else math.inf)
+            t = min(tp, tt, tf)
             if t > now:
                 break
             self._expire_all(t)
-            if tt <= tp:
+            if tf <= tt and tf <= tp:
+                fire, _, kind, engine_id = heapq.heappop(self._fault_events)
+                self._apply_fault(fire, kind, engine_id)
+            elif tt <= tp:
                 fire, _, model, eta, prob = heapq.heappop(self._timers)
                 self._fire_prewarm(fire, model, eta, prob)
             else:
@@ -386,15 +508,29 @@ class FleetGateway:
 
     # ------------------------------------------------------------ trace run
     def run_trace(self, trace: Sequence[Request], *,
-                  pressure: Sequence[PressureEvent] = ()) -> MetricsSink:
+                  pressure: Sequence[PressureEvent] = (),
+                  faults: Sequence[FaultEvent] = ()) -> MetricsSink:
+        for ev in faults:  # workload-supplied chaos schedule (DESIGN.md §15)
+            self.inject_failure(ev.time, ev.engine_id,
+                                recover_after=ev.recover_after)
         press = sorted(pressure, key=lambda p: p.time)
         pi = 0
         for req in trace:
             now = req.time
+            self._arrivals += 1
             pi = self._advance(now, press, pi)
             model = req.model_id
             self.lifecycle.observe_arrival(model, now)
             self._armed.pop(model, None)  # the arrival voids the prediction
+            if any(n.failed for n in self.nodes):
+                # failover accounting: a shadow scoring pass with dead nodes
+                # visible tells us whether THIS arrival would have landed on
+                # a crashed engine — those are the requests the crash
+                # actually redrove to survivors
+                _, ghost = self._route(model, now, hint=False,
+                                       score_dead=True)
+                if ghost.failed:
+                    self.requests_redriven += 1
             # ALWAYS score — never short-circuit to a warm node.  A warm
             # node wins naturally (device-resident bytes -> t_load ~ 0),
             # but under eq3+queue a saturated warm engine loses to an idle
@@ -467,7 +603,7 @@ class FleetGateway:
         return rec, service_s
 
     # -------------------------------------------------------------- summary
-    def summary(self) -> dict[str, float]:
+    def summary(self) -> dict:
         out = self.sink.summary()
         ls = self.lifecycle.summary()
         out["expirations"] = ls["expirations"]
@@ -478,6 +614,25 @@ class FleetGateway:
             getattr(n.engine.store.host_cache, "pressure_evictions", 0)
             for n in self.nodes
             if getattr(n.engine.store, "host_cache", None) is not None)
+        # chaos ledger (DESIGN.md §15): zero-valued absent faults, so
+        # fault-free summaries stay bit-identical to their pre-chaos selves
+        out["dropped_requests"] = self._arrivals - len(self.sink.records)
+        out["engine_crashes"] = self.engine_crashes
+        out["engine_recoveries"] = self.engine_recoveries
+        out["requests_redriven"] = self.requests_redriven
+        fc: dict[str, float] = {}
+        for n in self.nodes:  # per-engine injectors: summing never doubles
+            fs = getattr(n.engine, "fault_summary", None)
+            if fs is None:
+                continue
+            for k, v in fs().items():
+                if k == "injected":
+                    for point, c in v.items():
+                        key = "injected." + point
+                        fc[key] = fc.get(key, 0) + c
+                else:
+                    fc[k] = fc.get(k, 0) + v
+        out["fault_counters"] = fc
         return out
 
 
@@ -496,7 +651,8 @@ class ModeledFleetGateway(FleetGateway):
                  hw: Optional[Hardware] = None, seed: int = 0,
                  keep_alive="adaptive", prefetch: bool = True,
                  prewarm: bool = True, prewarm_min_benefit: float = 0.0,
-                 policy: str = "eq3+queue"):
+                 policy: str = "eq3+queue",
+                 faults: Optional[Sequence[FaultInjector]] = None):
         hw = hw or paper_l40()
         costs = PhaseCosts(hw)
         rng = random.Random(seed + 17)  # the sim's record-size convention
@@ -508,11 +664,14 @@ class ModeledFleetGateway(FleetGateway):
                              dtype="bfloat16",
                              fingerprint=f"{m.model_id}/t{i}", nbytes=s)
                 for i, s in enumerate(sizes)]
+        if faults is not None:
+            assert len(faults) == n_engines, "one injector per engine"
         engines = []
         for i in range(n_engines):
             eng = ModeledEngine(f"engine{i}", pool_bytes, costs=costs,
                                 host_cache_bytes=host_cache_bytes,
-                                host_keep_alive_s=host_keep_alive_s)
+                                host_keep_alive_s=host_keep_alive_s,
+                                faults=faults[i] if faults else None)
             for mid, recs in records.items():
                 eng.register(mid, recs)
             engines.append(eng)

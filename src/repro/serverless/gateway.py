@@ -56,13 +56,20 @@ class TTFTRecord:
 
 
 class MetricsSink:
-    """Append-only per-request metrics with percentile summaries."""
+    """Append-only per-request metrics with percentile summaries, plus the
+    chaos plane's fault-event stream (DESIGN.md §15)."""
 
     def __init__(self):
         self.records: list[TTFTRecord] = []
+        # (time, kind, engine_id) — crash/recover events the gateway applied
+        self.fault_events: list[tuple[float, str, str]] = []
 
     def add(self, rec: TTFTRecord):
         self.records.append(rec)
+
+    def record_fault(self, time: float, kind: str, engine_id: str):
+        """Ledger one fleet fault/recovery event (visible in `summary`)."""
+        self.fault_events.append((round(time, 6), kind, engine_id))
 
     def add_sim(self, res):
         """Fold one cluster-sim ``RequestResult`` (duck-typed: any object
@@ -78,7 +85,7 @@ class MetricsSink:
     def summary(self) -> dict[str, float]:
         n = len(self.records)
         if n == 0:
-            return {"n": 0}
+            return {"n": 0, "fault_events": len(self.fault_events)}
         ttfts = [r.ttft for r in self.records]
         cold = [r.ttft for r in self.records if r.cold]
         out = {
@@ -91,6 +98,7 @@ class MetricsSink:
             "queue_mean": sum(r.queue_s for r in self.records) / n,
             "load_mean": sum(r.load_s for r in self.records) / n,
             "bytes_from_store": sum(r.bytes_from_store for r in self.records),
+            "fault_events": len(self.fault_events),
         }
         for q in (0.50, 0.95, 0.99):
             out[f"cold_ttft_p{int(q * 100)}"] = percentile(cold, q)

@@ -210,3 +210,65 @@ def pressure_walk(*, horizon_s: float, base_bytes: int, step_s: float = 60.0,
         events.append(PressureEvent(t, int(frac * base_bytes)))
         t += step_s
     return events
+
+
+# ------------------------------------------------------------------- chaos
+@dataclass(frozen=True)
+class FaultEvent:
+    """At ``time`` (trace clock), engine ``engine_id`` suffers ``kind``
+    ("crash" is the only kind today); with ``recover_after`` set it rejoins
+    that many seconds later with cold tiers at the then-current pressure
+    budget.  Consumed by ``FleetGateway.run_trace(faults=...)`` — the fleet
+    mirror of ``ClusterSim.inject_failure`` (DESIGN.md §15)."""
+
+    time: float
+    engine_id: str
+    kind: str = "crash"
+    recover_after: float | None = None
+
+
+def chaos_schedule(*, seed: int = 0, n_engines: int = 2,
+                   crash_time: float = 20.0, recover_after: float = 15.0,
+                   store_keys: Sequence[str] = (),
+                   stall_s: float = 0.05) -> tuple[list, list[FaultEvent]]:
+    """The canonical seeded fault schedule (fig17, `serve.py --chaos`):
+    one store blob corruption + one transient store read error + one h2d
+    chunk stall + one prefetch-worker death, plus one engine crash/recover.
+
+    Returns ``(specs_per_engine, fault_events)`` where ``specs_per_engine``
+    is a list of per-engine ``FaultSpec`` lists (build one ``FaultInjector``
+    per engine from them — per-engine injectors keep the fleet ledger
+    summable).  ``store_keys`` are the keys the plane's ``store.read``
+    point fires with: tensor FINGERPRINTS for the real plane
+    (`PersistentStore` keys reads by blob), model ids for the modeled plane
+    (`ModeledEngine` keys by model) — key-pinned first-occurrence specs are
+    thread-interleaving-proof, so the same schedule is deterministic on
+    both planes.  Deterministic in `seed`: which engine crashes and which
+    keys the store faults hit are seeded picks, the occurrence indices are
+    fixed — replaying the same schedule fires the same faults.
+    """
+    from repro.core.faults import FaultSpec
+
+    rng = random.Random(seed)
+    crash_engine = rng.randrange(n_engines)
+    victims = list(store_keys)
+    rng.shuffle(victims)
+    specs: list[list] = [[] for _ in range(n_engines)]
+    for i in range(n_engines):
+        eng_specs = specs[i]
+        # every engine sees one early h2d stall and one worker death; the
+        # keyed store faults rotate across the seeded victim keys per engine
+        eng_specs.append(FaultSpec("h2d.chunk", at=(3,), mode="stall",
+                                   delay_s=stall_s))
+        if victims:
+            corrupt_victim = victims[i % len(victims)]
+            eng_specs.append(FaultSpec("store.read", at=(0,), mode="corrupt",
+                                       key=corrupt_victim))
+        if len(victims) > 1:
+            error_victim = victims[(i + 1) % len(victims)]
+            eng_specs.append(FaultSpec("store.read", at=(0,), mode="error",
+                                       key=error_victim))
+        eng_specs.append(FaultSpec("prefetch.worker", at=(1,)))
+    events = [FaultEvent(crash_time, f"engine{crash_engine}",
+                         recover_after=recover_after)]
+    return specs, events

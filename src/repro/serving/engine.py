@@ -31,6 +31,7 @@ Architecture support:
 from __future__ import annotations
 
 import itertools
+import logging
 import threading
 import time as _time
 import zlib
@@ -46,12 +47,28 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import PhaseCosts, paper_l40
 from repro.core.elastic_kv import ElasticKV
+from repro.core.faults import FaultInjector
 from repro.core.reuse_store import LoadReport, ReuseStore
 from repro.kernels import ops as kops
 from repro.models import build_model, lm
 from repro.models.common import rms_norm
-from repro.models.tensors import (HostTensorStore, PersistentStore,
+from repro.models.tensors import (HostTensorStore, PersistentStore, StoreError,
                                   TensorRecord, tensor_records)
+
+log = logging.getLogger(__name__)
+
+
+class TransferError(RuntimeError):
+    """A host→device chunk transfer failed (after its bounded retries)."""
+
+
+class TransferTimeout(TransferError):
+    """The chunked transfer blew its wall-clock deadline (stalled h2d)."""
+
+
+class WorkerDeath(RuntimeError):
+    """Injected prefetch-worker death (chaos plane): kills the worker loop;
+    the supervisor restarts it and the in-flight job fails over."""
 
 
 @dataclass
@@ -101,6 +118,39 @@ class DataLoadStats:
     # the sim plane (queue/init/load/profile/prefill).
     profile_seconds: float = 0.0
     total_seconds: float = 0.0
+    # chaos-plane outcomes for THIS load (DESIGN.md §15); the engine-lifetime
+    # ledger lives in `Engine.fault_summary()`
+    store_retries: int = 0  # transient store reads retried with backoff
+    tensors_quarantined: int = 0  # store blobs given up on (corrupt/exhausted)
+    tensors_reinit: int = 0  # quarantined tensors re-materialized via init_fn
+    h2d_retries: int = 0  # failed h2d chunks retried
+    transfer_timeouts: int = 0  # chunked-transfer deadline hits (retried)
+    prefetch_failover: bool = False  # joined a dead/failed hint, went inline
+
+
+@dataclass
+class FaultStats:
+    """Engine-lifetime fault/recovery ledger (DESIGN.md §15).
+
+    Every chaos-plane injection must surface here (or in the tier stores'
+    own counters, merged by `Engine.fault_summary`): fig17 balances
+    injected == handled + quarantined + failed-over, so nothing may be
+    swallowed.  `store_retries`/`store_quarantines` accumulate the host
+    tier's counters across `Engine.crash()` (which replaces the store
+    objects); the live totals are the sum of both.
+    """
+
+    h2d_retries: int = 0  # failed h2d chunks retried (incl. final failures)
+    h2d_stalls: int = 0  # injected chunk stalls absorbed
+    transfer_timeouts: int = 0  # transfer deadline hits
+    prefetch_errors: int = 0  # promotions that raised (job degraded)
+    worker_restarts: int = 0  # prefetch worker deaths -> supervisor restarts
+    join_failovers: int = 0  # loads that joined a dead/failed hint, went inline
+    load_errors: int = 0  # Engine.load unwinds (pin hygiene path)
+    shutdown_join_timeouts: int = 0  # close() left a hung worker behind
+    tensors_reinit: int = 0  # quarantined tensors re-materialized
+    store_retries: int = 0  # host-tier read retries folded in at crash()
+    store_quarantines: int = 0  # host-tier quarantines folded in at crash()
 
 
 class ChunkedTransfer:
@@ -110,27 +160,80 @@ class ChunkedTransfer:
     chunks are in flight at once (enqueue chunk i+1 while chunk i transfers),
     the ServerlessLLM staged-loading shape.  Wall time is therefore
     proportional to the bytes actually moved — the property fig15 measures.
+
+    Failure-hardened (DESIGN.md §15): each chunk's `device_put` retries up
+    to `max_retries` times on `TransferError`, and with `timeout_s` set the
+    whole call has a wall-clock deadline — a stalled h2d raises
+    `TransferTimeout` instead of hanging the request forever.  `faults` is
+    the optional chaos-plane injector consulted per chunk attempt
+    (``h2d.chunk``: mode "error" fails the put, "stall" sleeps `delay_s`);
+    outcomes are counted in `fault_stats`.
     """
 
-    def __init__(self, *, chunk_bytes: int = 16 << 20, depth: int = 2):
+    def __init__(self, *, chunk_bytes: int = 16 << 20, depth: int = 2,
+                 max_retries: int = 2, timeout_s: Optional[float] = None,
+                 faults: Optional[FaultInjector] = None,
+                 fault_stats: Optional[FaultStats] = None):
         assert depth >= 1
         self.chunk_bytes = chunk_bytes
         self.depth = depth
+        self.max_retries = max_retries
+        self.timeout_s = timeout_s
+        self.faults = faults
+        self.fault_stats = fault_stats
+
+    def _put(self, host_slice, stats: Optional[DataLoadStats]) -> jax.Array:
+        """One chunk's h2d with bounded retries (each attempt re-consults
+        the injector, so the occurrence schedule is over put ATTEMPTS)."""
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    spec = self.faults.fire("h2d.chunk")
+                    if spec is not None:
+                        if spec.mode == "stall":
+                            if self.fault_stats is not None:
+                                self.fault_stats.h2d_stalls += 1
+                            _time.sleep(spec.delay_s)
+                        else:
+                            raise TransferError("injected h2d chunk failure")
+                return jax.device_put(host_slice)
+            except TransferError as e:
+                # count BEFORE the limit check: the final, re-raised failure
+                # is still a visible retry in the ledger
+                attempt += 1
+                if self.fault_stats is not None:
+                    self.fault_stats.h2d_retries += 1
+                if stats is not None:
+                    stats.h2d_retries += 1
+                if attempt > self.max_retries:
+                    raise
+                log.warning("h2d chunk failed (attempt %d/%d): %s",
+                            attempt, self.max_retries, e)
 
     def transfer(self, items: Sequence[tuple[str, np.ndarray]],
                  stats: Optional[DataLoadStats] = None) -> dict[str, jax.Array]:
         out: dict[str, jax.Array] = {}
         inflight: deque[jax.Array] = deque()
+        deadline = (_time.perf_counter() + self.timeout_s
+                    if self.timeout_s is not None else None)
 
         def push(arr: jax.Array):
             inflight.append(arr)
             while len(inflight) > self.depth:
                 inflight.popleft().block_until_ready()
+            if deadline is not None and _time.perf_counter() > deadline:
+                if self.fault_stats is not None:
+                    self.fault_stats.transfer_timeouts += 1
+                if stats is not None:
+                    stats.transfer_timeouts += 1
+                raise TransferTimeout(
+                    f"chunked transfer exceeded {self.timeout_s:.1f}s")
 
         for fp, host in items:
             nrows = host.shape[0] if host.ndim else 0
             if host.nbytes <= self.chunk_bytes or nrows < 2:
-                arr = jax.device_put(host)
+                arr = self._put(host, stats)
                 push(arr)
                 out[fp] = arr
                 nchunks = 1
@@ -139,7 +242,7 @@ class ChunkedTransfer:
                                       max(1, host.nbytes // nrows)))
                 parts = []
                 for s in range(0, nrows, rows_per):
-                    part = jax.device_put(host[s : s + rows_per])
+                    part = self._put(host[s : s + rows_per], stats)
                     push(part)
                     parts.append(part)
                 out[fp] = (jnp.concatenate(parts, axis=0)
@@ -176,6 +279,7 @@ class PrefetchJob:
     cancelled: bool = False
     started: bool = False  # the worker promoted (or is promoting) a tensor
     urgent: bool = False  # a load joined: drain this job ahead of deadlines
+    failed: bool = False  # promotion raised / worker died: joiners fail over
     cursor: int = 0  # next fingerprint index
 
     def __post_init__(self):
@@ -229,13 +333,17 @@ class Prefetcher:
         self.joins = 0  # loads that joined an in-flight/completed job
         self.bytes_promoted = 0  # cumulative bytes moved store -> host
         self.errors = 0  # promotions that raised (job degraded to inline)
+        self.restarts = 0  # worker deaths the supervisor recovered from
+        self.join_timeouts = 0  # close() joins that left the worker running
+        self.join_timeout_s = 5.0  # close() join budget before declaring hung
         self.promote_log: list[tuple[str, str]] = []  # (model, fp) in order
 
     def close(self):
         """Stop the worker thread (idempotent).  Pending jobs complete their
         events un-promoted so no joiner can hang; the thread releases its
         engine reference — an engine that issued hints is collectable after
-        `Engine.close()`."""
+        `Engine.close()`.  A worker still alive after the join budget (hung
+        mid-read) is COUNTED and warned about, not silently leaked."""
         with self._cv:
             self._stop = True
             for job in self._active:
@@ -244,7 +352,17 @@ class Prefetcher:
             self._cv.notify_all()
             thread, self._thread = self._thread, None
         if thread is not None:
-            thread.join(timeout=5.0)
+            thread.join(timeout=self.join_timeout_s)
+            if thread.is_alive():
+                self.join_timeouts += 1
+                fs = getattr(self.engine, "fault_stats", None)
+                if fs is not None:
+                    fs.shutdown_join_timeouts += 1
+                log.warning(
+                    "prefetch worker still running %.1fs after close() — "
+                    "leaked a hung daemon thread (engine %s)",
+                    self.join_timeout_s,
+                    getattr(self.engine, "engine_id", "?"))
 
     def pause(self):
         """Freeze deadline scheduling between tensor promotions
@@ -282,12 +400,21 @@ class Prefetcher:
                 job.done.set()  # nothing store-resident (or closed): pin only
                 return job
             self._active.append(job)
-            if self._thread is None:
-                self._thread = threading.Thread(
-                    target=self._run, daemon=True, name="tangram-prefetcher")
-                self._thread.start()
+            self._ensure_worker()
             self._cv.notify()
         return job
+
+    def _ensure_worker(self):
+        """Spawn (or respawn) the supervised worker thread.  Caller holds
+        the condition lock.  A thread that died OUTSIDE the supervisor's
+        recovery (only possible for non-Exception unwinds) is replaced here
+        on the next submission, so a single death can never disable
+        prefetching permanently."""
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._thread = threading.Thread(
+            target=self._supervise, daemon=True, name="tangram-prefetcher")
+        self._thread.start()
 
     def take(self, model_id: str) -> Optional[PrefetchJob]:
         """Claim the model's job for a joining load (deregisters it; the
@@ -341,6 +468,27 @@ class Prefetcher:
     def _finish(self, job: PrefetchJob):
         job.done.set()  # idempotent; bytes accounted per-tensor in _run
 
+    def _supervise(self):
+        """Worker supervision loop (DESIGN.md §15): an injected (or real)
+        `WorkerDeath` unwinds `_run`, is counted as a restart, and the loop
+        re-enters — the prefetch pipeline survives its worker dying.  The
+        dying iteration's job fails over (its joiners go inline); every
+        other queued job is picked up by the restarted worker."""
+        while True:
+            try:
+                self._run()
+                return  # clean _stop exit
+            except Exception as e:
+                with self._cv:
+                    if self._stop:
+                        return
+                    self.restarts += 1
+                fs = getattr(self.engine, "fault_stats", None)
+                if fs is not None:
+                    fs.worker_restarts += 1
+                log.warning("prefetch worker died (%s: %s) — restarting",
+                            type(e).__name__, e)
+
     def _run(self):
         while True:
             with self._cv:
@@ -356,7 +504,17 @@ class Prefetcher:
                 fp = job.fingerprints[job.cursor]
                 job.cursor += 1
             eng = self.engine
+            # getattr: tests drive the Prefetcher with duck-typed engine
+            # stubs that predate the chaos plane
+            faults = getattr(eng, "faults", None)
+            fault_stats = getattr(eng, "fault_stats", None)
             try:
+                if faults is not None:
+                    spec = faults.fire("prefetch.worker",
+                                       key=job.model_id)
+                    if spec is not None:
+                        raise WorkerDeath(
+                            f"injected worker death on {job.model_id}/{fp}")
                 # per-tensor lock scope: the store_bw-throttled read happens
                 # inside, so a concurrent load waits at most one tensor
                 with eng._store_lock:
@@ -375,11 +533,24 @@ class Prefetcher:
                             # bounded: long-lived engines must not grow an
                             # audit trail nothing in production reads
                             del self.promote_log[:2048]
-            except BaseException:
+            except WorkerDeath:
+                # kills THIS worker: the job fails over (finally fires its
+                # event so joiners go inline) and the supervisor restarts
+                job.failed = True
+                job.cancelled = True
+                raise
+            except Exception as e:
                 # a failed promotion must not kill the worker: un-promoted
                 # tensors are still store-resolvable, the joining load reads
-                # them inline, and later hints keep working
+                # them inline, and later hints keep working.  Typed + counted
+                # + logged — never silently swallowed.
                 self.errors += 1
+                if fault_stats is not None:
+                    fault_stats.prefetch_errors += 1
+                log.warning("prefetch promotion of %s/%s failed (%s: %s) — "
+                            "job degrades to inline", job.model_id, fp,
+                            type(e).__name__, e)
+                job.failed = True
                 job.cancelled = True  # skip the job's remaining tensors
             finally:
                 # the event MUST fire even when a promotion raises (a
@@ -453,15 +624,32 @@ class Engine:
                  host_cache_bytes: Optional[int] = None,
                  store_bw: Optional[float] = None,
                  host_keep_alive_s: Optional[float] = None,
-                 engine_id: str = "engine0"):
+                 engine_id: str = "engine0",
+                 faults: Optional[FaultInjector] = None,
+                 transfer_timeout_s: Optional[float] = None):
         # stable identity for fleet routing (the DeviceView's device_id)
         self.engine_id = engine_id
         self.store = ReuseStore(capacity_bytes, costs or PhaseCosts(paper_l40()))
         self.block_tokens = block_tokens
         self.models: dict[str, RegisteredModel] = {}
+        # chaos plane (DESIGN.md §15): one injector shared by every fault
+        # point in this engine's data plane; the ledger of outcomes
+        self.faults = faults
+        self.fault_stats = FaultStats()
+        self.crashes = 0  # Engine.crash() invocations (fleet chaos events)
+        # default transfer deadline: explicit wins; under chaos a stalled
+        # h2d must eventually time out; otherwise unbounded (tier-1 paths
+        # and debugger pauses stay unperturbed)
+        if transfer_timeout_s is None and faults is not None:
+            transfer_timeout_s = 30.0
+        self.transfer_timeout_s = transfer_timeout_s
+        # joining a prefetch hint must be bounded too — a wedged worker
+        # fails the join over to the inline path instead of blocking load
+        self.join_timeout_s: Optional[float] = 30.0
         # three-tier model store (DESIGN.md §11): bounded host cache in the
         # middle, persistent-store spill below (store_bw-throttled reads)
-        self.persistent_store = PersistentStore(store_bw=store_bw)
+        self.persistent_store = PersistentStore(store_bw=store_bw,
+                                                faults=faults)
         self.host_store = HostTensorStore(host_cache_bytes,
                                           spill=self.persistent_store,
                                           keep_alive_s=host_keep_alive_s)
@@ -471,7 +659,10 @@ class Engine:
         self._store_lock = threading.RLock()
         self.prefetcher = Prefetcher(self)
         self._xfer = ChunkedTransfer(chunk_bytes=chunk_bytes,
-                                     depth=transfer_depth)
+                                     depth=transfer_depth,
+                                     timeout_s=self.transfer_timeout_s,
+                                     faults=faults,
+                                     fault_stats=self.fault_stats)
         self._tensors: dict[str, jax.Array] = {}  # fingerprint -> live buffer
         self._params_cache: dict[str, Any] = {}  # model_id -> assembled tree
         self._slabs: dict[tuple, SharedKVSlab] = {}  # KV geometry -> slab
@@ -531,14 +722,25 @@ class Engine:
             # hint already pinned the model, so waiting BEFORE our own pin
             # is safe and we block only for the part of the read the
             # hint->load window did not hide (no lock contention with the
-            # worker's throttled per-tensor reads)
+            # worker's throttled per-tensor reads).  The wait is BOUNDED: a
+            # dead/failed/wedged job fails this load over to the inline path
+            # (un-promoted tensors are still store-resolvable) instead of
+            # wedging it (DESIGN.md §15).
             tw = _time.perf_counter()
-            job.done.wait()
+            joined = job.done.wait(timeout=self.join_timeout_s)
             stats.prefetch_wait_seconds = _time.perf_counter() - tw
+            if not joined or job.failed:
+                self.fault_stats.join_failovers += 1
+                stats.prefetch_failover = True
+                log.warning("load of %s: prefetch hint %s — inline fallback",
+                            model_id,
+                            "failed" if job.failed else "join timed out")
             with self._store_lock:
                 # credit only promotions STILL host-resident: a stale job
                 # (model released + re-spilled since it completed) must not
-                # count bytes this load will re-read inline as bytes_store
+                # count bytes this load will re-read inline as bytes_store.
+                # (Safe even for a failed job: partial promotions were made
+                # under this same lock and DO serve this load as host hits.)
                 live = [(fp, n) for fp, n in job.promoted
                         if fp in self.host_store]
             stats.tensors_prefetched = len(live)
@@ -550,9 +752,14 @@ class Engine:
             self._pin_model(model_id)  # eviction must not race this load
         try:
             self._load_tensors(reg, stats)
-        except BaseException:
+        except Exception as e:
             # failed load must not leak pins forever: drop our own pin, and
-            # a consumed hint's pin too (its job can no longer be cancelled)
+            # a consumed hint's pin too (its job can no longer be cancelled).
+            # Typed + counted + logged (DESIGN.md §15) — the unwind is a
+            # visible fault, not a silent one.
+            self.fault_stats.load_errors += 1
+            log.warning("load of %s failed (%s: %s)", model_id,
+                        type(e).__name__, e)
             if not was_pinned or (job is not None and job.owns_pin):
                 self._unpin_model(model_id)
             raise
@@ -601,17 +808,60 @@ class Engine:
             stats.bytes_host_hit = sum(r.nbytes for r in host_hits)
             if spilled:
                 ts = _time.perf_counter()
+                retries0 = self.host_store.read_retries
+                quarantined: list[TensorRecord] = []
+                promoted_bytes = 0
                 for r in spilled:  # store_bw-limited promotion, pinned above
-                    with self._store_lock:
-                        self.host_store.fetch(r.fingerprint)
+                    try:
+                        with self._store_lock:
+                            self.host_store.fetch(r.fingerprint)
+                        promoted_bytes += r.nbytes
+                    except StoreError as e:
+                        # fetch already retried/backed-off and quarantined
+                        # the blob (DESIGN.md §15) — collect for the init_fn
+                        # fallback below instead of failing the load
+                        log.warning("store promote of %s (%s) unrecoverable "
+                                    "(%s: %s) — re-materializing",
+                                    r.name, r.fingerprint,
+                                    type(e).__name__, e)
+                        quarantined.append(r)
+                stats.store_retries = (self.host_store.read_retries
+                                       - retries0)
                 stats.store_seconds = _time.perf_counter() - ts
-                stats.tensors_store = len(spilled)
-                stats.bytes_store = sum(r.nbytes for r in spilled)
+                stats.tensors_store = len(spilled) - len(quarantined)
+                stats.bytes_store = promoted_bytes
+                if quarantined:
+                    # quarantine-then-reinit fallback: the blobs are gone
+                    # from every tier, so re-materialize — put_tree skips
+                    # still-resolvable leaves, only the quarantined ones
+                    # (and nothing else) are re-stored
+                    stats.tensors_quarantined = len(quarantined)
+                    tm = _time.perf_counter()
+                    params = reg.init_fn()
+                    with self._store_lock:
+                        stats.leaves_materialized += self.host_store.put_tree(
+                            reg.records, params)
+                    stats.init_seconds += _time.perf_counter() - tm
+                    del params
+                    stats.tensors_reinit = len(quarantined)
+                    self.fault_stats.tensors_reinit += len(quarantined)
             tt = _time.perf_counter()
             with self._store_lock:  # snapshot host buffers for the pipeline
                 items = [(r.fingerprint, self.host_store.get(r.fingerprint))
                          for r in to_move]
-            moved = self._xfer.transfer(items, stats)
+            # bounded whole-transfer retry: chunk-level errors retry inside
+            # ChunkedTransfer; a TransferTimeout (or exhausted chunk budget)
+            # re-runs the pipeline once before the load truly fails
+            h2d_snapshot = (stats.tensors_h2d, stats.bytes_h2d,
+                            stats.chunks_h2d)
+            try:
+                moved = self._xfer.transfer(items, stats)
+            except TransferError as e:
+                log.warning("chunked transfer failed (%s: %s) — retrying "
+                            "once", type(e).__name__, e)
+                (stats.tensors_h2d, stats.bytes_h2d,
+                 stats.chunks_h2d) = h2d_snapshot  # don't double-count
+                moved = self._xfer.transfer(items, stats)
             stats.transfer_seconds = _time.perf_counter() - tt
             self._tensors.update(moved)
         if to_move or reg.model_id not in self._params_cache:
@@ -665,6 +915,63 @@ class Engine:
         references it, so long-lived processes churning engines should
         close them."""
         self.prefetcher.close()
+
+    # ----------------------------------------------------------- chaos plane
+    def crash(self):
+        """Simulated engine/process crash (DESIGN.md §15): volatile state is
+        LOST — device pool, host tier, live buffers, param caches, KV slabs,
+        pins — while the persistent store (the durable tier) survives.  The
+        engine rejoins with cold tiers at the CURRENT host-capacity budget
+        (`capacity_bytes` already reflects every pressure event applied so
+        far, mirroring the sim's fail handler); host-only tensors that never
+        spilled become unresolvable and re-materialize via `init_fn` on the
+        next load.  The host tier's fault counters are folded into
+        `fault_stats` first so the chaos ledger survives the object swap."""
+        self.crashes += 1
+        self.fault_stats.store_retries += self.host_store.read_retries
+        self.fault_stats.store_quarantines += self.host_store.quarantines
+        self.prefetcher.close()
+        self.store = ReuseStore(self.store.pool.capacity, self.store.costs)
+        self.host_store = HostTensorStore(
+            self.host_store.capacity_bytes, spill=self.persistent_store,
+            keep_alive_s=self.host_store.keep_alive_s)
+        self._host_pins = set()
+        self._tensors = {}
+        self._params_cache = {}
+        self._slabs = {}
+        self._fused = {}
+        self._instances_of = {}
+        self.last_load = None
+        self.prefetcher = Prefetcher(self)
+        log.warning("engine %s crashed: tiers cold, persistent store intact",
+                    self.engine_id)
+
+    def fault_summary(self) -> dict[str, Any]:
+        """The engine's chaos ledger: injected faults (per point) plus every
+        handled/quarantined/failed-over outcome.  fig17 asserts the balance
+        injected == sum(outcomes) — a fault the planes swallowed would show
+        up here as an imbalance."""
+        fs, ps, hs, pf = (self.fault_stats, self.persistent_store,
+                          self.host_store, self.prefetcher)
+        return {
+            "injected": (self.faults.ledger() if self.faults is not None
+                         else {}),
+            "store_read_errors": ps.read_errors,
+            "store_checksum_failures": ps.checksum_failures,
+            "store_quarantined": ps.quarantined,
+            "store_retries": fs.store_retries + hs.read_retries,
+            "store_quarantines": fs.store_quarantines + hs.quarantines,
+            "h2d_retries": fs.h2d_retries,
+            "h2d_stalls": fs.h2d_stalls,
+            "transfer_timeouts": fs.transfer_timeouts,
+            "prefetch_errors": fs.prefetch_errors,
+            "worker_restarts": fs.worker_restarts,
+            "join_failovers": fs.join_failovers,
+            "load_errors": fs.load_errors,
+            "shutdown_join_timeouts": fs.shutdown_join_timeouts,
+            "tensors_reinit": fs.tensors_reinit,
+            "crashes": self.crashes,
+        }
 
     def cancel_prefetch(self, model_id: str):
         """Withdraw an abandoned hint: stop the in-flight promotion and drop

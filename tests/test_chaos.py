@@ -1,0 +1,332 @@
+"""Chaos plane (DESIGN.md §15): deterministic fault injection and the
+failure-hardened load/prefetch/fleet paths.
+
+Three layers of pinning:
+
+  * the `FaultInjector` itself — occurrence-index schedules replay exactly,
+    keyed specs count per (point, key), `arm` resets for a fresh replay,
+    `record` ledgers externally-scheduled (fleet) events;
+  * the real data plane — `ChunkedTransfer` chunk retries/stalls/timeouts,
+    the store corrupt→quarantine→reinit and transient-error→retry paths
+    through `Engine.load`, prefetch-worker death with supervisor restart
+    and join failover, and `Engine.crash` durability (persistent store
+    survives, volatile tiers do not);
+  * the modeled fleet — `inject_failure` crash/recover with zero dropped
+    requests and a balanced fault ledger, replay-exact.
+
+Every test asserts the ledger contract: injected faults surface in the
+handled/quarantined/failed-over counters — none swallowed.
+"""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.faults import FAULT_POINTS, FaultInjector, FaultSpec
+
+# ---------------------------------------------------------------- injector
+
+
+class TestFaultInjector:
+    def test_unknown_point_rejected(self):
+        with pytest.raises(AssertionError):
+            FaultSpec("definitely.not.a.point", at=(0,))
+
+    def test_occurrence_index_schedule(self):
+        inj = FaultInjector(specs=(FaultSpec("store.read", at=(1, 3)),))
+        hits = [inj.fire("store.read") is not None for _ in range(5)]
+        assert hits == [False, True, False, True, False]
+        assert inj.injected["store.read"] == 2
+        assert inj.injected_total() == 2
+        assert inj.ledger() == {"store.read": 2}
+
+    def test_keyed_spec_counts_per_key(self):
+        inj = FaultInjector(specs=(
+            FaultSpec("store.read", at=(0,), key="fp-x", mode="corrupt"),))
+        # other keys advance the global counter but never match the spec
+        assert inj.fire("store.read", key="fp-y") is None
+        assert inj.fire("store.read", key="fp-z") is None
+        spec = inj.fire("store.read", key="fp-x")  # first fp-x occurrence
+        assert spec is not None and spec.mode == "corrupt"
+        assert inj.fire("store.read", key="fp-x") is None  # second: clean
+        assert inj.log == [("store.read", 0, "fp-x", "corrupt")]
+
+    def test_replay_determinism(self):
+        specs = (FaultSpec("h2d.chunk", at=(2,), mode="stall", delay_s=0.01),
+                 FaultSpec("store.read", at=(0,), key="k", mode="error"))
+        seq = [("h2d.chunk", None), ("store.read", "k"), ("h2d.chunk", None),
+               ("h2d.chunk", None), ("store.read", "other")]
+        runs = []
+        for _ in range(2):
+            inj = FaultInjector(specs=specs, seed=7)
+            for point, key in seq:
+                inj.fire(point, key=key)
+            runs.append((list(inj.log), dict(inj.injected)))
+        assert runs[0] == runs[1]
+
+    def test_arm_resets_counters_and_ledger(self):
+        inj = FaultInjector(specs=(FaultSpec("h2d.chunk", at=(0,)),))
+        assert inj.fire("h2d.chunk") is not None
+        inj.arm((FaultSpec("store.read", at=(0,), key="fp"),))
+        # old schedule gone, counters fresh: occurrence 0 again
+        assert inj.fire("h2d.chunk") is None
+        assert inj.fire("store.read", key="fp") is not None
+        assert inj.injected == {"store.read": 1}
+        assert len(inj.log) == 1
+
+    def test_record_ledgers_external_events(self):
+        inj = FaultInjector()
+        inj.record("engine.crash", key="engine0")
+        inj.record("engine.recover", key="engine0")
+        assert inj.ledger() == {"engine.crash": 1, "engine.recover": 1}
+        assert [p for p, *_ in inj.log] == ["engine.crash", "engine.recover"]
+
+    def test_log_is_bounded(self):
+        inj = FaultInjector(specs=(
+            FaultSpec("h2d.chunk", at=tuple(range(5000))),))
+        for _ in range(5000):
+            inj.fire("h2d.chunk")
+        assert len(inj.log) <= 4096
+        assert inj.injected["h2d.chunk"] == 5000  # counters never truncate
+
+
+class TestChaosSchedule:
+    def test_same_seed_identical(self):
+        from repro.serverless.workload import chaos_schedule
+
+        a = chaos_schedule(seed=3, n_engines=2, store_keys=["k0", "k1"])
+        b = chaos_schedule(seed=3, n_engines=2, store_keys=["k0", "k1"])
+        assert a == b
+
+    def test_shape_and_points(self):
+        from repro.serverless.workload import chaos_schedule
+
+        specs, events = chaos_schedule(seed=0, n_engines=3,
+                                       crash_time=20.0, recover_after=5.0,
+                                       store_keys=["k0"])
+        assert len(specs) == 3
+        for per_engine in specs:
+            assert all(s.point in FAULT_POINTS for s in per_engine)
+            assert any(s.point == "h2d.chunk" for s in per_engine)
+            assert any(s.point == "prefetch.worker" for s in per_engine)
+        (ev,) = events
+        assert ev.time == 20.0 and ev.recover_after == 5.0
+        assert ev.engine_id in {f"engine{i}" for i in range(3)}
+
+
+# --------------------------------------------------- chunked h2d transfer
+
+
+def _xfer(specs, **kw):
+    from repro.serving.engine import ChunkedTransfer, FaultStats
+
+    fs = FaultStats()
+    return ChunkedTransfer(chunk_bytes=64, depth=2,
+                           faults=FaultInjector(specs=tuple(specs)),
+                           fault_stats=fs, **kw), fs
+
+
+class TestChunkedTransfer:
+    def test_chunk_error_is_retried(self):
+        xf, fs = _xfer([FaultSpec("h2d.chunk", at=(0,), mode="error")])
+        out = xf.transfer([("t", np.arange(16, dtype=np.float32))])
+        assert np.array_equal(np.asarray(out["t"]),
+                              np.arange(16, dtype=np.float32))
+        assert fs.h2d_retries == 1
+        # ledger balance: the injected error surfaced as exactly one retry
+        assert xf.faults.injected["h2d.chunk"] == fs.h2d_retries
+
+    def test_exhausted_retries_raise(self):
+        from repro.serving.engine import TransferError
+
+        xf, fs = _xfer([FaultSpec("h2d.chunk", at=(0, 1, 2), mode="error")],
+                       max_retries=2)
+        with pytest.raises(TransferError):
+            xf.transfer([("t", np.ones(4, np.float32))])
+        assert fs.h2d_retries == 3  # the final, fatal attempt is visible too
+
+    def test_stall_is_absorbed_and_counted(self):
+        xf, fs = _xfer([FaultSpec("h2d.chunk", at=(0,), mode="stall",
+                                  delay_s=0.01)])
+        xf.transfer([("t", np.ones(4, np.float32))])
+        assert fs.h2d_stalls == 1 and fs.h2d_retries == 0
+
+    def test_stall_past_deadline_times_out(self):
+        from repro.serving.engine import TransferTimeout
+
+        xf, fs = _xfer([FaultSpec("h2d.chunk", at=(0,), mode="stall",
+                                  delay_s=0.05)], timeout_s=0.01)
+        with pytest.raises(TransferTimeout):
+            xf.transfer([("t", np.ones(4, np.float32))])
+        assert fs.transfer_timeouts == 1
+
+
+# ----------------------------------------------- engine store-tier faults
+
+
+@pytest.fixture()
+def chaos_engine():
+    from repro.configs import all_configs
+    from repro.serving.engine import Engine
+
+    cfg = dataclasses.replace(all_configs()["llama3.2-1b"].smoke(),
+                              num_layers=2, vocab_size=512)
+    eng = Engine(256 << 20, host_cache_bytes=0,  # every unpin spills
+                 faults=FaultInjector())
+    eng.register("m", cfg)
+    yield eng
+    eng.close()
+
+
+def _cold_reload_with(eng, specs):
+    """Warm up (materialize + spill-through), learn fingerprints, then
+    crash to wipe the volatile tiers and reload with `specs` armed — every
+    tensor must come back through the persistent store, where the keyed
+    store.read specs live."""
+    import jax
+
+    eng.load("m")
+    ref = [np.asarray(x).copy() for x in jax.tree.leaves(eng.params_of("m"))]
+    eng.release("m")  # unpin: cap-0 host tier spills everything to the store
+    eng.faults.arm(specs)
+    eng.crash()
+    rep = eng.load("m")
+    got = jax.tree.leaves(eng.params_of("m"))
+    assert all(np.array_equal(np.asarray(x), y) for x, y in zip(got, ref))
+    return rep
+
+
+class TestEngineStoreFaults:
+    def test_crash_loses_volatile_keeps_persistent(self, chaos_engine):
+        eng = chaos_engine
+        rep = _cold_reload_with(eng, ())
+        s = eng.last_load
+        # nothing re-materialized: every tensor was store-resolvable
+        assert s.leaves_materialized == 0
+        assert s.bytes_store == rep.bytes_total
+        assert eng.crashes == 1
+        assert eng.fault_summary()["crashes"] == 1
+
+    def test_corruption_quarantines_then_reinits(self, chaos_engine):
+        eng = chaos_engine
+        fp = eng.models["m"].records[0].fingerprint
+        _cold_reload_with(
+            eng, (FaultSpec("store.read", at=(0,), mode="corrupt", key=fp),))
+        fs = eng.fault_summary()
+        assert fs["injected"]["store.read"] == 1
+        assert fs["store_checksum_failures"] == 1
+        assert fs["store_quarantined"] == 1
+        assert fs["tensors_reinit"] == 1  # init_fn fallback, load survived
+        assert eng.last_load.tensors_quarantined == 1
+        # corruption is terminal for the blob, not retried
+        assert fs["store_read_errors"] == 0
+        # the reinit re-stored the blob: resolvable again, contents correct
+        assert (fp in eng.host_store) or (fp in eng.persistent_store)
+
+    def test_transient_read_error_is_retried(self, chaos_engine):
+        eng = chaos_engine
+        fp = eng.models["m"].records[0].fingerprint
+        _cold_reload_with(
+            eng, (FaultSpec("store.read", at=(0,), mode="error", key=fp),))
+        fs = eng.fault_summary()
+        assert fs["injected"]["store.read"] == 1
+        assert fs["store_read_errors"] == 1
+        assert fs["store_retries"] >= 1  # host-tier fetch retried the read
+        assert fs["store_quarantined"] == 0  # transient: blob kept
+        assert fs["tensors_reinit"] == 0
+        assert eng.last_load.tensors_quarantined == 0
+
+    def test_ledger_balance_per_point(self, chaos_engine):
+        eng = chaos_engine
+        recs = eng.models["m"].records
+        _cold_reload_with(eng, (
+            FaultSpec("store.read", at=(0,), mode="corrupt",
+                      key=recs[0].fingerprint),
+            FaultSpec("store.read", at=(0,), mode="error",
+                      key=recs[1].fingerprint),
+            FaultSpec("h2d.chunk", at=(0,), mode="error"),
+        ))
+        fs = eng.fault_summary()
+        # the fig17 contract: injected == handled + quarantined, per point
+        assert fs["injected"]["store.read"] == \
+            fs["store_read_errors"] + fs["store_checksum_failures"]
+        assert fs["store_checksum_failures"] == fs["store_quarantined"]
+        assert fs["injected"]["h2d.chunk"] == \
+            fs["h2d_stalls"] + fs["h2d_retries"]
+
+
+# --------------------------------------------- prefetch worker supervision
+
+
+class TestPrefetchWorkerDeath:
+    def test_worker_death_restart_and_join_failover(self, chaos_engine):
+        eng = chaos_engine
+        eng.load("m")
+        eng.release("m")  # unpin so the cap-0 host tier spills to the store
+        eng.faults.arm((FaultSpec("prefetch.worker", at=(0,)),))
+        eng.crash()  # all tensors store-resident: the hint has real work
+        job = eng.prefetch("m")
+        assert job.done.wait(timeout=10.0), "failed job never fired done"
+        assert job.failed
+        rep = eng.load("m")  # joins the dead job -> inline failover
+        assert rep.bytes_total > 0
+        fs = eng.fault_summary()
+        assert fs["join_failovers"] == 1
+        assert eng.last_load.prefetch_failover
+        # the supervisor restarted the worker (poll: restart count is
+        # incremented after the job's done event fires)
+        deadline = time.monotonic() + 10.0
+        while (eng.fault_summary()["worker_restarts"] < 1
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        assert eng.fault_summary()["worker_restarts"] == 1
+        assert fs["injected"].get("prefetch.worker") == 1
+        # the restarted worker still serves later hints
+        eng.release("m")
+        eng.crash()
+        job2 = eng.prefetch("m")
+        eng.load("m")
+        assert not job2.failed
+
+
+# ------------------------------------------------- modeled fleet failover
+
+
+def _chaos_fleet(seed=5):
+    from repro.core.trace import PAPER_MODELS
+    from repro.serverless import ModeledFleetGateway, poisson_trace
+    from repro.serverless.workload import FaultEvent
+
+    models = PAPER_MODELS[4:8]
+    trace = poisson_trace(n_requests=60, models=models, seed=seed,
+                          mean_interarrival=12.0)
+    inj = [FaultInjector(seed=seed) for _ in range(2)]
+    fg = ModeledFleetGateway(models, n_engines=2, pool_bytes=int(20e9),
+                             host_cache_bytes=int(24e9), seed=seed,
+                             keep_alive="fixed:40", prewarm=False,
+                             faults=inj)
+    horizon = trace[-1].time
+    events = [FaultEvent(time=horizon / 3.0, engine_id="engine0",
+                         recover_after=horizon / 6.0)]
+    fg.run_trace(trace, faults=events)
+    return fg
+
+
+class TestModeledFleetChaos:
+    def test_crash_recover_zero_drops_balanced_ledger(self):
+        fg = _chaos_fleet()
+        s = fg.summary()
+        assert s["n"] == 60 and s["dropped_requests"] == 0
+        assert s["engine_crashes"] == 1 and s["engine_recoveries"] == 1
+        fc = s["fault_counters"]
+        assert fc["injected.engine.crash"] == fc["crashes"] == 1
+        assert fc["injected.engine.recover"] == s["engine_recoveries"] == 1
+
+    def test_replay_exact(self):
+        a, b = _chaos_fleet(), _chaos_fleet()
+        assert a.decisions == b.decisions
+        assert a.log == b.log
+        for na, nb in zip(a.nodes, b.nodes):
+            assert na.engine.faults.log == nb.engine.faults.log
+        assert a.summary() == b.summary()

@@ -330,3 +330,82 @@ def test_serverless_pressure_costs_store_bytes_not_correctness(
     for r in squeezed:
         assert r.bytes_from_host + r.bytes_from_store == r.bytes_transferred
         assert r.bytes_hit + r.bytes_transferred == r.bytes_total
+
+
+# ----------------------------------------- chaos plane (DESIGN.md §15)
+def _run_faulted(policy_name: str):
+    """fail -> pressure-during-downtime -> recover over the tiered
+    policies: the recovering node must rejoin at the budget the pressure
+    wave set WHILE it was down, not the policy default."""
+    from repro.serverless.workload import PressureEvent
+
+    models = PAPER_MODELS
+    trace = generate_trace(n_requests=160, locality="L3",
+                           mean_interarrival=10.0, seed=GOLDEN_SEED,
+                           max_output_tokens=128)
+    horizon = trace[-1].time
+    squeezed = int(sum(m.bytes for m in models) * 0.2)
+    pressure = [PressureEvent(time=horizon * 0.45, capacity_bytes=squeezed)]
+    sim = ClusterSim(models, POLICIES[policy_name], n_workers=2,
+                     seed=GOLDEN_SEED)
+    # the node is DOWN across the pressure event: fail at 40%, pressure at
+    # 45%, recover at 50% of the horizon
+    sim.inject_failure(horizon * 0.4, "gpu0",
+                       recover_after=horizon * 0.1)
+    res = sim.run(trace, pressure=pressure)
+    return res, sim, squeezed
+
+
+def test_failed_node_rejoins_at_current_pressure_budget():
+    for pol in ("tangram-prefetch", "tangram-serverless"):
+        res, sim, squeezed = _run_faulted(pol)
+        assert len(res) == 160, pol  # node death drops no requests
+        for w in sim.workers:
+            # both the survivor (squeezed live) and the recovered node
+            # (squeezed while dead) run at the pressure budget
+            assert w.host_cache is not None, pol
+            assert w.host_cache.capacity_bytes == squeezed, (
+                pol, w.device_id)
+
+
+def test_fail_pressure_recover_replay_exact():
+    """Golden ordering pin: the fail -> pressure -> recover interleaving is
+    event-for-event deterministic — every placement, warm/cold decision,
+    and per-request tier byte split replays exactly."""
+    key = lambda r: (r.model_id, r.arrival, r.start, r.warm, r.joined,
+                     r.bytes_hit, r.bytes_from_host, r.bytes_from_store,
+                     r.load_s, r.decode_s)
+    for pol in ("tangram-prefetch", "tangram-serverless"):
+        first, first_sim, _ = _run_faulted(pol)
+        replay, replay_sim, _ = _run_faulted(pol)
+        assert list(map(key, first)) == list(map(key, replay)), pol
+        if first_sim.lifecycle is not None:
+            assert first_sim.lifecycle.log == replay_sim.lifecycle.log, pol
+
+
+def test_requests_requeued_not_lost_on_failure():
+    """The failed node's in-flight + queued requests re-enter the global
+    queue: with one survivor everything still completes, and letting the
+    node recover can only help the (deterministic, modeled) makespan."""
+    from repro.serverless.workload import PressureEvent
+
+    models = PAPER_MODELS
+    trace = generate_trace(n_requests=160, locality="L3",
+                           mean_interarrival=10.0, seed=GOLDEN_SEED,
+                           max_output_tokens=128)
+    horizon = trace[-1].time
+    squeezed = int(sum(m.bytes for m in models) * 0.2)
+    pressure = [PressureEvent(time=horizon * 0.45, capacity_bytes=squeezed)]
+
+    def run(recover_after):
+        sim = ClusterSim(models, POLICIES["tangram-serverless"], n_workers=2,
+                         seed=GOLDEN_SEED)
+        sim.inject_failure(horizon * 0.4, "gpu0",
+                           recover_after=recover_after)
+        return sim.run(trace, pressure=pressure)
+
+    recovered = run(horizon * 0.1)
+    never = run(None)
+    assert len(recovered) == len(never) == 160
+    makespan = lambda res: max(r.done for r in res)
+    assert makespan(recovered) <= makespan(never)

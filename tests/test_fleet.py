@@ -325,3 +325,72 @@ class TestPredictivePrewarm:
         s = fg.summary()
         assert s["n"] == len(trace)
         assert s["pressure_evictions"] > 0
+
+
+# --------------------------------------------- failover routing (§15)
+class TestFleetFailover:
+    """`inject_failure` goldens: a crashed engine's arrivals re-route
+    through `affinity_schedule` to survivors, recovery rejoins it cold,
+    and the whole faulted replay is event-for-event deterministic."""
+
+    def _run(self, *, recover=True):
+        from repro.core.faults import FaultInjector
+
+        trace = volley_trace()
+        horizon = trace[-1].time
+        fg = make_fleet(prewarm=False,
+                        faults=[FaultInjector(seed=7) for _ in range(2)])
+        fg.inject_failure(horizon / 3.0, "engine0",
+                          recover_after=(horizon / 3.0 if recover else None))
+        fg.run_trace(trace)
+        return fg, horizon
+
+    def test_downtime_routes_to_survivor_only(self):
+        fg, horizon = self._run()
+        down = (horizon / 3.0, 2.0 * horizon / 3.0)
+        during = [d for d in fg.decisions if down[0] <= d[0] < down[1]]
+        assert during, "no arrivals during the downtime window"
+        assert {d[2] for d in during} == {"engine1"}
+        # ...and the dead engine serves again after recovery
+        after = [d for d in fg.decisions if d[0] >= down[1]]
+        assert "engine0" in {d[2] for d in after}
+
+    def test_zero_drops_and_ledgered_crash(self):
+        fg, _ = self._run()
+        s = fg.summary()
+        assert s["n"] == len(volley_trace())
+        assert s["dropped_requests"] == 0
+        assert s["engine_crashes"] == 1 and s["engine_recoveries"] == 1
+        fc = s["fault_counters"]
+        assert fc["injected.engine.crash"] == fc["crashes"] == 1
+        assert fc["injected.engine.recover"] == 1
+        # requests the dead node would have won re-route visibly
+        assert s["requests_redriven"] > 0
+
+    def test_no_recovery_survivor_carries_the_tail(self):
+        fg, horizon = self._run(recover=False)
+        s = fg.summary()
+        assert s["dropped_requests"] == 0
+        assert s["engine_recoveries"] == 0
+        tail = [d for d in fg.decisions if d[0] >= horizon / 3.0]
+        assert {d[2] for d in tail} == {"engine1"}
+
+    def test_faulted_replay_exact(self):
+        a, _ = self._run()
+        b, _ = self._run()
+        assert a.decisions == b.decisions
+        assert a.log == b.log
+        assert a.lifecycle.log == b.lifecycle.log
+        for na, nb in zip(a.nodes, b.nodes):
+            assert na.engine.faults.log == nb.engine.faults.log
+        assert a.summary() == b.summary()
+
+    def test_clean_run_summary_has_deterministic_zeros(self):
+        """fig16's bit-identical fixed-TTL cell depends on the chaos
+        counters being EXACT zeros (not absent, not NaN) without faults."""
+        fg = make_fleet(prewarm=False)
+        fg.run_trace(volley_trace())
+        s = fg.summary()
+        assert s["dropped_requests"] == 0 and s["engine_crashes"] == 0
+        assert s["engine_recoveries"] == 0 and s["requests_redriven"] == 0
+        assert s["fault_events"] == 0

@@ -287,3 +287,72 @@ def test_pin_safety_under_concurrent_prefetch_evict_load():
         assert all(np.array_equal(np.asarray(x), y)
                    for x, y in zip(got, ref_a))
         eng.release("b")
+
+
+def test_pin_safety_when_prefetch_promotion_faults():
+    """Chaos variant of the pin-safety loop (DESIGN.md §15): a transient
+    store read error strikes mid-promotion while a concurrent load churns
+    the other model.  The fault must degrade the JOB (inline failover),
+    never the tiers: no pin leaks, exactly-one-tier residence holds,
+    counters stay exact, and the loaded params are bit-identical."""
+    import dataclasses
+
+    from repro.configs import all_configs
+    from repro.core.faults import FaultInjector, FaultSpec
+    from repro.serving.engine import Engine
+
+    cfg = dataclasses.replace(all_configs()["llama3.2-1b"].smoke(),
+                              num_layers=2, vocab_size=512)
+    cfg_b = dataclasses.replace(cfg, num_layers=3)
+    eng = Engine(256 << 20, host_cache_bytes=0, faults=FaultInjector())
+    eng.register("a", cfg)
+    eng.register("b", cfg_b)
+    total_a = eng.load("a").bytes_total
+    eng.load("b")
+    ref_a = [np.asarray(x).copy()
+             for x in __import__("jax").tree.leaves(eng.params_of("a"))]
+    eng.persistent_store.store_bw = 40e6
+
+    all_fps = [r.fingerprint for m in ("a", "b")
+               for r in eng.models[m].records]
+    a_fps = [r.fingerprint for r in eng.models["a"].records]
+    errors0 = 0
+    for round_i in range(4):
+        eng.drop_device_copies("a")
+        eng.drop_device_copies("b")
+        # every round faults the first read of a DIFFERENT tensor of A —
+        # whether the prefetch worker or the joining load's retry loop hits
+        # it first, the promotion path must absorb it
+        eng.faults.arm((FaultSpec("store.read", at=(0,), mode="error",
+                                  key=a_fps[round_i % len(a_fps)]),))
+        job = eng.prefetch("a")
+        eng.load("b")
+        rep = eng.load("a")
+        s = eng.last_load
+        assert s.leaves_materialized == 0  # transient: nothing re-inits
+        assert s.tensors_quarantined == 0
+        assert rep.bytes_transferred == total_a
+        # the injected error is VISIBLE: either the worker's job degraded
+        # (prefetch_errors) or the inline fetch retried (read_retries) —
+        # never silently swallowed
+        fs = eng.fault_summary()
+        visible = (fs["prefetch_errors"] + fs["store_retries"]
+                   + fs["store_read_errors"])
+        assert visible > errors0, (round_i, fs)
+        errors0 = visible
+        # tier invariants under concurrency + faults: exactly-one-tier
+        # residence and counter-vs-scan equality, and no pin leaked by the
+        # degraded job (a leak would strand A's bytes host-side forever)
+        for fp in all_fps:
+            assert (fp in eng.host_store) != (fp in eng.persistent_store), fp
+        assert eng.host_store.nbytes() == \
+            sum(b.nbytes for b in eng.host_store._bufs.values())
+        got = __import__("jax").tree.leaves(eng.params_of("a"))
+        assert all(np.array_equal(np.asarray(x), y)
+                   for x, y in zip(got, ref_a))
+        eng.release("b")
+        eng.release("a")
+    # after the last release every pin is gone: the cap-0 host tier must
+    # be fully spilled (pinned bytes were the only thing keeping it full)
+    assert eng.host_store.pinned_nbytes() == 0
+    eng.close()

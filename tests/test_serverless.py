@@ -216,7 +216,7 @@ def test_metrics_sink_percentiles_and_cold_rate():
     assert s["ttft_p50"] == 50.0 and s["ttft_p95"] == 95.0
     assert s["cold_ttft_p95"] == 19.0  # over the 20 cold records only
     assert percentile([], 0.5) == 0.0
-    assert MetricsSink().summary() == {"n": 0}
+    assert MetricsSink().summary() == {"n": 0, "fault_events": 0}
 
 
 # -------------------------------------------------------------- end to end
