@@ -14,6 +14,10 @@ commits to keeping green and monotone:
   * fig17 chaos reliability: TTFT inflation under faults (lower-is-better)
     plus the absolute invariants dropped_requests == 0 and
     faults_injected == faults_handled on the newest entry
+  * fig18 live KV migration: migrated p95 TTFT (lower-is-better) and the
+    p95 gain over evict-and-reload, plus the absolute invariants
+    replay_mismatches == 0, dropped_requests == 0, migrations > 0, and
+    migrated p95 strictly below the baseline on the newest entry
 
 Improvements always pass; a single entry (nothing to compare) passes.
 Threshold override: --threshold or BENCH_REGRESSION_THRESHOLD (fraction,
@@ -40,7 +44,8 @@ from benchmarks.common import load_bench_entries  # noqa: E402
 #: smoke entries run a smaller trace).
 LOWER_IS_BETTER = {"serverless.cold_rate", "serverless.ttft_p95",
                    "serverless.fleet.cold_rate", "serverless.fleet.ttft_p95",
-                   "chaos.ttft_inflation", "chaos.ttft_p95"}
+                   "chaos.ttft_inflation", "chaos.ttft_p95",
+                   "migration.ttft_p95"}
 
 
 def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
@@ -90,6 +95,15 @@ def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
         out["chaos.ttft_inflation"] = ch["ttft_inflation"]
     if "ttft_p95" in ch:
         out["chaos.ttft_p95"] = ch["ttft_p95"]
+    # fig18 live KV migration (DESIGN.md §16): the handoff's p95 TTFT on
+    # the colocation workload and its gain over evict-and-reload; the
+    # replay/drop/strictly-better invariants are absolute and checked in
+    # migration_invariants().
+    mg = entry.get("migration", {}).get("headline", {})
+    if "ttft_p95" in mg:
+        out["migration.ttft_p95"] = mg["ttft_p95"]
+    if "p95_gain" in mg:
+        out["migration.p95_gain"] = mg["p95_gain"]
     if absolute:
         if "decode" in entry:
             out["decode.fused_steps_per_s"] = \
@@ -121,6 +135,39 @@ def chaos_invariants(entry: dict) -> list[str]:
     for name, val in sorted(ch.items()):
         if not math.isfinite(val):
             failures.append(f"chaos.{name} is non-finite: {val}")
+    return failures
+
+
+def migration_invariants(entry: dict) -> list[str]:
+    """Hard correctness gates on ONE entry's migration section (DESIGN.md
+    §16): the real-plane handoff must replay bit-identically, the modeled
+    colocation sweep must drop nothing, the handoff must actually fire,
+    and it must strictly beat evict-and-reload on p95 TTFT.  Entries that
+    predate fig18 have no migration section and pass vacuously."""
+    mg = entry.get("migration", {}).get("headline", {})
+    if not mg:
+        return []
+    failures = []
+    mismatches = mg.get("replay_mismatches", 0)
+    if mismatches != 0:
+        failures.append(f"migration.replay_mismatches = {mismatches} "
+                        "(handoff must be bit-identical)")
+    dropped = mg.get("dropped_requests", 0)
+    if dropped != 0:
+        failures.append(f"migration.dropped_requests = {dropped} "
+                        "(must be 0)")
+    migrations = mg.get("migrations", 0)
+    if migrations <= 0:
+        failures.append(f"migration.migrations = {migrations} "
+                        "(the handoff never fired)")
+    p95 = mg.get("ttft_p95")
+    base = mg.get("ttft_p95_baseline")
+    if p95 is not None and base is not None and p95 >= base:
+        failures.append(f"migration.ttft_p95 = {p95} >= baseline {base} "
+                        "(must strictly beat evict-and-reload)")
+    for name, val in sorted(mg.items()):
+        if not math.isfinite(val):
+            failures.append(f"migration.{name} is non-finite: {val}")
     return failures
 
 
@@ -191,6 +238,12 @@ def main() -> int:
     if chaos_failures:
         print("check_bench: FAIL — chaos reliability invariants:")
         for f in chaos_failures:
+            print(f"  - {f}")
+        return 1
+    migration_failures = migration_invariants(cur)
+    if migration_failures:
+        print("check_bench: FAIL — migration correctness invariants:")
+        for f in migration_failures:
             print(f"  - {f}")
         return 1
     prev = next((e for e in reversed(entries[:-1])

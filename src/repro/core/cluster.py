@@ -92,6 +92,13 @@ class SimPolicy:
     # LifecycleManager picks per model, and cold/warm transitions are
     # logged for golden replay.
     lifecycle: Optional[str] = None
+    # ---- live KV migration (DESIGN.md §16): a worker blocked by a long
+    # decode may offer to hand that decode to a peer; the affinity score
+    # then sees the other instances' residual plus the source-side
+    # snapshot stall instead of the full blocking residual (migrate vs
+    # queue).  Needs queue_aware — the offer replaces the queueing term.
+    migrate: bool = False
+    migrate_replay_tokens: int = 4  # snapshot-window tokens replayed (K)
 
 
 POLICIES = {
@@ -129,6 +136,14 @@ POLICIES = {
                                     affinity=True, concurrent=True,
                                     queue_aware=True, host_cache_bytes=64e9,
                                     prefetch=True, lifecycle="adaptive"),
+    # serverless plane + live KV migration (DESIGN.md §16): long decodes
+    # hand off to idle peers instead of walling arrivals behind their
+    # residual — the evict-vs-queue-vs-migrate decision fig18 sweeps
+    "tangram-migrate": SimPolicy("tangram-migrate", criu=True, medusa=True,
+                                 reuse=True, odkv=True, affinity=True,
+                                 concurrent=True, queue_aware=True,
+                                 host_cache_bytes=64e9, prefetch=True,
+                                 lifecycle="adaptive", migrate=True),
 }
 
 
@@ -236,6 +251,9 @@ class SimWorker:
         # serverless lifecycle manager (shared, set by ClusterSim): every
         # instance termination reports an expiry to it
         self.lifecycle = None
+        # controller back-ref for migration target discovery (set by
+        # ClusterSim); None keeps migration_offer silent
+        self.cluster = None
 
     # ----------------------------------------------------------------- views
     def busy_instances(self) -> list[WorkerInstance]:
@@ -320,6 +338,55 @@ class SimWorker:
         residual = sum(max(0.0, i.expected_free - now)
                        for i in self.busy_instances())
         return (residual + self.queued_work_s) / max(1, self.slots)
+
+    # ------------------------------------------------ live KV migration §16
+    def kv_inflight_bytes(self, inst: WorkerInstance) -> int:
+        """Deterministic KV estimate of an in-flight decode batch: the
+        per-sequence admission headroom times the batched sequences.  (The
+        sim releases exact ElasticKV accounting right after pricing it, so
+        the admission-control estimate is the footprint both the offer and
+        the execution price — they must agree.)"""
+        rate = self.kv_rate.get(inst.model_id, 0)
+        return (rate * self.policy.admit_kv_tokens
+                * max(1, inst.batched_seqs))
+
+    def migration_victim(self) -> Optional[WorkerInstance]:
+        """The longest-residual busy decode — what an arrival here would
+        wait behind, and what a handoff frees."""
+        busy = self.busy_instances()
+        if not busy:
+            return None
+        return max(busy, key=lambda i: (i.expected_free, i.model_id))
+
+    def migration_offer(self, now: float) -> Optional[float]:
+        """DeviceView (optional, DESIGN.md §16): expected queueing here if
+        the blocking decode migrates away — the OTHER instances' residual
+        plus the source-side snapshot stall, processor-shared like
+        `expected_queue_delay` — or None when no handoff pays.
+        Side-effect-free; the scheduler's chosen entry executes it."""
+        if not self.policy.migrate or self.failed or self.cluster is None:
+            return None
+        victim = self.migration_victim()
+        if victim is None:
+            return None
+        rem = victim.expected_free - now
+        if rem <= 0.0:
+            return None
+        kv = self.kv_inflight_bytes(victim)
+        if kv <= 0:
+            return None
+        full = self.costs.migrate_time(
+            kv, victim.weight_bytes,
+            replay_tokens=self.policy.migrate_replay_tokens)
+        if full >= rem:
+            return None  # the decode finishes before the handoff would
+        if self.cluster.migration_target(self, victim, now) is None:
+            return None
+        stall = self.costs.migrate_stall(kv)
+        residual = sum(max(0.0, i.expected_free - now)
+                       for i in self.busy_instances())
+        return max(0.0, (residual - rem + stall + self.queued_work_s)
+                   / max(1, self.slots))
 
     # ------------------------------------------------------ admission control
     def kv_admit_need(self, model: SimModel, batch_size: int,
@@ -418,6 +485,11 @@ class ClusterSim:
             self.lifecycle = LifecycleManager(make_keep_alive(policy.lifecycle))
         for w in self.workers:
             w.lifecycle = self.lifecycle
+            w.cluster = self  # migration target discovery (DESIGN.md §16)
+        self.migrations = 0
+        # handoff log: (time, model, src, dst, stall_s, moved_done)
+        self.migrate_log: list[tuple[float, str, str, str, float,
+                                     float]] = []
         # current fleet-wide host-tier budget: pressure events move it, and
         # a failed node that recovers must rejoin at the CURRENT budget,
         # not the policy's original one
@@ -473,6 +545,7 @@ class ClusterSim:
         else:
             schedules, _ = random_schedule(reqs, avail, self.rng)
         chosen = {s.model_id: s.device_id for s in schedules}
+        migrating = {s.model_id for s in schedules if s.migrate}
         assigned = []
         byid = {w.device_id: w for w in self.workers}
         remaining = deque()
@@ -487,6 +560,10 @@ class ClusterSim:
                 remaining.append(r)
         self.global_queue = remaining
         for r, w in assigned:
+            if r.model_id in migrating:
+                # the scheduler priced migrate-over-queue for this worker:
+                # hand its blocking decode off before the placement lands
+                self._execute_migration(now, w)
             self._start_on_worker(now, r, w)
 
     # ----------------------------------------------------- per-worker queue
@@ -711,6 +788,73 @@ class ClusterSim:
         self.results.append(res)
         self._push(done, "request_done",
                    (w.device_id, req.model_id, req.batch_size, inst.seq))
+
+    # ------------------------------------------------ live KV migration §16
+    def migration_target(self, src: SimWorker, victim: WorkerInstance,
+                         now: float) -> Optional[SimWorker]:
+        """Deterministic peer choice for a handoff: the least-queued live
+        worker with a free instance slot that can admit the moved weights
+        + KV beside its pinned instances."""
+        kv = src.kv_inflight_bytes(victim)
+        peers = [w for w in self.workers
+                 if w is not src and not w.failed and w.has_free_slot()
+                 and w.can_admit(victim.weight_bytes, kv)]
+        if not peers:
+            return None
+        return min(peers, key=lambda w: (w.expected_queue_delay(now),
+                                         w.device_id))
+
+    def _execute_migration(self, now: float, src: SimWorker):
+        """Hand `src`'s blocking decode to a peer (DESIGN.md §16).  The
+        source slot frees after the d2h snapshot stall; the moved batch
+        finishes on the target after ship + restore + replay + the decode
+        remainder.  Guards re-run (state may have moved since scoring); a
+        no-longer-payable handoff silently degrades to plain queueing."""
+        victim = src.migration_victim()
+        if victim is None:
+            return
+        rem = victim.expected_free - now
+        kv = src.kv_inflight_bytes(victim)
+        if rem <= 0.0 or kv <= 0:
+            return
+        full = self.costs.migrate_time(
+            kv, victim.weight_bytes,
+            replay_tokens=self.policy.migrate_replay_tokens)
+        if full >= rem:
+            return
+        target = self.migration_target(src, victim, now)
+        if target is None:
+            return
+        stall = self.costs.migrate_stall(kv)
+        model_id = victim.model_id
+        batch = victim.batched_seqs
+        # source: only the snapshot d2h holds the slot.  Bumping seq makes
+        # every pending completion stale (the handler's stale-done guard);
+        # the single replacement completion at the stall walks the normal
+        # idle/keep-alive path, so lifecycle accounting stays one-for-one.
+        victim.seq = next(src._seq)
+        victim.running = 1
+        victim.expected_free = now + stall
+        self._push(now + stall, "request_done",
+                   (src.device_id, model_id, batch, victim.seq))
+        # target: adopt (or create) an instance and finish the decode there
+        inst = target.instances.get(model_id)
+        if inst is None:
+            inst = WorkerInstance(model_id, victim.weight_bytes,
+                                  next(target._seq))
+            target.instances[model_id] = inst
+        target.store.activate(model_id)
+        done = now + full + max(0.0, rem - stall)
+        inst.running += 1
+        inst.batched_seqs += batch
+        inst.last_used = now
+        inst.expected_free = max(inst.expected_free, done)
+        self._push(done, "request_done",
+                   (target.device_id, model_id, batch, inst.seq))
+        self.migrations += 1
+        self.migrate_log.append((round(now, 6), model_id, src.device_id,
+                                 target.device_id, round(stall, 6),
+                                 round(done, 6)))
 
     # ------------------------------------------------------------- main loop
     def inject_failure(self, time: float, worker_id: str,

@@ -154,6 +154,30 @@ class PhaseCosts:
         return prob * saved_s - self.prewarm_cost(store_bytes,
                                                   displaced_bytes)
 
+    # ------------------------------------------- live KV migration (§16)
+    def migrate_time(self, kv_bytes: float, model_bytes: float = 0.0,
+                     replay_tokens: int = 0) -> float:
+        """End-to-end decode-handoff price (DESIGN.md §16): snapshot the
+        live KV pages to the host tier (d2h), ship the blob to the target's
+        host tier over the store path (the same ChunkedTransfer/host-store
+        machinery model loads ride), restore onto the target pool (h2d),
+        then replay the <=K tokens the source generated during the snapshot
+        window.  The target must hold the model's weights for replay, so
+        callers add its (usually warm) load price separately."""
+        d2h = kv_bytes / self.hw.h2d_bw
+        ship = kv_bytes / min(self.hw.h2d_bw, self.hw.store_bw)
+        h2d = kv_bytes / self.hw.h2d_bw
+        replay = replay_tokens * self.decode_step_time(model_bytes)
+        return d2h + ship + h2d + replay
+
+    def migrate_stall(self, kv_bytes: float) -> float:
+        """Seconds the SOURCE device stays occupied during a handoff: only
+        the d2h snapshot holds its pool pages; transfer/restore/replay run
+        on the host path and the target.  This is what an arrival waiting
+        on the source actually queues behind when the scheduler chooses
+        migrate over wait-out-the-decode."""
+        return kv_bytes / self.hw.h2d_bw
+
     def merge_time(self, moved_bytes: float) -> float:
         return moved_bytes / self.hw.d2d_bw
 

@@ -21,6 +21,34 @@ from repro.core.regions import RState
 from repro.core.reuse_store import ReuseStore
 
 
+@dataclass(frozen=True)
+class KVSnapshot:
+    """One request's serialized live-KV state — the unit the migration path
+    ships between engines (DESIGN.md §16).
+
+    ``pages`` holds one opaque payload per logical block, in logical-block
+    order, produced by the ``reader`` passed to :meth:`ElasticKV.snapshot`
+    (the real plane reads device slab pages, the property tests read a
+    byte-dict).  The snapshot carries its geometry so a restore onto a
+    mismatched ElasticKV is rejected instead of silently corrupting pages.
+    """
+
+    req: str
+    seq_len: int
+    block_tokens: int
+    kv_bytes_per_token: int
+    pages: tuple
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.pages)
+
+    def nbytes(self) -> int:
+        """Payload bytes the migration transfer must move (cost plane and
+        host-tier accounting both price from this)."""
+        return self.num_blocks * self.block_tokens * self.kv_bytes_per_token
+
+
 @dataclass
 class KVStats:
     pool_allocs: int = 0  # region fetches from the pool (slow path)
@@ -156,3 +184,52 @@ class ElasticKV:
     # ---------------------------------------------------------------- lookup
     def physical_addresses(self, req: str) -> list[int]:
         return [self.addr[pbn] for pbn in self.block_tables[req]]
+
+    # ------------------------------------------------------------- migration
+    def snapshot(self, req: str, reader=None) -> KVSnapshot:
+        """Serialize one live request for migration (DESIGN.md §16).
+
+        ``reader(pool_offset, lbn)`` returns the payload of the block at
+        ``pool_offset`` (logical block ``lbn``); the payloads land in
+        :attr:`KVSnapshot.pages` in logical order, so the restore side never
+        needs the source's PBNs or pool layout.  Without a reader the pages
+        are ``None`` placeholders (metadata-only snapshot — the modeled
+        plane prices from geometry alone).  The request stays live on this
+        KV; the caller releases it once the handoff commits.
+        """
+        table = self.block_tables[req]
+        addrs = [self.addr[pbn] for pbn in table]
+        pages = tuple(reader(off, lbn) if reader is not None else None
+                      for lbn, off in enumerate(addrs))
+        return KVSnapshot(req=req, seq_len=self.seq_lens[req],
+                          block_tokens=self.block_tokens,
+                          kv_bytes_per_token=(self.block_bytes
+                                              // self.block_tokens),
+                          pages=pages)
+
+    def restore(self, req: str, snap: KVSnapshot, writer=None) -> list[int]:
+        """Re-materialize a snapshot on THIS KV: allocate a fresh block
+        table covering ``snap.seq_len`` tokens and write each page payload
+        to its new pool offset via ``writer(pool_offset, payload)``.
+        Returns the new block table.  Geometry must match the snapshot's —
+        a block-size mismatch would silently shear pages across blocks.
+        """
+        if (snap.block_tokens != self.block_tokens
+                or snap.block_tokens * snap.kv_bytes_per_token
+                != self.block_bytes):
+            raise ValueError(
+                f"KV geometry mismatch: snapshot ({snap.block_tokens} tok x "
+                f"{snap.kv_bytes_per_token} B/tok) vs pool "
+                f"({self.block_tokens} tok, {self.block_bytes} B/block)")
+        if req in self.block_tables:
+            raise ValueError(f"request {req!r} already live on this KV")
+        self.ensure({req: snap.seq_len})
+        table = self.block_tables[req]
+        if len(table) != snap.num_blocks:
+            raise ValueError(
+                f"snapshot holds {snap.num_blocks} blocks but "
+                f"{snap.seq_len} tokens need {len(table)}")
+        if writer is not None:
+            for lbn, pbn in enumerate(table):
+                writer(self.addr[pbn], snap.pages[lbn])
+        return table

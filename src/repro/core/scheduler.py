@@ -45,6 +45,13 @@ class DeviceView(Protocol):
     # device — start promoting the model's store-resident tensors now so
     # the read overlaps queueing/init instead of extending the load.
     # def hint_prefetch(self, model_id, records, now) -> None: ...
+    # Optional (live KV migration, DESIGN.md §16): seconds until this
+    # device frees up if its blocking long decode is MIGRATED elsewhere
+    # (the source-side snapshot stall), or None when nothing is migratable
+    # (idle, no target, or the remaining decode is shorter than the
+    # handoff).  When offered and cheaper than waiting, the scheduler
+    # scores it instead of expected_queue_delay and flags the entry.
+    # def migration_offer(self, now) -> Optional[float]: ...
 
 
 @dataclass
@@ -53,6 +60,10 @@ class ScheduleEntry:
     device_id: str
     expected_load_seconds: float
     reuse_bytes: int
+    # the queueing term was replaced by a migration offer: the device's
+    # blocking decode hands off elsewhere instead of being waited out
+    # (DESIGN.md §16); the consumer executes the handoff it priced.
+    migrate: bool = False
 
 
 def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]],
@@ -76,6 +87,7 @@ def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]
         best = None
         best_lat = float("inf")
         best_reuse = 0
+        best_mig = False
         for dev in avail:
             if not dev.can_run(model_bytes, model_id):
                 continue
@@ -89,16 +101,26 @@ def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]
             else:
                 lat = estimate_load_time(model_bytes, reuse, hw,
                                          in_host_cache=in_host_cache)
+            mig = False
             if policy == "eq3+queue":
                 delay_fn = getattr(dev, "expected_queue_delay", None)
                 if delay_fn is not None:
-                    lat += delay_fn(now)
+                    delay = delay_fn(now)
+                    # migrate vs queue (DESIGN.md §16): a device holding a
+                    # long decode may offer to hand it off — the arrival
+                    # then waits only for the source-side snapshot stall
+                    offer_fn = getattr(dev, "migration_offer", None)
+                    offer = offer_fn(now) if offer_fn is not None else None
+                    if offer is not None and offer < delay:
+                        delay, mig = offer, True
+                    lat += delay
             if lat < best_lat:
-                best, best_lat, best_reuse = dev, lat, reuse
+                best, best_lat, best_reuse, best_mig = dev, lat, reuse, mig
         if best is None:
             queued.append(model_id)
         else:
-            schedules.append(ScheduleEntry(model_id, best.device_id, best_lat, best_reuse))
+            schedules.append(ScheduleEntry(model_id, best.device_id, best_lat,
+                                           best_reuse, migrate=best_mig))
             avail.remove(best)
             # prefetch-on-affinity-hint (DESIGN.md §12): placement is the
             # earliest moment the target node is known, so the store->host

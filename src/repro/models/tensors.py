@@ -255,6 +255,7 @@ class HostTensorStore:
         self.expirations = 0  # cumulative keep-alive-aged spills
         self.read_retries = 0  # transient spill-read errors retried
         self.quarantines = 0  # spill blobs given up on (corrupt/exhausted)
+        self.pressure_evictions = 0  # spills forced by set_capacity_bytes
 
     def __contains__(self, fingerprint: str) -> bool:
         return fingerprint in self._bufs
@@ -388,8 +389,16 @@ class HostTensorStore:
         `ChunkedTransfer`.  Returns the BYTES spilled (the same unit as the
         sim plane's `SimHostCache.set_capacity_bytes`)."""
         before = self.bytes_spilled
+        ev0 = self.evictions
         self.capacity_bytes = capacity_bytes
         self._enforce_cap()
+        # pressure-forced spills are counted separately from organic LRU
+        # churn (the fleet summary aggregates them per node — the sim
+        # plane's `SimHostCache` keeps the same counter, so both planes
+        # answer "what did tenant pressure cost" with one name).  Setting
+        # the cap back to None restores unbounded semantics and leaves the
+        # counter monotone — never reset, never double-counted.
+        self.pressure_evictions += self.evictions - ev0
         return self.bytes_spilled - before
 
     # ------------------------------------------------------------ eviction

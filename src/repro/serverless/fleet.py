@@ -189,6 +189,13 @@ class EngineNode:
         self.busy_until = 0.0  # trace-clock horizon of queued service
         self.warm: dict[str, float] = {}  # model_id -> warm-until (trace s)
         self.prewarmed: dict[str, float] = {}  # model_id -> predicted eta
+        self.fleet = None  # back-ref for migration offers (set by the fleet)
+        # what the busy horizon is made of: one entry per in-flight request
+        # ({t_end, model, kv_bytes, model_bytes}), so a crash can count the
+        # work it interrupted and a migration offer can price the blocking
+        # decode (DESIGN.md §16).  kv_bytes == 0 marks "unpriceable" (real
+        # plane): still ledgered, never offered.
+        self.inflight: list[dict] = []
 
     # ---------------------------------------------------------- DeviceView
     def can_run(self, model_bytes: int,
@@ -205,6 +212,16 @@ class EngineNode:
 
     def expected_queue_delay(self, now: float) -> float:
         return max(0.0, self.busy_until - now)
+
+    def migration_offer(self, now: float) -> Optional[float]:
+        """DeviceView (optional, DESIGN.md §16): seconds until this node
+        frees up if its blocking decode hands off elsewhere — the
+        source-side snapshot stall — or None when nothing is migratable.
+        Side-effect-free: the scheduler probes it on scoring-only and
+        shadow passes whose entries are never executed."""
+        if self.fleet is None:
+            return None
+        return self.fleet._migration_offer(self, now)
 
     def hint_prefetch(self, model_id: str, records: Sequence[TensorRecord],
                       now: float):
@@ -227,11 +244,14 @@ class FleetGateway:
                  hw: Optional[Hardware] = None, prefetch: bool = True,
                  prewarm: bool = True, prewarm_min_benefit: float = 0.0,
                  policy: str = "eq3+queue", prompt_len: int = 16,
-                 gen_tokens: int = 4, num_pages: int = 64):
+                 gen_tokens: int = 4, num_pages: int = 64,
+                 migrate: bool = False, migrate_replay_tokens: int = 4):
         assert len(engines) >= 1
         self.nodes = [EngineNode(e, prefetch=prefetch) for e in engines]
         ids = [n.device_id for n in self.nodes]
         assert len(set(ids)) == len(ids), f"duplicate engine ids: {ids}"
+        for n in self.nodes:
+            n.fleet = self
         self.costs: PhaseCosts = engines[0].store.costs
         self.hw = hw or self.costs.hw
         self.lifecycle = LifecycleManager(make_keep_alive(keep_alive))
@@ -258,7 +278,15 @@ class FleetGateway:
         self.engine_crashes = 0
         self.engine_recoveries = 0
         self.requests_redriven = 0  # arrivals a live crash re-routed
+        self.requests_interrupted = 0  # in-flight work a crash cut short
         self._arrivals = 0  # total requests offered (drop accounting)
+        # live KV migration (DESIGN.md §16): decode handoffs between nodes
+        self.migrate_enabled = migrate
+        self.migrate_replay_tokens = migrate_replay_tokens
+        self.migrations = 0
+        # handoff log: (time, model, src, dst, stall_s, moved_done)
+        self.migrate_log: list[tuple[float, str, str, str, float,
+                                     float]] = []
         self._seq = itertools.count()
         self._req_seq = itertools.count()  # prefill batch seeds (real plane)
 
@@ -334,6 +362,76 @@ class FleetGateway:
             else:
                 self.lifecycle.on_expire(victim, now)
                 self._arm_prewarm(victim, now)
+
+    # ------------------------------------------------- live KV migration §16
+    def _migration_meta(self, req: Request) -> Optional[dict]:
+        """KV/weight bytes of this request's decode, for handoff pricing.
+        The real plane cannot know them ahead of serving (None: its
+        inflight entries still count toward crash interruption but never
+        price an offer); the modeled plane derives them from the SimModel."""
+        return None
+
+    def _blocking_entry(self, node: EngineNode) -> Optional[dict]:
+        """The in-flight request whose completion IS the node's busy
+        horizon — the decode an arrival here would actually queue behind."""
+        for e in reversed(node.inflight):
+            if e["t_end"] == node.busy_until:
+                return e
+        return None
+
+    def _migration_offer(self, node: EngineNode,
+                         now: float) -> Optional[float]:
+        """Price a decode handoff off `node` (DESIGN.md §16): offered only
+        when the full migration (snapshot d2h + host-path ship + restore
+        h2d + <=K-token replay) beats waiting out the blocking decode AND a
+        live peer exists to absorb it.  Returns the source-side snapshot
+        stall — what an arrival actually queues behind — or None."""
+        if not self.migrate_enabled or node.failed:
+            return None
+        rem = node.busy_until - now
+        if rem <= 0.0:
+            return None
+        entry = self._blocking_entry(node)
+        if entry is None or entry["kv_bytes"] <= 0.0:
+            return None
+        full = self.costs.migrate_time(
+            entry["kv_bytes"], entry["model_bytes"],
+            replay_tokens=self.migrate_replay_tokens)
+        if full >= rem:
+            return None  # the decode finishes before the handoff would
+        if not any(n is not node and not n.failed for n in self.nodes):
+            return None  # nowhere to hand off
+        return self.costs.migrate_stall(entry["kv_bytes"])
+
+    def _do_migrate(self, node: EngineNode, now: float):
+        """Execute the handoff the router priced: the blocking decode
+        snapshots (the source stalls only for the d2h), ships through the
+        host path, and finishes on the least-loaded live peer — whose busy
+        horizon absorbs the transfer, replay, and remaining decode."""
+        entry = self._blocking_entry(node)
+        if entry is None:
+            return
+        rem = node.busy_until - now
+        kv = entry["kv_bytes"]
+        stall = self.costs.migrate_stall(kv)
+        full = self.costs.migrate_time(
+            kv, entry["model_bytes"],
+            replay_tokens=self.migrate_replay_tokens)
+        target = min((n for n in self.nodes
+                      if n is not node and not n.failed),
+                     key=lambda n: (n.busy_until, n.device_id))
+        node.inflight.remove(entry)
+        node.busy_until = max(
+            now + stall, max((e["t_end"] for e in node.inflight),
+                             default=0.0))
+        moved_done = max(target.busy_until, now + full) \
+            + max(0.0, rem - stall)
+        target.busy_until = max(target.busy_until, moved_done)
+        target.inflight.append({**entry, "t_end": moved_done})
+        self.migrations += 1
+        self.migrate_log.append((round(now, 6), entry["model"],
+                                 node.device_id, target.device_id,
+                                 round(stall, 6), round(moved_done, 6)))
 
     # ------------------------------------------------------------ lifecycle
     def _expire_all(self, now: float):
@@ -457,7 +555,16 @@ class FleetGateway:
             node.warm.clear()
             node.prewarmed.clear()
             node.failed = True
-            node.busy_until = now  # queued virtual work died with the node
+            # queued virtual work died with the node.  The drop ledger
+            # (`_arrivals - records`) is untouched — every interrupted
+            # request already produced its record on the virtual clock —
+            # but the crash must COUNT what it cut short, not silently
+            # zero the horizon (fault-before-arrival tie-break means an
+            # arrival sharing the crash timestamp never lands here).
+            self.requests_interrupted += sum(
+                1 for e in node.inflight if e["t_end"] > now)
+            node.inflight.clear()
+            node.busy_until = now
             if injector is not None:
                 injector.record("engine.crash", key=engine_id)
             node.engine.crash()  # cold tiers at the CURRENT capacity budget
@@ -536,7 +643,12 @@ class FleetGateway:
             # but under eq3+queue a saturated warm engine loses to an idle
             # cold one: exactly the trap Algorithm 2's queueing term exists
             # for, and the sim scores every arrival the same way.
-            _, node = self._route(model, now, hint=self.prefetch)
+            entry, node = self._route(model, now, hint=self.prefetch)
+            if entry.migrate and self.migrate_enabled:
+                # the router chose migrate-over-queue: hand the blocking
+                # decode off BEFORE admission, so this arrival queues only
+                # behind the source-side snapshot stall it was priced
+                self._do_migrate(node, now)
             cold = model not in node.warm
             if cold:
                 self._make_room(node, model, now)
@@ -552,6 +664,10 @@ class FleetGateway:
             rec, service_s = self._serve(node, req, now, cold, queue_s)
             t_end = now + queue_s + service_s
             node.busy_until = t_end
+            node.inflight = [e for e in node.inflight if e["t_end"] > now]
+            node.inflight.append({"t_end": t_end, "model": model,
+                                  "kv_bytes": 0.0, "model_bytes": 0.0,
+                                  **(self._migration_meta(req) or {})})
             self.decisions.append((round(now, 6), model, node.device_id,
                                    cold, round(queue_s, 6)))
             self.sink.add(rec)
@@ -620,6 +736,8 @@ class FleetGateway:
         out["engine_crashes"] = self.engine_crashes
         out["engine_recoveries"] = self.engine_recoveries
         out["requests_redriven"] = self.requests_redriven
+        out["requests_interrupted"] = self.requests_interrupted
+        out["migrations"] = self.migrations
         fc: dict[str, float] = {}
         for n in self.nodes:  # per-engine injectors: summing never doubles
             fs = getattr(n.engine, "fault_summary", None)
@@ -652,7 +770,8 @@ class ModeledFleetGateway(FleetGateway):
                  keep_alive="adaptive", prefetch: bool = True,
                  prewarm: bool = True, prewarm_min_benefit: float = 0.0,
                  policy: str = "eq3+queue",
-                 faults: Optional[Sequence[FaultInjector]] = None):
+                 faults: Optional[Sequence[FaultInjector]] = None,
+                 migrate: bool = False, migrate_replay_tokens: int = 4):
         hw = hw or paper_l40()
         costs = PhaseCosts(hw)
         rng = random.Random(seed + 17)  # the sim's record-size convention
@@ -678,8 +797,19 @@ class ModeledFleetGateway(FleetGateway):
         super().__init__(engines, keep_alive=keep_alive, hw=hw,
                          prefetch=prefetch, prewarm=prewarm,
                          prewarm_min_benefit=prewarm_min_benefit,
-                         policy=policy)
+                         policy=policy, migrate=migrate,
+                         migrate_replay_tokens=migrate_replay_tokens)
         self._sim = {m.model_id: m for m in models}
+
+    def _migration_meta(self, req: Request) -> dict:
+        """Modeled plane knows the decode's KV footprint up front: the
+        sequence's token count at the SimModel's per-token KV rate, plus
+        the weights the target must hold for replay."""
+        m = self._sim[req.model_id]
+        tokens = req.prompt_tokens + req.output_tokens
+        return {"kv_bytes": float(m.kv_bytes_per_token * tokens
+                                  * max(1, req.batch_size)),
+                "model_bytes": float(m.bytes)}
 
     def _serve(self, node: EngineNode, req: Request, now: float, cold: bool,
                queue_s: float) -> tuple[TTFTRecord, float]:

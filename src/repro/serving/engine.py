@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import PhaseCosts, paper_l40
-from repro.core.elastic_kv import ElasticKV
+from repro.core.elastic_kv import ElasticKV, KVSnapshot
 from repro.core.faults import FaultInjector
 from repro.core.reuse_store import LoadReport, ReuseStore
 from repro.kernels import ops as kops
@@ -148,6 +148,7 @@ class FaultStats:
     join_failovers: int = 0  # loads that joined a dead/failed hint, went inline
     load_errors: int = 0  # Engine.load unwinds (pin hygiene path)
     shutdown_join_timeouts: int = 0  # close() left a hung worker behind
+    prefetch_pins_dropped: int = 0  # in-flight hints' pins released at crash()
     tensors_reinit: int = 0  # quarantined tensors re-materialized
     store_retries: int = 0  # host-tier read retries folded in at crash()
     store_quarantines: int = 0  # host-tier quarantines folded in at crash()
@@ -615,6 +616,30 @@ class SharedKVSlab:
         self.v_pages = jnp.concatenate([self.v_pages, zeros], axis=1)
 
 
+@dataclass
+class KVMigration:
+    """One decode's portable handoff state (DESIGN.md §16).
+
+    Produced by `Engine.migrate_out`: the request's live KV pages snapshotted
+    device→host into two stacked blobs (logical-block order, so the target
+    never sees the source's pool layout), plus the metadata-only
+    `KVSnapshot` carrying lengths and geometry.  `replay` is the snapshot
+    window: the tokens the SOURCE fed to `decode` after the snapshot was
+    taken — `Engine.migrate_in` re-feeds them on the target, which must
+    reproduce the source's logits bit-for-bit (same crc32-seeded weights,
+    same jitted step, attention reads only table-referenced pages).
+    """
+
+    model_id: str
+    snap: KVSnapshot  # metadata-only (pages are None placeholders)
+    k_blob: np.ndarray  # (L, nblk, T, K, hd) host-tier copy of the K pages
+    v_blob: np.ndarray
+    replay: list = field(default_factory=list)  # window tokens, in feed order
+
+    def nbytes(self) -> int:
+        return self.k_blob.nbytes + self.v_blob.nbytes
+
+
 class Engine:
     """One worker's inference engine over a Unified Memory Pool."""
 
@@ -668,6 +693,12 @@ class Engine:
         self._slabs: dict[tuple, SharedKVSlab] = {}  # KV geometry -> slab
         self._fused: dict[tuple, tuple] = {}  # group -> cached fused state
         self._instances_of: dict[str, int] = {}  # model_id -> live instances
+        self._live_instances: dict[str, list["Instance"]] = {}  # migration registry
+        # live-KV migration ledger (DESIGN.md §16): lifetime counters, like
+        # `crashes` — they survive `crash()` (the events already happened)
+        self.migrated_out = 0
+        self.migrated_in = 0
+        self.migration_bytes = 0  # KV payload bytes shipped out of this engine
         self.last_load: Optional[DataLoadStats] = None
 
     # ------------------------------------------------------------- registry
@@ -930,6 +961,20 @@ class Engine:
         self.crashes += 1
         self.fault_stats.store_retries += self.host_store.read_retries
         self.fault_stats.store_quarantines += self.host_store.quarantines
+        # in-flight prefetch hints own host-tier pins that nothing will ever
+        # release once their prefetcher dies: `cancel_prefetch`'s unpin path
+        # goes through the prefetcher being torn down, and a load can no
+        # longer join the job to adopt the pin.  Drop them explicitly and
+        # count them — on an engine whose host tier outlives the crash
+        # semantics (or is inspected post-mortem), a leaked pin exempts the
+        # model's bytes from every future capacity squeeze.
+        with self._store_lock:
+            orphaned = [mid for mid, job in self.prefetcher._jobs.items()
+                        if job.owns_pin and mid in self._host_pins
+                        and mid not in self.store.active_models]
+            for mid in orphaned:
+                self._unpin_model(mid)
+            self.fault_stats.prefetch_pins_dropped += len(orphaned)
         self.prefetcher.close()
         self.store = ReuseStore(self.store.pool.capacity, self.store.costs)
         self.host_store = HostTensorStore(
@@ -941,6 +986,7 @@ class Engine:
         self._slabs = {}
         self._fused = {}
         self._instances_of = {}
+        self._live_instances = {}
         self.last_load = None
         self.prefetcher = Prefetcher(self)
         log.warning("engine %s crashed: tiers cold, persistent store intact",
@@ -969,6 +1015,7 @@ class Engine:
             "join_failovers": fs.join_failovers,
             "load_errors": fs.load_errors,
             "shutdown_join_timeouts": fs.shutdown_join_timeouts,
+            "prefetch_pins_dropped": fs.prefetch_pins_dropped,
             "tensors_reinit": fs.tensors_reinit,
             "crashes": self.crashes,
         }
@@ -1119,9 +1166,100 @@ class Engine:
                        kv_bytes_per_token=max(reg.cfg.kv_bytes_per_token(), 1),
                        blocks_per_region=16)
         self._instances_of[model_id] = self._instances_of.get(model_id, 0) + 1
-        return Instance(self, reg, kv, num_pages=num_pages,
+        inst = Instance(self, reg, kv, num_pages=num_pages,
                         max_blocks_per_seq=max_blocks_per_seq,
                         attn_mode=attn_mode)
+        self._live_instances.setdefault(model_id, []).append(inst)
+        return inst
+
+    # ----------------------------------------------- live KV migration (§16)
+    def migrate_out(self, model_id: str, req: str = "seq0") -> KVMigration:
+        """Snapshot one live decode for handoff to another engine.
+
+        Non-destructive: the request keeps decoding here during the snapshot
+        window — the pages are copied device→host (the d2h half of
+        `PhaseCosts.migrate_time`), so later source steps cannot mutate the
+        blob.  The caller records every token it feeds the source AFTER this
+        call into ``mig.replay`` and finishes the source instance once the
+        handoff commits.  Whole pages are copied (including positions past
+        ``seq_len``): attention reads only table-referenced pages and masks
+        by length, so the replica's numerics match the source exactly.
+        """
+        inst = next((i for i in self._live_instances.get(model_id, ())
+                     if i.paged and req in i.kv.block_tables), None)
+        if inst is None:
+            raise ValueError(
+                f"no live paged instance of {model_id!r} holds {req!r}")
+        slab = inst.slab
+        # sync the KV length mirror from the instance's authoritative host
+        # mirror: the sync-free decode loop only calls `ensure` on block
+        # boundaries, so `kv.seq_lens` can lag `_host_lens` mid-block — a
+        # snapshot taken from the stale mirror would replay over the tail
+        # tokens instead of after them
+        b = int(req[3:]) if req.startswith("seq") and req[3:].isdigit() else 0
+        inst.kv.ensure({req: int(inst._host_lens[b])})
+
+        def reader(off: int, lbn: int):
+            page = slab.page_map[off]
+            return (np.asarray(slab.k_pages[:, page]),
+                    np.asarray(slab.v_pages[:, page]))
+
+        snap = inst.kv.snapshot(req, reader=reader)
+        k_blob = np.stack([k for k, _ in snap.pages], axis=1)
+        v_blob = np.stack([v for _, v in snap.pages], axis=1)
+        import dataclasses as _dc
+        meta = _dc.replace(snap, pages=(None,) * snap.num_blocks)
+        self.migrated_out += 1
+        self.migration_bytes += k_blob.nbytes + v_blob.nbytes
+        return KVMigration(model_id=model_id, snap=meta,
+                           k_blob=k_blob, v_blob=v_blob)
+
+    def migrate_in(self, mig: KVMigration, *, max_blocks_per_seq: int = 64,
+                   num_pages: int = 128, attn_mode: str = "kernel",
+                   ) -> tuple["Instance", list[jnp.ndarray]]:
+        """Restore a migrated decode on THIS engine and replay its window.
+
+        The model's weights load through the usual tiered path (warm target:
+        device hit), the KV blobs ride the failure-hardened `ChunkedTransfer`
+        pipeline (chunk retries, wall deadline — DESIGN.md §15), ElasticKV
+        allocates a fresh block table via `restore`, and the pages land in
+        the shared slab in ONE scatter.  The ≤K `mig.replay` window tokens
+        are then re-fed; returns ``(instance, replayed_logits)`` — the
+        logits must be bit-identical to the source's (tests + fig18 gate
+        ``replay_mismatches == 0``).
+        """
+        self.load(mig.model_id)
+        inst = self.start_instance(mig.model_id, num_pages=num_pages,
+                                   max_blocks_per_seq=max_blocks_per_seq,
+                                   attn_mode=attn_mode)
+        req = mig.snap.req
+        stats = DataLoadStats()
+        moved = self._xfer.transfer(
+            [(f"kvmig:{mig.model_id}:{req}:k", mig.k_blob),
+             (f"kvmig:{mig.model_id}:{req}:v", mig.v_blob)], stats)
+        table = inst.kv.restore(req, mig.snap)
+        pages = inst._pages(table)  # may grow the slab: map pages FIRST
+        if len(pages) > inst.max_blocks:
+            raise ValueError(f"snapshot needs {len(pages)} blocks but the "
+                             f"instance caps at {inst.max_blocks}")
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        inst.slab.k_pages = inst.slab.k_pages.at[:, idx].set(
+            moved[f"kvmig:{mig.model_id}:{req}:k"])
+        inst.slab.v_pages = inst.slab.v_pages.at[:, idx].set(
+            moved[f"kvmig:{mig.model_id}:{req}:v"])
+        # adopt the decode state (B=1 handoff): host mirrors authoritative
+        inst._host_lens = np.asarray([mig.snap.seq_len], np.int64)
+        inst._lengths = jnp.asarray(inst._host_lens, jnp.int32)
+        inst._tables_np = np.zeros((1, inst.max_blocks), np.int32)
+        inst._tables_np[0, : len(pages)] = pages
+        inst._nblk = np.asarray([len(pages)], np.int64)
+        inst._tables = jnp.asarray(inst._tables_np)
+        inst._tables_stale = False
+        inst._step = 1
+        self.migrated_in += 1
+        replayed = [inst.decode(jnp.asarray([int(t)]))
+                    for t in mig.replay]
+        return inst, replayed
 
     def decode_many(self, steps: Sequence[tuple["Instance", jnp.ndarray]]
                     ) -> list[jnp.ndarray]:
@@ -1407,6 +1545,11 @@ class Instance:
         self.kv.finish_instance()
         for key in [k for k in self.engine._fused if self._uid in k]:
             del self.engine._fused[key]
+        live = self.engine._live_instances.get(self.reg.model_id)
+        if live is not None and self in live:
+            live.remove(self)
+            if not live:
+                del self.engine._live_instances[self.reg.model_id]
         self.engine.finish_instance(self.reg.model_id)
 
 

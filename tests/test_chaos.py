@@ -290,6 +290,70 @@ class TestPrefetchWorkerDeath:
         assert not job2.failed
 
 
+class TestCrashPinHygiene:
+    """Regression: `Engine.crash()` with an in-flight (or completed-but-
+    never-joined) `PrefetchJob` used to discard `_host_pins` without
+    unpinning — the hint's pins survived on the retired host tier, exempting
+    its bytes from every capacity squeeze, and the leak was invisible in
+    `fault_summary()`."""
+
+    def test_crash_with_armed_hint_drops_and_counts_pins(self):
+        from repro.configs import all_configs
+        from repro.serving.engine import Engine
+
+        cfg = dataclasses.replace(all_configs()["llama3.2-1b"].smoke(),
+                                  num_layers=2, vocab_size=512)
+        eng = Engine(256 << 20, faults=FaultInjector())  # unbounded host tier
+        eng.register("m", cfg)
+        eng.load("m")
+        eng.release("m")
+        job = eng.prefetch("m")  # hint re-pins the host-resident tensors
+        assert job.owns_pin
+        old = eng.host_store
+        assert old.pinned_nbytes() > 0
+        eng.crash()
+        fs = eng.fault_summary()
+        assert fs["prefetch_pins_dropped"] == 1
+        # the retired tier's pins are gone: a pressure squeeze actually works
+        assert old.pinned_nbytes() == 0
+        assert old.set_capacity_bytes(0) > 0
+        assert old.nbytes() == 0
+        # the replacement tier starts clean
+        assert eng.host_store.pinned_nbytes() == 0 and not eng._host_pins
+        # and a fresh hint+load cycle works post-crash, no residue
+        eng.load("m")
+        eng.release("m")
+        assert eng.fault_summary()["prefetch_pins_dropped"] == 1
+        eng.close()
+
+    def test_crash_with_inflight_promotion_job(self, chaos_engine):
+        """Cap-0 variant: the job has real store->host work pending when the
+        crash lands (scheduling paused so it is deterministically mid-
+        flight).  The pin drop is counted exactly once and a joining load
+        after recovery neither hangs nor double-counts."""
+        eng = chaos_engine
+        eng.load("m")
+        eng.drop_device_copies("m")  # cap-0: everything spills to the store
+        eng.prefetcher.pause()
+        job = eng.prefetch("m")
+        assert job.owns_pin and not job.done.is_set()
+        eng.crash()
+        fs = eng.fault_summary()
+        assert fs["prefetch_pins_dropped"] == 1
+        assert job.done.is_set()  # close() fired the event: no joiner hangs
+        assert eng.host_store.pinned_nbytes() == 0 and not eng._host_pins
+        rep = eng.load("m")  # clean reload through the surviving store
+        assert rep.bytes_total > 0
+        assert eng.fault_summary()["prefetch_pins_dropped"] == 1
+
+    def test_clean_crash_counts_zero(self, chaos_engine):
+        eng = chaos_engine
+        eng.load("m")
+        eng.release("m")
+        eng.crash()  # no hint in flight: nothing to drop
+        assert eng.fault_summary()["prefetch_pins_dropped"] == 0
+
+
 # ------------------------------------------------- modeled fleet failover
 
 

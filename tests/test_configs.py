@@ -23,6 +23,7 @@ SLOW_TESTS = {
     "tests/test_fastpath.py",      # engine load/decode equivalence (jit)
     "tests/test_kernels.py",       # Pallas kernel numerics
     "tests/test_launchers.py",     # launch subprocesses
+    "tests/test_migration.py",     # cross-engine decode handoff (jit)
     "tests/test_models.py",        # per-arch forward numerics
     "tests/test_roofline.py",      # analysis over real configs
     "tests/test_system.py",        # end-to-end serve scenarios

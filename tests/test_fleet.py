@@ -51,9 +51,25 @@ def make_fleet(*, prewarm=True, seed=7, keep_alive=None, n_engines=2, **kw):
                                prewarm_min_benefit=1.0, **kw)
 
 
-def req(time: float, model_id: str) -> Request:
+def req(time: float, model_id: str, out: int = 16) -> Request:
     return Request(time=time, model_id=model_id, dataset="gsm8k",
-                   prompt_tokens=64, output_tokens=16, batch_size=1)
+                   prompt_tokens=64, output_tokens=out, batch_size=1)
+
+
+def colocation_trace():
+    """Long decodes pin both engines while short requests keep arriving —
+    the fig18 shape: without migration every short queues behind (or
+    cold-loads around) a multi-minute decode."""
+    L, A, B = MODELS[0].model_id, MODELS[1].model_id, MODELS[2].model_id
+    trace = []
+    for rnd in range(4):
+        base = rnd * 300.0
+        trace.append(req(base, L, out=4096))
+        trace.append(req(base + 5.0, B if rnd % 2 else A, out=4096))
+        for i in range(6):
+            trace.append(req(base + 10.0 + 4.0 * i, A if i % 2 else B))
+    trace.sort(key=lambda r: r.time)
+    return trace
 
 
 # ------------------------------------------------------ percentile pinning
@@ -327,6 +343,89 @@ class TestPredictivePrewarm:
         assert s["pressure_evictions"] > 0
 
 
+# --------------------------------------------- live KV migration (§16)
+class TestFleetMigration:
+    """The modeled-plane migrate decision: a long decode blocking an
+    engine hands off to the peer, so arrivals queue only behind the
+    source-side snapshot stall — strictly better p95 than waiting out or
+    cold-loading around the decode, with zero drops and replay-exact
+    handoff logs."""
+
+    def _run(self, migrate):
+        fg = make_fleet(prewarm=False, keep_alive="adaptive",
+                        migrate=migrate)
+        fg.run_trace(colocation_trace())
+        return fg
+
+    def test_migrate_strictly_beats_evict_and_reload(self):
+        base, mig = self._run(False), self._run(True)
+        sb, sm = base.summary(), mig.summary()
+        assert sb["migrations"] == 0 and sm["migrations"] > 0
+        assert sm["dropped_requests"] == 0 == sb["dropped_requests"]
+        assert sm["ttft_p95"] < sb["ttft_p95"]
+
+    def test_handoff_replay_exact_golden(self):
+        a, b = self._run(True), self._run(True)
+        assert a.migrations > 0
+        assert a.migrate_log == b.migrate_log
+        assert a.decisions == b.decisions
+        assert a.summary() == b.summary()
+
+    def test_offer_requires_priceable_blocking_decode(self):
+        # an idle node, a node with no kv metadata, and a failed node all
+        # decline; a priced long decode with a live peer offers the stall
+        fg = make_fleet(prewarm=False, migrate=True)
+        n0, n1 = fg.nodes
+        assert n0.migration_offer(0.0) is None  # idle
+        mid = MODELS[1].model_id
+        n0.busy_until = 500.0
+        n0.inflight.append({"t_end": 500.0, "model": mid,
+                            "kv_bytes": 0.0, "model_bytes": 0.0})
+        assert n0.migration_offer(0.0) is None  # unpriceable (real plane)
+        m = fg._sim[mid]
+        kv = float(m.kv_bytes_per_token * 1024)
+        n0.inflight[-1].update(kv_bytes=kv, model_bytes=float(m.bytes))
+        offer = n0.migration_offer(0.0)
+        assert offer == pytest.approx(fg.costs.migrate_stall(kv))
+        assert offer < 500.0  # beats waiting out the decode
+        n1.failed = True  # nowhere to hand off
+        assert n0.migration_offer(0.0) is None
+
+    def test_short_remainder_is_not_worth_migrating(self):
+        fg = make_fleet(prewarm=False, migrate=True)
+        n0 = fg.nodes[0]
+        mid = MODELS[1].model_id
+        m = fg._sim[mid]
+        kv = float(m.kv_bytes_per_token * 1024)
+        full = fg.costs.migrate_time(kv, float(m.bytes), replay_tokens=4)
+        n0.busy_until = full * 0.5  # finishes before the handoff would
+        n0.inflight.append({"t_end": n0.busy_until, "model": mid,
+                            "kv_bytes": kv, "model_bytes": float(m.bytes)})
+        assert n0.migration_offer(0.0) is None
+
+    def test_migrated_work_counts_interrupted_on_target_crash(self):
+        fg = make_fleet(prewarm=False, migrate=True)
+        mid = MODELS[1].model_id
+        m = fg._sim[mid]
+        kv = float(m.kv_bytes_per_token * 4096)
+        n0, n1 = fg.nodes
+        n0.busy_until = 400.0
+        n0.inflight.append({"t_end": 400.0, "model": mid,
+                            "kv_bytes": kv, "model_bytes": float(m.bytes)})
+        fg._do_migrate(n0, 0.0)
+        assert fg.migrations == 1
+        # the source stalls only for the d2h snapshot
+        assert n0.busy_until == pytest.approx(fg.costs.migrate_stall(kv))
+        assert n0.inflight == []
+        # the moved decode IS the target's new horizon...
+        assert len(n1.inflight) == 1
+        assert n1.inflight[0]["t_end"] == n1.busy_until
+        # ...so a target crash counts it as interrupted work
+        fg._apply_fault(10.0, "crash", "engine1")
+        assert fg.requests_interrupted == 1
+        assert n1.inflight == [] and n1.busy_until == 10.0
+
+
 # --------------------------------------------- failover routing (§15)
 class TestFleetFailover:
     """`inject_failure` goldens: a crashed engine's arrivals re-route
@@ -394,3 +493,46 @@ class TestFleetFailover:
         assert s["dropped_requests"] == 0 and s["engine_crashes"] == 0
         assert s["engine_recoveries"] == 0 and s["requests_redriven"] == 0
         assert s["fault_events"] == 0
+        assert s["requests_interrupted"] == 0 and s["migrations"] == 0
+
+
+# ------------------------------------- crash vs. in-flight work (§15/§16)
+class TestCrashInterruption:
+    """A crash zeroes the node's busy horizon (fleet.py `_apply_fault`) —
+    the in-flight requests behind that horizon must be COUNTED, not
+    silently vaporized, and an arrival sharing the crash's timestamp must
+    see the fault first (fault-before-arrival tie-break), keeping the
+    drop ledger (`arrivals - records`) at identity."""
+
+    def test_crash_counts_inflight_interrupted(self):
+        fg = make_fleet(prewarm=False)
+        fg.inject_failure(30.0, "engine0")  # mid-decode of the first req
+        fg.run_trace([req(0.0, MODELS[1].model_id, out=4096),
+                      req(40.0, MODELS[2].model_id)])
+        s = fg.summary()
+        assert fg.decisions[0][2] == "engine0"
+        assert s["requests_interrupted"] == 1
+        # ledger identity: the interrupted request was already recorded on
+        # the virtual clock — interruption is a NEW counter, not a drop
+        assert s["dropped_requests"] == 0 and s["n"] == 2
+
+    def test_fault_before_arrival_at_equal_timestamp(self):
+        """The golden tie-break: crash and arrival share t=50 — the fault
+        lands first, so the arrival routes to the survivor and is counted
+        as redriven; nothing was in flight, so nothing is interrupted."""
+        def run():
+            fg = make_fleet(prewarm=False)
+            fg.inject_failure(50.0, "engine0")
+            fg.run_trace([req(0.0, MODELS[1].model_id),
+                          req(50.0, MODELS[1].model_id)])
+            return fg
+        fg = run()
+        s = fg.summary()
+        assert fg.decisions[0][2] == "engine0"  # warm home pre-crash
+        assert fg.decisions[1][2] == "engine1"  # fault-before-arrival
+        assert s["requests_redriven"] == 1
+        assert s["requests_interrupted"] == 0
+        assert s["dropped_requests"] == 0 and s["n"] == 2
+        fg2 = run()
+        assert fg.decisions == fg2.decisions
+        assert s == fg2.summary()

@@ -24,7 +24,8 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.models.tensors import HostTensorStore, PersistentStore
+from repro.models.tensors import (HostTensorStore, PersistentStore,
+                                  TensorRecord)
 
 FPS = [f"t{i}" for i in range(10)]
 
@@ -208,6 +209,95 @@ def test_pinned_bytes_may_exceed_cap_until_unpin():
     store.unpin("p0")  # last unpin re-enforces the cap immediately
     assert store.nbytes() == 80 and "p0" in store.spill
     assert "p1" in store and "p2" in store
+
+
+# -------------------------------------- tenant-pressure capacity round trip
+@given(st.lists(st.tuples(st.sampled_from([None, 40, 80, 120, 200]),
+                          st.integers(min_value=0, max_value=4)),
+                min_size=1, max_size=10))
+@settings(max_examples=60, deadline=None)
+def test_capacity_round_trip_both_planes(script):
+    """Satellite fix: `set_capacity_bytes(None)` after a finite pressure
+    squeeze must restore unbounded semantics in BOTH the data-plane
+    `HostTensorStore` and the sim-plane `SimHostCache`, without corrupting
+    `pressure_evictions` (monotone, counts ONLY squeeze-forced spills — not
+    organic admission churn) or `nbytes()` (counter == scan, and the two
+    planes agree byte-for-byte under an identical schedule)."""
+    from repro.core.hostcache import SimHostCache
+
+    store = HostTensorStore(None)
+    sim = SimHostCache(None)
+    size, n = 20, 0
+    for cap, n_puts in script:
+        ev0, sev0 = store.evictions, sim.evictions
+        p0, sp0 = store.pressure_evictions, sim.pressure_evictions
+        for _ in range(n_puts):
+            fp = f"c{n}"
+            n += 1
+            store.put(fp, np.full(size, n % 251, np.uint8))
+            sim.plan_fetch([TensorRecord(name=fp, shape=(size,),
+                                         dtype="uint8", fingerprint=fp,
+                                         nbytes=size)])
+        # organic admission churn never counts as pressure
+        assert store.pressure_evictions == p0
+        assert sim.pressure_evictions == sp0
+        ev0, sev0 = store.evictions, sim.evictions
+        spilled = store.set_capacity_bytes(cap)
+        sim_spilled = sim.set_capacity_bytes(cap)
+        # identical schedule, identical LRU -> the planes spill identically
+        assert spilled == sim_spilled
+        assert store.nbytes() == sim.nbytes()
+        # the return value is exactly the forced spill, which is exactly
+        # what the pressure counter advanced by
+        assert spilled == (store.evictions - ev0) * size
+        assert store.pressure_evictions - p0 == store.evictions - ev0
+        assert sim.pressure_evictions - sp0 == sim.evictions - sev0
+        if cap is None:
+            # unbounded restored: nothing spilled, and the cap is truly gone
+            assert spilled == 0 and store.capacity_bytes is None
+            assert sim.capacity_bytes is None
+        else:
+            assert store.nbytes() <= cap
+        # counter == scan after every transition
+        assert store.nbytes() == sum(b.nbytes for b in store._bufs.values())
+        # one-tier resolvability survives every squeeze
+        for i in range(n):
+            assert store.resolvable(f"c{i}")
+
+    # final round trip: lift the cap and promote EVERYTHING back — the
+    # unbounded store re-admits every spilled tensor, contents intact, with
+    # no further evictions and untouched pressure counters
+    p_final, ev_final = store.pressure_evictions, store.evictions
+    store.set_capacity_bytes(None)
+    for i in range(n):
+        got = store.fetch(f"c{i}")
+        assert np.array_equal(got, np.full(size, (i + 1) % 251, np.uint8))
+    assert store.nbytes() == n * size
+    assert store.evictions == ev_final  # unbounded: promotion evicts nothing
+    assert store.pressure_evictions == p_final
+    assert store.nbytes() == sum(b.nbytes for b in store._bufs.values())
+
+
+def test_pressure_counter_exempts_pinned_bytes():
+    """A squeeze against pinned bytes spills nothing and counts nothing —
+    the pin exemption applies to the pressure path exactly as to LRU."""
+    store = HostTensorStore(None)
+    store.pin("p")
+    store.put("p", np.ones(50, np.uint8))
+    store.put("u", np.ones(30, np.uint8))
+    assert store.set_capacity_bytes(40) == 30  # only the unpinned tensor goes
+    assert store.pressure_evictions == 1
+    assert store.nbytes() == 50  # pinned bytes sit above the cap, by design
+    assert store.set_capacity_bytes(10) == 0  # nothing unpinned left
+    assert store.pressure_evictions == 1
+    store.unpin("p")  # the deferred squeeze lands on the last unpin
+    assert store.nbytes() == 0
+    # the unpin-triggered spill is organic (cap enforcement), not a new
+    # pressure event: the counter holds
+    assert store.pressure_evictions == 1
+    assert store.set_capacity_bytes(None) == 0
+    store.put("w", np.ones(25, np.uint8))  # unbounded semantics restored
+    assert store.nbytes() == 25 and store.evictions == 2
 
 
 # ------------------------------------------------- keep-alive aging (§12)

@@ -1,0 +1,160 @@
+"""Live KV migration (DESIGN.md §16): decode handoff between engines.
+
+The contract under test is the paper-level one the cost plane prices: a
+decode snapshotted on one engine, shipped through the host tier, restored
+on another engine, and replayed through its ≤K-token snapshot window must
+be BIT-IDENTICAL to the unmigrated control — same tokens, same logits —
+because both engines derive the model's weights from the same crc32-seeded
+init and run the same jitted decode step over table-referenced pages.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.core.faults import FaultInjector, FaultSpec
+from repro.serving.engine import Engine
+
+
+def _smoke_cfg():
+    return dataclasses.replace(all_configs()["llama3.2-1b"].smoke(),
+                               num_layers=2, vocab_size=512)
+
+
+def _prompt(B=1, S=8):
+    rng = np.random.default_rng(11)
+    return {"tokens": jnp.asarray(rng.integers(1, 500, (B, S)), jnp.int32)}
+
+
+def _engines(n=2, faults=None):
+    engs = []
+    for i in range(n):
+        e = Engine(256 << 20, engine_id=f"eng{i}", faults=faults)
+        e.register("m", _smoke_cfg())
+        engs.append(e)
+    return engs
+
+
+def _start_decode(eng, steps=3):
+    """Load, prefill, and advance `steps` decode steps; returns
+    (instance, next_token, per-step argmax trail)."""
+    eng.load("m")
+    inst = eng.start_instance("m", attn_mode="ref")
+    logits = inst.prefill(_prompt())
+    tok = jnp.argmax(logits, axis=-1)
+    trail = [int(tok[0])]
+    for _ in range(steps):
+        logits = inst.decode(tok)
+        tok = jnp.argmax(logits, axis=-1)
+        trail.append(int(tok[0]))
+    return inst, tok, trail
+
+
+class TestDecodeHandoff:
+    def test_migrated_decode_is_bit_identical(self):
+        src, dst = _engines()
+        inst, tok, _ = _start_decode(src)
+
+        mig = src.migrate_out("m", "seq0")
+        assert src.migrated_out == 1
+        assert mig.nbytes() == mig.k_blob.nbytes + mig.v_blob.nbytes > 0
+        # snapshot window: the source keeps decoding K tokens AFTER the
+        # snapshot; the caller records what it fed (greedy continuation)
+        K = 4
+        window_logits = []
+        for _ in range(K):
+            mig.replay.append(int(tok[0]))
+            logits = inst.decode(tok)
+            window_logits.append(np.asarray(logits).copy())
+            tok = jnp.argmax(logits, axis=-1)
+
+        inst2, replayed = dst.migrate_in(mig, attn_mode="ref")
+        assert dst.migrated_in == 1
+        assert len(replayed) == K
+        for got, want in zip(replayed, window_logits):
+            assert np.array_equal(np.asarray(got), want)  # bit-identical
+
+        # beyond the window the replica and the control stay in lockstep
+        tok2 = jnp.argmax(replayed[-1], axis=-1)
+        assert int(tok2[0]) == int(tok[0])
+        for _ in range(3):
+            l1 = inst.decode(tok)
+            l2 = inst2.decode(tok2)
+            assert np.array_equal(np.asarray(l1), np.asarray(l2))
+            tok = jnp.argmax(l1, axis=-1)
+            tok2 = jnp.argmax(l2, axis=-1)
+
+        # handoff commits: the source instance finishes, its pool drains
+        inst.finish()
+        assert src.store.pool.free_bytes() > 0
+        inst2.finish()
+        for e in (src, dst):
+            e.close()
+
+    def test_snapshot_window_is_isolated_from_source_progress(self):
+        """The blob is a device→host COPY: source steps after migrate_out
+        (which donate and overwrite the slab buffers) must not mutate it."""
+        src, dst = _engines()
+        inst, tok, _ = _start_decode(src)
+        mig = src.migrate_out("m", "seq0")
+        k0, v0 = mig.k_blob.copy(), mig.v_blob.copy()
+        for _ in range(6):  # crosses a block boundary (block_tokens=16)
+            mig.replay.append(int(tok[0]))
+            tok = jnp.argmax(inst.decode(tok), axis=-1)
+        assert np.array_equal(mig.k_blob, k0)
+        assert np.array_equal(mig.v_blob, v0)
+        inst2, replayed = dst.migrate_in(mig, attn_mode="ref")
+        assert len(replayed) == 6
+        inst.finish()
+        inst2.finish()
+        for e in (src, dst):
+            e.close()
+
+    def test_migrate_in_rides_hardened_transfer(self):
+        """The KV blobs go through the same ChunkedTransfer retry path model
+        loads use: an injected h2d chunk error is retried and COUNTED, and
+        the replay still reproduces the source bit-for-bit."""
+        faults = FaultInjector()
+        src, dst = _engines(faults=faults)
+        inst, tok, _ = _start_decode(src)
+        mig = src.migrate_out("m", "seq0")
+        ref = []
+        for _ in range(2):
+            mig.replay.append(int(tok[0]))
+            logits = inst.decode(tok)
+            ref.append(np.asarray(logits).copy())
+            tok = jnp.argmax(logits, axis=-1)
+        dst.load("m")  # weights land first; the NEXT h2d chunks are the KV
+        retries0 = dst.fault_summary()["h2d_retries"]
+        faults.arm((FaultSpec("h2d.chunk", at=(0,), mode="error"),))
+        inst2, replayed = dst.migrate_in(mig, attn_mode="ref")
+        assert dst.fault_summary()["h2d_retries"] > retries0
+        for got, want in zip(replayed, ref):
+            assert np.array_equal(np.asarray(got), want)
+        inst.finish()
+        inst2.finish()
+        for e in (src, dst):
+            e.close()
+
+    def test_migrate_out_requires_live_paged_request(self):
+        (src,) = _engines(1)
+        src.load("m")
+        with pytest.raises(ValueError):
+            src.migrate_out("m", "seq0")  # no live instance holds the req
+        src.close()
+
+    def test_restore_refuses_geometry_mismatch_across_engines(self):
+        src = Engine(256 << 20, engine_id="src")
+        src.register("m", _smoke_cfg())
+        inst, tok, _ = _start_decode(src)
+        mig = src.migrate_out("m", "seq0")
+        dst = Engine(256 << 20, engine_id="dst", block_tokens=8)
+        dst.register("m", _smoke_cfg())
+        with pytest.raises(ValueError):
+            dst.migrate_in(mig, attn_mode="ref")
+        inst.finish()
+        src.close()
+        dst.close()

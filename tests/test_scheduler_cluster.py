@@ -189,3 +189,96 @@ def test_failure_without_recovery_shrinks_fleet():
     # nothing was ever scheduled onto the dead node afterwards
     late = [r for r in res if r.start > trace[10].time + 1]
     assert all(not sim.workers[1].busy_model for _ in late)
+
+
+# --------------------------------------------- live KV migration (§16)
+class OfferDevice(FakeDevice):
+    """FakeDevice + the optional queue/migration DeviceView methods."""
+
+    def __init__(self, device_id, resident, *, delay=0.0, offer=None):
+        super().__init__(device_id, resident, capacity=int(20e9))
+        self.delay = delay
+        self.offer = offer
+
+    def expected_queue_delay(self, now):
+        return self.delay
+
+    def migration_offer(self, now):
+        return self.offer
+
+
+class TestMigrationOffer:
+    def test_offer_replaces_queue_delay_and_flags_entry(self):
+        r = recs("m", [6_000_000_000])  # 6 GB: a cold load costs ~1.2 s
+        busy = OfferDevice("g0", {"m/t0"}, delay=120.0, offer=0.05)
+        idle = OfferDevice("g1", set(), delay=0.0)
+        scheds, _ = affinity_schedule([("m", r, 6_000_000_000)],
+                                     [busy, idle], paper_l40(),
+                                     policy="eq3+queue")
+        # resident bytes + a cheap handoff beat the idle cold device
+        assert scheds[0].device_id == "g0" and scheds[0].migrate
+
+    def test_worse_offer_is_ignored(self):
+        r = recs("m", [600])
+        busy = OfferDevice("g0", {"m/t0"}, delay=0.01, offer=5.0)
+        scheds, _ = affinity_schedule([("m", r, 600)], [busy], paper_l40(),
+                                     policy="eq3+queue")
+        assert scheds[0].device_id == "g0" and not scheds[0].migrate
+
+    def test_pure_eq3_never_consults_offers(self):
+        r = recs("m", [600])
+        busy = OfferDevice("g0", {"m/t0"}, delay=120.0, offer=0.05)
+        scheds, _ = affinity_schedule([("m", r, 600)], [busy], paper_l40(),
+                                     policy="eq3")
+        assert not scheds[0].migrate
+
+
+def _migration_trace():
+    from repro.core.trace import Request
+
+    models = PAPER_MODELS[4:8]
+    L, S, M = (models[1].model_id, models[2].model_id, models[3].model_id)
+
+    def rq(t, mid, out=16):
+        return Request(time=t, model_id=mid, dataset="gsm8k",
+                       prompt_tokens=64, output_tokens=out, batch_size=1)
+    return models, [rq(0.0, L, out=4096), rq(1.0, S, out=4096),
+                    rq(10.0, M), rq(20.0, M), rq(30.0, M)]
+
+
+class TestSimMigration:
+    def _run(self, policy):
+        models, trace = _migration_trace()
+        sim = ClusterSim(models, POLICIES[policy], n_workers=2,
+                         pool_bytes=int(20e9), seed=7)
+        res = sim.run(trace)
+        return sim, res
+
+    def test_sim_migrates_and_replays_exact(self):
+        a, ra = self._run("tangram-migrate")
+        b, rb = self._run("tangram-migrate")
+        assert a.migrations > 0
+        assert a.migrate_log == b.migrate_log
+        assert [r.__dict__ for r in ra] == [r.__dict__ for r in rb]
+        # the handoff's source stall precedes its target completion
+        for t, model, src, dst, stall, done in a.migrate_log:
+            assert src != dst and stall > 0.0 and done > t + stall
+        # every request still completes exactly once
+        assert len(ra) == len(_migration_trace()[1])
+
+    def test_migrate_off_policy_never_migrates(self):
+        sim, res = self._run("tangram-serverless")
+        assert sim.migrations == 0 and sim.migrate_log == []
+        assert len(res) == len(_migration_trace()[1])
+
+    def test_source_slot_frees_after_stall(self):
+        """After the handoff, the source worker's victim completes at the
+        snapshot stall (its replacement done event), not the original
+        residual — the event the golden log's stall column prices."""
+        a, _ = self._run("tangram-migrate")
+        t, model, src, dst, stall, done = a.migrate_log[0]
+        srcw = next(w for w in a.workers if w.device_id == src)
+        dstw = next(w for w in a.workers if w.device_id == dst)
+        # both sides drained by end of trace; the moved model's weights
+        # landed (activate) on the target's accounting
+        assert not srcw.busy_instances() and not dstw.busy_instances()
