@@ -1,0 +1,277 @@
+"""Fig. 19 (beyond-paper): cross-model tensor dedup — variant cold starts
+stay ~flat as the fleet grows.
+
+A fine-tune/LoRA fleet registers one base model plus K variants whose
+parameter trees differ only in a small leaf subset (DESIGN.md §17).  With
+content-capable fingerprints (``VariantSpec`` -> CONTENT_BASE_HINT) a
+variant's shared leaves carry the BASE's fingerprints, so they dedup
+against the base in the device pool, host tier, and persistent store — a
+variant cold start moves only its delta bytes, and `affinity_schedule`
+routes it toward base-warm nodes because `reusable_bytes` /
+`host_resident_bytes` already count the shared leaves.
+
+  * **modeled plane** — ``ModeledFleetGateway`` (deterministic cost
+    plane): the gated cell.  Sweeps K in {1, 2, 4, 8}: a dedup fleet
+    (``variants=``, shared fingerprints) against a no-dedup baseline
+    where every variant is an independent identity-fingerprint model.
+    Asserts the dedup variant TTFT strictly beats the baseline at every
+    K, every variant colocates with its base, zero sharer orphans, and
+    dedup cumulative cold-load seconds stay ~flat while the baseline's
+    scale linearly with K.
+  * **real plane** — ``Engine.register_variant`` on real jax buffers:
+    the variant load's h2d bytes must be a strict subset of the full
+    model (delta only), shared leaves must be bit-identical to the
+    base's, and the variant must decode BIT-IDENTICALLY on the dedup
+    engine vs an isolated engine that never shared anything —
+    ``decode_mismatches`` is the hard gate (zero cross-variant drift).
+
+Acceptance (asserted here, gated by scripts/check_bench.py):
+  * dedup variant TTFT at K=8 strictly below the no-dedup baseline;
+  * real-plane variant h2d bytes strictly below the full model's bytes;
+  * decode_mismatches == 0 and sharer_orphans == 0;
+  * every variant placement lands on the base-warm engine.
+
+``--merge-into`` attaches the results to the newest BENCH_fastpath.json
+entry as its ``dedup`` section — one history, one regression gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from benchmarks.common import emit
+
+K_SWEEP = (1, 2, 4, 8)
+DELTA_NAMES = ("t2", "t3")  # synthetic leaf names the variants perturb
+
+
+def _trace(model_ids, *, gap_s: float):
+    from repro.core.trace import Request
+
+    return [Request(time=i * gap_s, model_id=m, dataset="dedup",
+                    prompt_tokens=32, output_tokens=8, batch_size=1)
+            for i, m in enumerate(model_ids)]
+
+
+def _fleet_cell(base, variant_ids, *, dedup: bool, seed: int):
+    """One K cell: base arrives first, then each variant once, spaced so
+    the queueing term drains — what is measured is the LOAD path, not
+    contention.  `dedup=False` registers every variant as an independent
+    model (identity fingerprints: the no-dedup baseline)."""
+    from repro.core.trace import SimModel
+    from repro.models.tensors import VariantSpec
+    from repro.serverless.fleet import ModeledFleetGateway
+
+    if dedup:
+        models = [base]
+        variants = [VariantSpec(v, base.model_id, DELTA_NAMES)
+                    for v in variant_ids]
+    else:
+        models = [base] + [SimModel(v, base.params, base.n_tensors,
+                                    base.alpha, base.kv_bytes_per_token)
+                           for v in variant_ids]
+        variants = ()
+    # pool/host sized so the BASELINE also fits everything: the comparison
+    # isolates bytes-moved, not capacity pressure
+    pool = int(base.bytes * (len(variant_ids) + 2))
+    fg = ModeledFleetGateway(models, n_engines=2, pool_bytes=pool,
+                             host_cache_bytes=pool * 2, seed=seed,
+                             keep_alive="adaptive", prewarm=False,
+                             variants=variants)
+    fg.run_trace(_trace([base.model_id] + list(variant_ids), gap_s=60.0))
+    return fg
+
+
+def _run_modeled(*, smoke: bool, seed: int) -> dict:
+    from repro.core.trace import SimModel
+
+    # ~2 GB base, a dozen tensors; delta leaves t2/t3 are a small fraction
+    base = SimModel("dedup-base", 1.0e9, 12, kv_bytes_per_token=1024)
+    sweep = []
+    for K in K_SWEEP:
+        variant_ids = [f"dedup-v{k}" for k in range(K)]
+        dd = _fleet_cell(base, variant_ids, dedup=True, seed=seed)
+        nd = _fleet_cell(base, variant_ids, dedup=False, seed=seed)
+        for fg, label in ((dd, "dedup"), (nd, "baseline")):
+            assert fg.summary()["dropped_requests"] == 0, \
+                f"{label} K={K} dropped requests"
+        # ---- colocation: every dedup variant landed on the base engine
+        base_eng = dd.decisions[0][2]
+        colocated = all(d[2] == base_eng for d in dd.decisions)
+        assert colocated, f"K={K} variant routed off-base: {dd.decisions}"
+        # ---- refcount integrity across every engine in both fleets
+        orphans = sum(n.engine.store.dedup_stats().sharer_orphans
+                      for fg in (dd, nd) for n in fg.nodes)
+        assert orphans == 0, f"K={K}: {orphans} sharer orphans"
+        dstats = [n.engine.store.dedup_stats()
+                  for n in dd.nodes if n.device_id == base_eng][0]
+        assert dstats.shared_tensors > 0, "dedup fleet never shared a tensor"
+        # variant TTFT (cold-start phases) and cumulative cold load seconds
+        dv = [r.ttft for r in dd.sink.records[1:]]
+        nv = [r.ttft for r in nd.sink.records[1:]]
+        cold_dd = sum(r.load_s for r in dd.sink.records if r.cold)
+        cold_nd = sum(r.load_s for r in nd.sink.records if r.cold)
+        ttft_dd = sum(dv) / len(dv)
+        ttft_nd = sum(nv) / len(nv)
+        assert ttft_dd < ttft_nd, \
+            f"K={K}: dedup TTFT {ttft_dd:.3f}s >= baseline {ttft_nd:.3f}s"
+        sweep.append({"k": K, "ttft_variant": ttft_dd,
+                      "ttft_variant_baseline": ttft_nd,
+                      "cold_total": cold_dd,
+                      "cold_total_baseline": cold_nd,
+                      "shared_bytes": dstats.shared_bytes,
+                      "unique_bytes": dstats.unique_bytes,
+                      "logical_bytes": dstats.logical_bytes,
+                      "colocated": 1.0 if colocated else 0.0})
+        emit("fig19.modeled", ttft_dd * 1e6,
+             f"k={K};ttft={ttft_dd:.3f}s;base_ttft={ttft_nd:.3f}s"
+             f";cold={cold_dd:.3f}s;base_cold={cold_nd:.3f}s")
+    # ---- scaling shape: dedup cumulative cold seconds stay ~flat (base +
+    # K small deltas) while the baseline's grow linearly with K
+    k1, k8 = sweep[0], sweep[-1]
+    assert k8["cold_total_baseline"] > 3.0 * k1["cold_total_baseline"] / 2, \
+        "no-dedup baseline did not scale with K"
+    assert k8["cold_total"] < 2.0 * k1["cold_total"], \
+        f"dedup cold seconds scaled with K: {k1} -> {k8}"
+    gain = k8["ttft_variant_baseline"] / max(k8["ttft_variant"], 1e-9)
+    delta_frac = 1.0 - k8["shared_bytes"] / max(base.bytes, 1)
+    return {
+        "sweep": sweep,
+        "headline": {
+            "ttft_variant_k8": k8["ttft_variant"],
+            "ttft_variant_k8_baseline": k8["ttft_variant_baseline"],
+            "ttft_gain_k8": gain,
+            "cold_total_k8": k8["cold_total"],
+            "cold_total_k8_baseline": k8["cold_total_baseline"],
+            "variant_delta_frac": delta_frac,
+            "sharer_orphans": 0.0,
+            "affinity_colocated": min(c["colocated"] for c in sweep),
+        },
+    }
+
+
+def _run_real_smoke(*, seed: int) -> dict:
+    """``register_variant`` on real engines: delta-only h2d, bit-identical
+    shared leaves, and bit-identical decode vs an isolated engine."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import all_configs
+    from repro.models.tensors import VariantSpec
+    from repro.serving.engine import Engine
+
+    cfg = dataclasses.replace(all_configs()["llama3.2-1b"].smoke(),
+                              num_layers=2, vocab_size=512)
+    shared_eng = Engine(256 << 20, engine_id="shared")
+    iso_eng = Engine(256 << 20, engine_id="isolated")
+    delta = None
+    for eng in (shared_eng, iso_eng):
+        eng.register("base", cfg)
+        names = [r.name.split("/", 1)[1] for r in eng.records_of("base")]
+        delta = tuple(n for n in names if "attn/wq" in n or "mlp" in n)[:2]
+        eng.register_variant(VariantSpec("var", "base", delta))
+    # shared engine: base loads first, the variant rides its leaves;
+    # isolated engine: the variant loads alone, nothing to share against
+    shared_eng.load("base")
+    rep_v = shared_eng.load("var")
+    rep_iso = iso_eng.load("var")
+    full = sum(r.nbytes for r in shared_eng.records_of("var"))
+    assert 0 < rep_v.bytes_transferred < full, \
+        f"dedup load moved {rep_v.bytes_transferred} of {full} bytes"
+    assert rep_iso.bytes_transferred == full
+    ds = shared_eng.store.dedup_stats()
+    assert ds.sharer_orphans == 0 and ds.shared_tensors > 0
+    # ---- shared leaves bit-identical to the base; delta leaves differ
+    spec = shared_eng.models["var"].spec
+    pb = jax.tree.leaves(shared_eng.params_of("base"))
+    pv = jax.tree.leaves(shared_eng.params_of("var"))
+    identical = sum(bool((a == b).all()) for a, b in zip(pb, pv))
+    n_delta = sum(1 for n in names if spec.is_delta(n))
+    assert identical == len(pb) - n_delta, (identical, n_delta, len(pb))
+    # ---- bit-identical decode: the dedup'd variant vs the isolated one
+    rng = np.random.default_rng(seed)
+    prompt = {"tokens": jnp.asarray(rng.integers(1, 500, (1, 8)), jnp.int32)}
+    inst_s = shared_eng.start_instance("var", attn_mode="ref")
+    inst_i = iso_eng.start_instance("var", attn_mode="ref")
+    mismatches = 0
+    ls, li = inst_s.prefill(prompt), inst_i.prefill(prompt)
+    if not np.array_equal(np.asarray(ls), np.asarray(li)):
+        mismatches += 1
+    tok_s = jnp.argmax(ls, axis=-1)
+    tok_i = jnp.argmax(li, axis=-1)
+    for _ in range(3):
+        ls, li = inst_s.decode(tok_s), inst_i.decode(tok_i)
+        if not np.array_equal(np.asarray(ls), np.asarray(li)):
+            mismatches += 1
+        tok_s = jnp.argmax(ls, axis=-1)
+        tok_i = jnp.argmax(li, axis=-1)
+    assert mismatches == 0, \
+        f"dedup'd variant decode diverged on {mismatches} steps"
+    inst_s.finish()
+    inst_i.finish()
+    for eng in (shared_eng, iso_eng):
+        eng.close()
+    out = {"variant_bytes_h2d": rep_v.bytes_transferred,
+           "full_bytes": full, "delta_leaves": n_delta,
+           "decode_mismatches": mismatches,
+           "shared_tensors": ds.shared_tensors,
+           "sharer_orphans": ds.sharer_orphans}
+    emit("fig19.real", 0.0,
+         f"variant_h2d={rep_v.bytes_transferred};full={full}"
+         f";mismatches={mismatches};shared={ds.shared_tensors}")
+    return out
+
+
+def run(*, smoke: bool = False, real: bool = True,
+        merge_into: str = "BENCH_fastpath.json") -> dict:
+    seed = 13
+    out: dict = {"smoke": smoke, "seed": seed}
+    out.update(_run_modeled(smoke=smoke, seed=seed))
+    if real:
+        out["real"] = _run_real_smoke(seed=seed)
+        out["headline"]["real_variant_bytes_h2d"] = \
+            float(out["real"]["variant_bytes_h2d"])
+        out["headline"]["real_full_bytes"] = float(out["real"]["full_bytes"])
+        out["headline"]["decode_mismatches"] = \
+            float(out["real"]["decode_mismatches"])
+        out["headline"]["sharer_orphans"] += \
+            float(out["real"]["sharer_orphans"])
+    for k, v in out["headline"].items():
+        assert math.isfinite(v), f"dedup headline {k} is non-finite: {v}"
+
+    if merge_into:
+        from benchmarks.common import load_bench_entries
+
+        try:
+            history = load_bench_entries(merge_into)
+        except (FileNotFoundError, json.JSONDecodeError):
+            history = []
+        if history and history[-1].get("smoke") == smoke \
+                and "dedup" not in history[-1]:
+            history[-1]["dedup"] = out
+        else:
+            history.append({"smoke": smoke, "dedup": out})
+        with open(merge_into, "w") as f:
+            json.dump({"entries": history[-40:]}, f, indent=2)
+        emit("fig19.json", 0.0, f"merged={merge_into};entries={len(history)}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy scale for CI (make bench-smoke)")
+    ap.add_argument("--no-real", dest="real", action="store_false",
+                    help="skip the real-plane (jax) variant section")
+    ap.add_argument("--merge-into", default="BENCH_fastpath.json",
+                    help="BENCH history to attach results to ('' disables)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, real=args.real, merge_into=args.merge_into)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,11 @@ commits to keeping green and monotone:
     p95 gain over evict-and-reload, plus the absolute invariants
     replay_mismatches == 0, dropped_requests == 0, migrations > 0, and
     migrated p95 strictly below the baseline on the newest entry
+  * fig19 cross-model dedup: variant cold-start TTFT and cumulative
+    cold-load seconds at K=8 (lower-is-better) and the gain over the
+    no-dedup baseline, plus the absolute invariants that the variant
+    moves strictly fewer bytes than the full model, decodes
+    bit-identically, orphans no sharer, and colocates with its base
 
 Improvements always pass; a single entry (nothing to compare) passes.
 Threshold override: --threshold or BENCH_REGRESSION_THRESHOLD (fraction,
@@ -45,7 +50,8 @@ from benchmarks.common import load_bench_entries  # noqa: E402
 LOWER_IS_BETTER = {"serverless.cold_rate", "serverless.ttft_p95",
                    "serverless.fleet.cold_rate", "serverless.fleet.ttft_p95",
                    "chaos.ttft_inflation", "chaos.ttft_p95",
-                   "migration.ttft_p95"}
+                   "migration.ttft_p95",
+                   "dedup.ttft_variant_k8", "dedup.cold_total_k8"}
 
 
 def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
@@ -104,6 +110,18 @@ def metrics_of(entry: dict, *, absolute: bool) -> dict[str, float]:
         out["migration.ttft_p95"] = mg["ttft_p95"]
     if "p95_gain" in mg:
         out["migration.p95_gain"] = mg["p95_gain"]
+    # fig19 cross-model dedup (DESIGN.md §17): variant cold-start TTFT at
+    # K=8 and cumulative cold-load seconds gate lower-is-better, the
+    # TTFT gain over the no-dedup baseline higher-is-better; the
+    # bytes-moved / orphan / decode-drift invariants are absolute and
+    # checked in dedup_invariants().
+    dd = entry.get("dedup", {}).get("headline", {})
+    if "ttft_variant_k8" in dd:
+        out["dedup.ttft_variant_k8"] = dd["ttft_variant_k8"]
+    if "ttft_gain_k8" in dd:
+        out["dedup.ttft_gain_k8"] = dd["ttft_gain_k8"]
+    if "cold_total_k8" in dd:
+        out["dedup.cold_total_k8"] = dd["cold_total_k8"]
     if absolute:
         if "decode" in entry:
             out["decode.fused_steps_per_s"] = \
@@ -168,6 +186,49 @@ def migration_invariants(entry: dict) -> list[str]:
     for name, val in sorted(mg.items()):
         if not math.isfinite(val):
             failures.append(f"migration.{name} is non-finite: {val}")
+    return failures
+
+
+def dedup_invariants(entry: dict) -> list[str]:
+    """Hard correctness gates on ONE entry's dedup section (DESIGN.md
+    §17): a variant load must move strictly fewer bytes than the full
+    model (otherwise dedup did nothing), the dedup'd variant must decode
+    bit-identically to an isolated engine (zero cross-variant drift), no
+    resident tensor may end up with an empty sharer set (a base-leaf
+    eviction orphaning a live sharer is a refcount bug), every variant
+    must colocate with its base, and dedup must strictly beat the
+    no-dedup baseline on variant TTFT.  Entries that predate fig19 have
+    no dedup section and pass vacuously."""
+    dd = entry.get("dedup", {}).get("headline", {})
+    if not dd:
+        return []
+    failures = []
+    moved = dd.get("real_variant_bytes_h2d")
+    full = dd.get("real_full_bytes")
+    if moved is not None and full is not None and moved >= full:
+        failures.append(f"dedup.real_variant_bytes_h2d = {moved} >= "
+                        f"full-model {full} (variant must move only its "
+                        "delta)")
+    orphans = dd.get("sharer_orphans", 0)
+    if orphans != 0:
+        failures.append(f"dedup.sharer_orphans = {orphans} (a base-leaf "
+                        "eviction orphaned a live sharer)")
+    mismatches = dd.get("decode_mismatches", 0)
+    if mismatches != 0:
+        failures.append(f"dedup.decode_mismatches = {mismatches} "
+                        "(variant decode must be bit-identical)")
+    colocated = dd.get("affinity_colocated", 1.0)
+    if colocated != 1.0:
+        failures.append(f"dedup.affinity_colocated = {colocated} "
+                        "(a variant routed off its base-warm node)")
+    ttft = dd.get("ttft_variant_k8")
+    base = dd.get("ttft_variant_k8_baseline")
+    if ttft is not None and base is not None and ttft >= base:
+        failures.append(f"dedup.ttft_variant_k8 = {ttft} >= baseline "
+                        f"{base} (must strictly beat no-dedup)")
+    for name, val in sorted(dd.items()):
+        if not math.isfinite(val):
+            failures.append(f"dedup.{name} is non-finite: {val}")
     return failures
 
 
@@ -244,6 +305,12 @@ def main() -> int:
     if migration_failures:
         print("check_bench: FAIL — migration correctness invariants:")
         for f in migration_failures:
+            print(f"  - {f}")
+        return 1
+    dedup_failures = dedup_invariants(cur)
+    if dedup_failures:
+        print("check_bench: FAIL — dedup correctness invariants:")
+        for f in dedup_failures:
             print(f"  - {f}")
         return 1
     prev = next((e for e in reversed(entries[:-1])

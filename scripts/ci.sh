@@ -32,13 +32,15 @@ if [[ "${1:-}" == "bench-smoke" ]]; then
     # fixed output path: the regression gate must read the file this run
     # wrote (no pass-through flags — --out drift would gate stale data).
     # fig15 appends the entry; fig16 attaches its serverless sweep, fig17
-    # its chaos replay, and fig18 its migration handoff to that same
-    # entry, so ONE history gates the load path, the control plane, the
-    # reliability metrics, and the migration win together.
+    # its chaos replay, fig18 its migration handoff, and fig19 its
+    # cross-model dedup sweep to that same entry, so ONE history gates
+    # the load path, the control plane, the reliability metrics, and the
+    # dedup/migration wins together.
     python -m benchmarks.fig15_fastpath --smoke --out BENCH_fastpath.json
     python -m benchmarks.fig16_serverless --smoke --merge-into BENCH_fastpath.json
     python -m benchmarks.fig17_chaos --smoke --merge-into BENCH_fastpath.json
     python -m benchmarks.fig18_migration --smoke --merge-into BENCH_fastpath.json
+    python -m benchmarks.fig19_dedup --smoke --merge-into BENCH_fastpath.json
     exec python scripts/check_bench.py BENCH_fastpath.json
 fi
 

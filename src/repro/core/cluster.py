@@ -43,7 +43,8 @@ from repro.core.regions import RState
 from repro.core.reuse_store import AllocationError, ReuseStore
 from repro.core.scheduler import affinity_schedule, random_schedule
 from repro.core.trace import (Request, SimModel, percentile,
-                              synthetic_tensor_sizes)
+                              synthetic_tensor_sizes,
+                              synthetic_variant_records)
 from repro.models.tensors import TensorRecord
 
 
@@ -452,7 +453,8 @@ class SimWorker:
 class ClusterSim:
     def __init__(self, models: Sequence[SimModel], policy: SimPolicy, *,
                  n_workers: int = 1, hw: Optional[Hardware] = None, seed: int = 0,
-                 pool_bytes: Optional[int] = None, indexed: bool = True):
+                 pool_bytes: Optional[int] = None, indexed: bool = True,
+                 variants: Sequence = ()):
         self.hw = hw or paper_l40()
         self.costs = PhaseCosts(self.hw, criu=policy.criu, medusa=policy.medusa)
         self.policy = policy
@@ -467,8 +469,20 @@ class ClusterSim:
                              nbytes=s)
                 for i, s in enumerate(sizes)
             ]
+        # fine-tune variants (DESIGN.md §17): each VariantSpec clones its
+        # base's shape/size profile but shares the base's fingerprints for
+        # every non-delta leaf, so the pool/host tiers dedup them and the
+        # affinity score routes a variant toward base-warm workers
+        for v in variants:
+            base = self.models[v.base_id]
+            self.models[v.variant_id] = SimModel(
+                v.variant_id, base.params, base.n_tensors, base.alpha,
+                base.kv_bytes_per_token)
+            self.records[v.variant_id] = synthetic_variant_records(
+                v, self.records[v.base_id])
         cap = int(pool_bytes if pool_bytes is not None else self.hw.device_mem)
-        kv_rates = {m.model_id: m.kv_bytes_per_token for m in models}
+        kv_rates = {m.model_id: m.kv_bytes_per_token
+                    for m in self.models.values()}
         self.workers = [SimWorker(f"gpu{i}", cap, self.costs, policy,
                                   indexed=indexed)
                         for i in range(n_workers)]

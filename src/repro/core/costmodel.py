@@ -219,8 +219,29 @@ def estimate_load_time_tiered(model_bytes: float, device_reusable: float,
     persistent store at `min(h2d_bw, store_bw)`.  This is the t_load the
     affinity scheduler scores once per-node host caches are modeled — a
     device whose host tier already caches the missing tensors beats one
-    that must promote them, even at equal device-pool reuse."""
+    that must promote them, even at equal device-pool reuse.
+
+    Under cross-model dedup (DESIGN.md §17) every input is fingerprint-
+    derived, so the estimate is dedup-aware for free: a variant's records
+    carry its base's fingerprints for shared leaves, `device_reusable` /
+    `host_resident` count those as resident wherever the BASE is warm, and
+    the score steers the variant toward base-warm nodes with only its
+    delta bytes left to move."""
     missing = max(0.0, model_bytes - device_reusable)
     host = min(max(0.0, host_resident), missing)
     store = missing - host
     return host / hw.h2d_bw + store / min(hw.h2d_bw, hw.store_bw)
+
+
+def unique_bytes(records) -> int:
+    """Byte footprint of a record set counting each fingerprint ONCE — the
+    `S` a dedup-aware pool actually stores/moves.  Differs from
+    `sum(r.nbytes)` only when fingerprints repeat within the set (tied
+    weights under a content policy)."""
+    seen: set = set()
+    total = 0
+    for r in records:
+        if r.fingerprint not in seen:
+            seen.add(r.fingerprint)
+            total += r.nbytes
+    return total

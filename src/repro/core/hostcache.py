@@ -29,6 +29,7 @@ from collections import OrderedDict
 from typing import Optional, Sequence
 
 from repro.models.tensors import TensorRecord
+from repro.stats import HostStoreStats
 
 
 class SimHostCache:
@@ -63,6 +64,18 @@ class SimHostCache:
 
     def nbytes(self) -> int:
         return self._nbytes
+
+    def snapshot(self) -> HostStoreStats:
+        """Typed counter snapshot (repro.stats schema, DESIGN.md §17) —
+        the same shape the real plane's `HostTensorStore.snapshot` fills;
+        fields the sim tier does not track stay at their zero defaults."""
+        return HostStoreStats(
+            resident_bytes=self._nbytes,
+            evictions=self.evictions,
+            bytes_spilled=self.bytes_spilled,
+            bytes_fetched=self.bytes_fetched,
+            expirations=self.expirations,
+            pressure_evictions=self.pressure_evictions)
 
     def host_resident_bytes(self, records: Sequence[TensorRecord]) -> int:
         """Bytes of `records` currently in this node's host tier (read-only:

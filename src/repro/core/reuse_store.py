@@ -17,28 +17,42 @@ factor computed once per model, not once per tensor), and the allocate path
 skips candidate generation entirely when the pool already has the free bytes.
 `indexed=False` restores the original scan-everything behaviour over a
 `NaiveRegionList` — the measured baseline for benchmarks/fig15_fastpath.py.
+
+Cross-model dedup (DESIGN.md §17): entries are keyed by CONTENT-capable
+fingerprints, so two model ids whose records carry the same fingerprint
+(a fine-tune variant and its base) resolve to ONE resident tensor.  Each
+entry tracks its *sharers* — the model ids currently claiming it — and
+eviction counts sharers, not models: a tensor with any ACTIVE sharer is
+never an eviction candidate, its Eq. 2 cost sums over all sharers (evicting
+it costs every one of them a future re-transfer), and `drop_model` only
+frees pool bytes when the LAST sharer departs.
 """
 from __future__ import annotations
 
 import time as _time
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 from repro.core.allocator import (AllocationError, EvictionCandidate, NewTensor,
                                   apply_plan, global_merge_plan,
                                   minimal_cost_eviction, partitioned_gain_packing)
 from repro.core.costmodel import Hardware, PhaseCosts
 from repro.core.regions import NaiveRegionList, RegionList, RState
-from repro.models.tensors import TensorRecord
+from repro.models.tensors import ModelSpec, TensorRecord
+from repro.stats import DedupStats
 
 
 @dataclass
 class TensorEntry:
     record: TensorRecord
-    model_id: str
+    model_id: str  # first loader (display/debug; ownership lives in sharers)
     offset: int
     last_access: float = 0.0
     hits: int = 0
+    # model ids currently claiming this tensor (cross-model dedup §17):
+    # populated by _admit with the loader, grown by _share on cross-model
+    # hits, shrunk by drop_model — empty means the entry is being freed
+    sharers: set[str] = field(default_factory=set)
 
 
 @dataclass
@@ -94,10 +108,25 @@ class ReuseStore:
         self.miss_prob: dict[str, float] = {}  # model_id -> p_m (from controller)
         self.alpha: dict[str, float] = {}  # model_id -> latency sensitivity
         self._rand_state = 0x9E3779B9
-        # incremental accounting (kept in lockstep with tensor_map)
+        # declarative registry (DESIGN.md §17): ModelSpec per model id, so
+        # the pool knows each model's fingerprint policy/base lineage
+        self.model_specs: dict[str, ModelSpec] = {}
+        # incremental accounting (kept in lockstep with tensor_map).
+        # _resident_total dedups (each fingerprint once); _resident_by_model
+        # is the per-sharer logical view (a shared tensor counts for every
+        # sharer), so their sum can exceed the total under dedup.
         self._resident_total = 0
         self._resident_by_model: dict[str, int] = {}
         self._model_tensors: dict[str, dict[str, TensorEntry]] = {}
+
+    # -------------------------------------------------------------- registry
+    def register_model(self, spec: Union[ModelSpec, str]) -> ModelSpec:
+        """Record a model's declarative identity (idempotent).  A bare id
+        registers under the identity policy."""
+        if not isinstance(spec, ModelSpec):
+            spec = ModelSpec(spec)
+        self.model_specs[spec.model_id] = spec
+        return spec
 
     # ----------------------------------------------------------------- stats
     def resident_bytes(self, model_id: Optional[str] = None) -> int:
@@ -106,7 +135,25 @@ class ReuseStore:
                 return self._resident_total
             return self._resident_by_model.get(model_id, 0)
         return sum(e.record.nbytes for e in self.tensor_map.values()
-                   if model_id is None or e.model_id == model_id)
+                   if model_id is None or model_id in e.sharers)
+
+    def dedup_stats(self) -> DedupStats:
+        """Cross-model sharing ledger (repro.stats schema).  sharer_orphans
+        counts resident entries with an EMPTY sharer set — a refcount bug,
+        gated to zero by scripts/check_bench.py."""
+        shared_b = shared_t = orphans = 0
+        for e in self.tensor_map.values():
+            if len(e.sharers) >= 2:
+                shared_b += e.record.nbytes
+                shared_t += 1
+            elif not e.sharers:
+                orphans += 1
+        logical = (sum(self._resident_by_model.values()) if self.indexed
+                   else sum(e.record.nbytes * len(e.sharers)
+                            for e in self.tensor_map.values()))
+        return DedupStats(unique_bytes=self.resident_bytes(),
+                          logical_bytes=logical, shared_bytes=shared_b,
+                          shared_tensors=shared_t, sharer_orphans=orphans)
 
     def reusable_bytes(self, records: Sequence[TensorRecord]) -> int:
         """S' in Eq. 3: bytes of `records` already resident here."""
@@ -123,10 +170,22 @@ class ReuseStore:
         """Instance terminated: tensors STAY resident (the paper's key idea)."""
         self.active_models.discard(model_id)
 
-    def drop_model(self, model_id: str):
-        """Hard-evict every tensor of a model (baseline behaviour)."""
-        for fp in list(self._model_tensors.get(model_id, ())):
-            self._evict(fp)
+    def drop_model(self, model_id: str) -> int:
+        """Drop a model's CLAIM on its resident tensors.  A tensor shared
+        with another resident model (cross-model dedup §17) survives under
+        its remaining sharers; pool bytes free only when the LAST sharer
+        departs — evicting one variant never invalidates another.  Returns
+        the bytes actually freed."""
+        freed = 0
+        for fp, e in list(self._model_tensors.get(model_id, {}).items()):
+            e.sharers.discard(model_id)
+            self._unregister(model_id, fp, e.record.nbytes)
+            if not e.sharers:
+                del self.tensor_map[fp]
+                self.pool.free(e.offset)
+                self._resident_total -= e.record.nbytes
+                freed += e.record.nbytes
+        return freed
 
     def set_host_capacity(self, capacity_bytes) -> int:
         """Tenant-pressure feed (serverless control plane): resize this
@@ -137,56 +196,106 @@ class ReuseStore:
             return 0
         return self.host_cache.set_capacity_bytes(capacity_bytes)
 
+    def _register(self, model_id: str, entry: TensorEntry):
+        self._resident_by_model[model_id] = (
+            self._resident_by_model.get(model_id, 0) + entry.record.nbytes)
+        self._model_tensors.setdefault(model_id, {})[
+            entry.record.fingerprint] = entry
+
+    def _unregister(self, model_id: str, fp: str, nbytes: int):
+        owned = self._model_tensors[model_id]
+        del owned[fp]
+        if owned:  # dict emptiness, not byte count (zero-size tensors exist)
+            self._resident_by_model[model_id] -= nbytes
+        else:
+            del self._resident_by_model[model_id]
+            del self._model_tensors[model_id]
+
     def _admit(self, entry: TensorEntry):
         if entry.record.fingerprint in self.tensor_map:
             # re-admission without a drop (policy="none" reload): release the
             # stale copy so counters and the pool stay exact
             self._evict(entry.record.fingerprint)
+        if not entry.sharers:
+            entry.sharers.add(entry.model_id)
         self.tensor_map[entry.record.fingerprint] = entry
         self._resident_total += entry.record.nbytes
-        self._resident_by_model[entry.model_id] = (
-            self._resident_by_model.get(entry.model_id, 0) + entry.record.nbytes)
-        self._model_tensors.setdefault(entry.model_id, {})[
-            entry.record.fingerprint] = entry
+        for model_id in entry.sharers:
+            self._register(model_id, entry)
+
+    def _share(self, model_id: str, entry: TensorEntry):
+        """A load by `model_id` hit a tensor admitted under another model id
+        (cross-model dedup): record the claim so eviction refcounting and
+        the per-model resident view count SHARERS, not first owners."""
+        if model_id in entry.sharers:
+            return
+        entry.sharers.add(model_id)
+        self._register(model_id, entry)
 
     def _evict(self, fp: str) -> int:
         e = self.tensor_map.pop(fp)
         self.pool.free(e.offset)
         self._resident_total -= e.record.nbytes
-        owned = self._model_tensors[e.model_id]
-        del owned[fp]
-        if owned:  # dict emptiness, not byte count (zero-size tensors exist)
-            self._resident_by_model[e.model_id] -= e.record.nbytes
-        else:
-            del self._resident_by_model[e.model_id]
-            del self._model_tensors[e.model_id]
+        for model_id in e.sharers:
+            self._unregister(model_id, fp, e.record.nbytes)
+        e.sharers.clear()
         return e.record.nbytes
 
     # ------------------------------------------------------- eviction costs
+    def _factor(self, model_id: str) -> float:
+        # Eq. 2: c_j = p_m * (s_j / b_m) * alpha_m — the per-model factor is
+        # constant across the model's tensors
+        return self.costs.eviction_cost(1.0,
+                                        self.miss_prob.get(model_id, 1.0),
+                                        self.alpha.get(model_id, 1.0))
+
     def _candidates(self) -> list[EvictionCandidate]:
         cands = []
+        seen: set[str] = set()  # shared tensors must yield ONE candidate
+        factors: dict[str, float] = {}
         for model_id, owned in self._model_tensors.items():
             if model_id in self.active_models:
                 continue
             if self.policy == "rand+gm":
                 for fp, e in owned.items():
+                    if fp in seen or e.sharers & self.active_models:
+                        continue
+                    seen.add(fp)
                     # pseudo-random cost (baseline "Rand")
                     self._rand_state = (self._rand_state * 1103515245 + 12345) & 0x7FFFFFFF
                     cands.append(EvictionCandidate(fp, e.offset, e.record.nbytes,
                                                    float(self._rand_state)))
             else:
-                # Eq. 2: c_j = p_m * (s_j / b_m) * alpha_m — the per-model
-                # factor is constant across the model's tensors
-                factor = self.costs.eviction_cost(1.0,
-                                                  self.miss_prob.get(model_id, 1.0),
-                                                  self.alpha.get(model_id, 1.0))
-                cands.extend(EvictionCandidate(fp, e.offset, e.record.nbytes,
-                                               factor * e.record.nbytes)
-                             for fp, e in owned.items())
+                if model_id not in factors:
+                    factors[model_id] = self._factor(model_id)
+                factor = factors[model_id]
+                for fp, e in owned.items():
+                    if fp in seen:
+                        continue
+                    if len(e.sharers) == 1:
+                        cost = factor * e.record.nbytes
+                    else:
+                        # sharer-aware Eq. 2 (§17): a tensor with any ACTIVE
+                        # sharer is untouchable; otherwise evicting it costs
+                        # every sharer a future re-transfer, so the costs sum
+                        if e.sharers & self.active_models:
+                            continue
+                        cost = e.record.nbytes * sum(
+                            factors.setdefault(m, self._factor(m))
+                            for m in e.sharers)
+                    seen.add(fp)
+                    cands.append(EvictionCandidate(fp, e.offset,
+                                                   e.record.nbytes, cost))
         return cands
 
     def _has_candidates(self) -> bool:
-        return any(m not in self.active_models for m in self._model_tensors)
+        for model_id, owned in self._model_tensors.items():
+            if model_id in self.active_models:
+                continue
+            for e in owned.values():
+                if not (e.sharers & self.active_models):
+                    return True
+        return False
 
     # ------------------------------------------------------------------ load
     def plan_load(self, records: Sequence[TensorRecord]):
@@ -226,10 +335,26 @@ class ReuseStore:
         for r in hits:
             e = self.tensor_map[r.fingerprint]
             e.last_access, e.hits = now, e.hits + 1
+            # cross-model dedup (§17): a hit on a tensor another model id
+            # admitted (variant hitting its base's leaves) claims shared
+            # ownership, so eviction refcounting counts this load too
+            self._share(model_id, e)
             rep.bytes_hit += r.nbytes
         rep.tensors_hit = len(hits)
 
         if misses:
+            # content fingerprints can repeat WITHIN one record set (tied
+            # weights): allocate/transfer each fingerprint once; later
+            # occurrences are hits-by-admission
+            uniq, seen_fp = [], set()
+            for r in misses:
+                if r.fingerprint in seen_fp:
+                    rep.bytes_hit += r.nbytes
+                    rep.tensors_hit += 1
+                else:
+                    seen_fp.add(r.fingerprint)
+                    uniq.append(r)
+            misses = uniq
             need = sum(r.nbytes for r in misses)
             new_tensors = [NewTensor(r.fingerprint, r.nbytes) for r in misses]
             placed = self._allocate(model_id, new_tensors, need, rep)

@@ -17,7 +17,7 @@ from dataclasses import dataclass
 from typing import Callable, Optional, Protocol, Sequence
 
 from repro.core.costmodel import (Hardware, estimate_load_time,
-                                  estimate_load_time_tiered)
+                                  estimate_load_time_tiered, unique_bytes)
 from repro.models.tensors import TensorRecord
 
 #: Named affinity scoring policies (ablation knob; SimPolicy.queue_aware).
@@ -78,12 +78,21 @@ def affinity_schedule(requests: Sequence[tuple[str, Sequence[TensorRecord], int]
     still_queued_model_ids).  Each chosen device is removed from the
     available pool — one NEW instance placement per device per round
     (concurrent workers may still accept several across rounds).
+
+    Dedup-aware scoring (DESIGN.md §17) needs no extra plumbing: `records`
+    carry content-capable fingerprints, so `reusable_bytes` /
+    `host_resident_bytes` count a variant's base leaves as resident on any
+    node warm with the base — the score routes variants toward their base.
+    A request may pass `model_bytes=None` to mean "the record set's deduped
+    footprint" (each fingerprint once).
     """
     assert policy in AFFINITY_POLICIES, policy
     avail = list(devices)
     schedules: list[ScheduleEntry] = []
     queued: list[str] = []
     for model_id, records, model_bytes in requests:
+        if model_bytes is None:
+            model_bytes = unique_bytes(records)
         best = None
         best_lat = float("inf")
         best_reuse = 0
@@ -138,6 +147,8 @@ def random_schedule(requests, devices, rng) -> tuple[list[ScheduleEntry], list[s
     avail = list(devices)
     schedules, queued = [], []
     for model_id, records, model_bytes in requests:
+        if model_bytes is None:
+            model_bytes = unique_bytes(records)
         feasible = [d for d in avail if d.can_run(model_bytes, model_id)]
         if not feasible:
             queued.append(model_id)

@@ -97,6 +97,29 @@ def synthetic_tensor_sizes(model: SimModel, rng: random.Random) -> list[int]:
     return sizes
 
 
+def synthetic_variant_records(vspec, base_records):
+    """Cost-plane record set for a fine-tune variant (DESIGN.md §17).
+
+    Mirrors what `tensor_records_for` does on the data plane: leaves the
+    variant shares with its base keep the BASE record's fingerprint (one
+    resident copy serves every sibling in whatever tier it lives), while
+    delta leaves get variant-scoped fingerprints.  `vspec` is a
+    `repro.models.tensors.VariantSpec`; synthetic base records name their
+    leaves ``t0..tN``, so delta patterns are e.g. ``("t2", "t3")``.
+    """
+    spec = vspec.to_model_spec()
+    recs = []
+    for r in base_records:
+        leaf = r.name.split("/", 1)[1] if "/" in r.name else r.name
+        if spec.is_delta(leaf):
+            fp = f"{vspec.variant_id}/{leaf}"
+        else:
+            fp = r.fingerprint  # shared with the base, bit for bit
+        recs.append(type(r)(name=f"{vspec.variant_id}/{leaf}", shape=r.shape,
+                            dtype=r.dtype, fingerprint=fp, nbytes=r.nbytes))
+    return recs
+
+
 def generate_trace(*, n_requests: int, models: Sequence[SimModel] = tuple(PAPER_MODELS),
                    locality: str = "L3", mean_interarrival: float = 20.0,
                    batch_size: int = 1, seed: int = 0,

@@ -1,23 +1,46 @@
 """Bridge between model parameter trees and Tangram tensor records.
 
 Each pytree leaf becomes one named tensor (dozens per model — the paper's
-reuse granularity).  Fingerprints identify a tensor for the Reuse Store; the
-default mode hashes (model_id, name, shape, dtype, shard) — stable across
-restarts of the same registered model.  `content` mode hashes actual bytes,
-enabling cross-model dedup of shared base weights (beyond-paper).
+reuse granularity).  Fingerprints identify a tensor for the Reuse Store and
+both host tiers; identical fingerprints dedup ACROSS model ids in every
+tier (DESIGN.md §17).
+
+How a leaf's fingerprint is derived is a property of the MODEL, not of the
+call site: `ModelSpec` carries a `FingerprintPolicy` —
+
+  identity                hash (model_id, name, shape, dtype, shard); stable
+                          across restarts, never shared across model ids
+  content                 hash the leaf's bytes when it is a real array
+                          (identical weights collide by construction);
+                          falls back to identity for ShapeDtypeStructs
+  content-with-base-hint  fine-tune variants: leaves NOT in the variant's
+                          delta set fingerprint under the BASE model's
+                          identity, so every variant of one base shares
+                          them without ever hashing bytes (registration
+                          runs under `jax.eval_shape` — no bytes exist);
+                          delta leaves fingerprint under the variant's own
+                          identity
+
+`VariantSpec` is the declarative form of a fine-tune: base id + the leaf
+subset that differs.  The legacy `tensor_records(model_id, ..., mode=...)`
+string kwarg survives only as a deprecation shim.
 """
 from __future__ import annotations
 
+import enum
 import hashlib
 import logging
 import time as _time
+import warnings
 import zlib
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
 
 import jax
 import numpy as np
+
+from repro.stats import HostStoreStats
 
 log = logging.getLogger(__name__)
 
@@ -44,7 +67,9 @@ class TensorRecord:
     nbytes: int
 
 
-def _path_str(path) -> str:
+def leaf_path(path) -> str:
+    """Stable "/"-joined name of one pytree leaf path (the record name sans
+    the model-id prefix — the unit `ModelSpec.delta_names` match against)."""
     parts = []
     for p in path:
         if hasattr(p, "key"):
@@ -56,6 +81,9 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+_path_str = leaf_path  # original (private) name, kept for in-repo callers
+
+
 def fingerprint_of(model_id: str, name: str, shape, dtype, shard: str = "") -> str:
     h = hashlib.sha1(f"{model_id}|{name}|{tuple(shape)}|{dtype}|{shard}".encode())
     return h.hexdigest()[:16]
@@ -65,23 +93,145 @@ def content_fingerprint(arr: np.ndarray) -> str:
     return hashlib.sha1(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
 
 
-def tensor_records(model_id: str, params, *, shard: str = "",
-                   mode: str = "identity") -> list[TensorRecord]:
-    """Flatten a parameter pytree (or ShapeDtypeStruct tree) to tensor records."""
+class FingerprintPolicy(str, enum.Enum):
+    """How a model's leaves derive their tensor identity (DESIGN.md §17)."""
+
+    IDENTITY = "identity"
+    CONTENT = "content"
+    CONTENT_BASE_HINT = "content-with-base-hint"
+
+
+def _segments_match(name: str, pattern: str) -> bool:
+    """`pattern`'s "/"-segments appear as a contiguous run of `name`'s —
+    "t1" matches "blk/t1" but NOT "blk/t10"; "attn/wq" matches
+    "segments/0/attn/wq"."""
+    ns, ps = name.split("/"), pattern.split("/")
+    if len(ps) > len(ns):
+        return False
+    return any(ns[i:i + len(ps)] == ps for i in range(len(ns) - len(ps) + 1))
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Declarative model identity: the one object registration flows carry.
+
+    `Engine.register_model`, `ReuseStore.register_model`, and the fleet
+    gateways all accept a ModelSpec; the fingerprint policy travels WITH the
+    model instead of as a per-call string kwarg.  For
+    `FingerprintPolicy.CONTENT_BASE_HINT`, `base_id` names the base model
+    and `delta_names` the leaf subset (segment-wise patterns, see
+    `is_delta`) that differs from it — every other leaf fingerprints under
+    the base's identity and thus dedups with the base and all sibling
+    variants in every tier.
+    """
+
+    model_id: str
+    policy: FingerprintPolicy = FingerprintPolicy.IDENTITY
+    base_id: Optional[str] = None
+    delta_names: tuple[str, ...] = ()
+    shard: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "policy", FingerprintPolicy(self.policy))
+        object.__setattr__(self, "delta_names", tuple(self.delta_names))
+        if self.policy is FingerprintPolicy.CONTENT_BASE_HINT:
+            if not self.base_id:
+                raise ValueError(
+                    "content-with-base-hint requires base_id "
+                    f"(model {self.model_id!r})")
+            if self.base_id == self.model_id:
+                raise ValueError(f"model {self.model_id!r} cannot be its "
+                                 "own base")
+        elif self.base_id is not None:
+            raise ValueError(f"base_id set on {self.model_id!r} but policy "
+                             f"is {self.policy.value!r}")
+
+    def is_delta(self, name: str) -> bool:
+        """Leaf `name` belongs to the variant's own (non-shared) subset."""
+        return any(_segments_match(name, d) for d in self.delta_names)
+
+    def leaf_fingerprint(self, name: str, shape, dtype,
+                         leaf=None) -> str:
+        if self.policy is FingerprintPolicy.CONTENT and isinstance(
+                leaf, (np.ndarray, jax.Array)):
+            return content_fingerprint(np.asarray(leaf))
+        if (self.policy is FingerprintPolicy.CONTENT_BASE_HINT
+                and not self.is_delta(name)):
+            # shared-with-base leaf: the base's identity IS the content
+            # identity (variants copy these leaves bit-for-bit), derivable
+            # from shapes alone — no bytes needed at eval_shape time
+            return fingerprint_of(self.base_id, name, shape, dtype,
+                                  self.shard)
+        return fingerprint_of(self.model_id, name, shape, dtype, self.shard)
+
+
+@dataclass(frozen=True)
+class VariantSpec:
+    """A fine-tune variant: base model + the leaf subset that differs.
+
+    The registry entry for "register a base plus K variants" fleets — each
+    variant's ModelSpec is derived, never hand-assembled.
+    """
+
+    variant_id: str
+    base_id: str
+    delta_names: tuple[str, ...]
+
+    def to_model_spec(self, *, shard: str = "") -> ModelSpec:
+        return ModelSpec(self.variant_id,
+                         policy=FingerprintPolicy.CONTENT_BASE_HINT,
+                         base_id=self.base_id,
+                         delta_names=tuple(self.delta_names), shard=shard)
+
+
+_MODE_UNSET = object()  # sentinel: distinguishes mode omitted vs passed
+
+
+def tensor_records_for(spec: ModelSpec, params) -> list[TensorRecord]:
+    """Flatten a parameter pytree (or ShapeDtypeStruct tree) to tensor
+    records under `spec`'s fingerprint policy — the canonical builder."""
     recs = []
     leaves = jax.tree_util.tree_flatten_with_path(params)[0]
     for path, leaf in leaves:
-        name = _path_str(path)
+        name = leaf_path(path)
         shape = tuple(leaf.shape)
         dtype = str(leaf.dtype)
         nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
-        if mode == "content" and isinstance(leaf, (np.ndarray, jax.Array)):
-            fp = content_fingerprint(np.asarray(leaf))
-        else:
-            fp = fingerprint_of(model_id, name, shape, dtype, shard)
-        recs.append(TensorRecord(name=f"{model_id}/{name}", shape=shape,
+        fp = spec.leaf_fingerprint(name, shape, dtype, leaf)
+        recs.append(TensorRecord(name=f"{spec.model_id}/{name}", shape=shape,
                                  dtype=dtype, fingerprint=fp, nbytes=nbytes))
     return recs
+
+
+def tensor_records(model: Union[ModelSpec, str], params, *, shard: str = "",
+                   mode=_MODE_UNSET) -> list[TensorRecord]:
+    """Tensor records for `model` — a `ModelSpec` (canonical) or a bare
+    model-id string (identity policy).
+
+    The old stringly ``mode=`` kwarg is a deprecation shim: passing it warns
+    and routes through the equivalent `FingerprintPolicy`.  No call site
+    outside this module should pass it.
+    """
+    if isinstance(model, ModelSpec):
+        if mode is not _MODE_UNSET:
+            raise TypeError("mode= cannot be combined with a ModelSpec — "
+                            "the spec's policy already decides")
+        spec = model
+        if shard and shard != spec.shard:
+            spec = ModelSpec(spec.model_id, policy=spec.policy,
+                             base_id=spec.base_id,
+                             delta_names=spec.delta_names, shard=shard)
+        return tensor_records_for(spec, params)
+    if mode is _MODE_UNSET:
+        policy = FingerprintPolicy.IDENTITY
+    else:
+        warnings.warn(
+            "tensor_records(..., mode=...) is deprecated; pass a ModelSpec "
+            "with a FingerprintPolicy instead", DeprecationWarning,
+            stacklevel=2)
+        policy = FingerprintPolicy(mode)
+    return tensor_records_for(ModelSpec(model, policy=policy, shard=shard),
+                              params)
 
 
 class PersistentStore:
@@ -451,11 +601,27 @@ class HostTensorStore:
     def unpinned_nbytes(self) -> int:
         return self._nbytes - self._pinned_nbytes
 
+    def snapshot(self) -> HostStoreStats:
+        """Typed counter snapshot (repro.stats schema, DESIGN.md §17) —
+        the same shape `SimHostCache.snapshot` fills on the cost plane."""
+        return HostStoreStats(
+            resident_bytes=self._nbytes,
+            pinned_bytes=self._pinned_nbytes,
+            leaves_stored=self.leaves_stored,
+            evictions=self.evictions,
+            bytes_spilled=self.bytes_spilled,
+            promotions=self.promotions,
+            expirations=self.expirations,
+            read_retries=self.read_retries,
+            quarantines=self.quarantines,
+            pressure_evictions=self.pressure_evictions)
 
-def spec_records(model_id: str, cfg, *, shard: str = "") -> list[TensorRecord]:
+
+def spec_records(model: Union[ModelSpec, str], cfg, *,
+                 shard: str = "") -> list[TensorRecord]:
     """Tensor records from config alone (no allocation) via eval_shape."""
     from repro.models.api import build_model
 
-    model = build_model(cfg)
-    tree = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
-    return tensor_records(model_id, tree, shard=shard)
+    m = build_model(cfg)
+    tree = jax.eval_shape(lambda k: m.init(k), jax.random.PRNGKey(0))
+    return tensor_records(model, tree, shard=shard)

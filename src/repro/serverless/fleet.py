@@ -49,13 +49,16 @@ import random
 import time as _time
 from typing import Optional, Sequence
 
-from repro.core.costmodel import Hardware, PhaseCosts, paper_l40
+from repro.core.costmodel import Hardware, PhaseCosts, paper_l40, unique_bytes
+from repro.core.engine_api import LoadRequest, submit_load
 from repro.core.faults import FaultInjector
 from repro.core.hostcache import SimHostCache
 from repro.core.reuse_store import LoadReport, ReuseStore
 from repro.core.scheduler import ScheduleEntry, affinity_schedule
-from repro.core.trace import Request, SimModel, synthetic_tensor_sizes
-from repro.models.tensors import TensorRecord
+from repro.core.trace import (Request, SimModel, synthetic_tensor_sizes,
+                              synthetic_variant_records)
+from repro.models.tensors import ModelSpec, TensorRecord, VariantSpec
+from repro.stats import FleetStats
 from repro.serverless.gateway import (MetricsSink, TTFTRecord,
                                       make_prefill_batch)
 from repro.serverless.lifecycle import LifecycleManager, make_keep_alive
@@ -94,8 +97,13 @@ class ModeledEngine:
         self.crashes = 0
 
     # ------------------------------------------------------ engine protocol
-    def register(self, model_id: str, records: Sequence[TensorRecord]):
-        self.models[model_id] = list(records)
+    def register(self, model: ModelSpec | str,
+                 records: Sequence[TensorRecord]):
+        """Register a model under a `ModelSpec` identity (a bare id means
+        identity policy) — the records are pre-fingerprinted on this plane,
+        so the spec's role here is the store's sharer/dedup registry."""
+        spec = self.store.register_model(model)
+        self.models[spec.model_id] = list(records)
 
     def records_of(self, model_id: str) -> list[TensorRecord]:
         return self.models[model_id]
@@ -295,7 +303,9 @@ class FleetGateway:
         return self.nodes[0].engine.records_of(model_id)
 
     def _bytes(self, model_id: str) -> int:
-        return sum(r.nbytes for r in self._records(model_id))
+        # deduped footprint (DESIGN.md §17): each fingerprint counted once —
+        # identical to sum(nbytes) whenever no fingerprint repeats
+        return unique_bytes(self._records(model_id))
 
     def _find_warm(self, model_id: str) -> Optional[EngineNode]:
         for n in self.nodes:
@@ -693,7 +703,7 @@ class FleetGateway:
 
         eng = node.engine
         t0 = _time.perf_counter()
-        eng.load(req.model_id, now=now)
+        submit_load(eng, LoadRequest(req.model_id, now=now))
         load_s = _time.perf_counter() - t0
         stats = eng.last_load
         load_s = max(0.0, load_s - stats.init_seconds
@@ -719,25 +729,10 @@ class FleetGateway:
         return rec, service_s
 
     # -------------------------------------------------------------- summary
-    def summary(self) -> dict:
-        out = self.sink.summary()
-        ls = self.lifecycle.summary()
-        out["expirations"] = ls["expirations"]
-        out["prewarms"] = self.prewarms
-        out["prewarm_hits"] = self.prewarm_hits
-        out["prewarm_wasted"] = self.prewarm_wasted
-        out["pressure_evictions"] = sum(
-            getattr(n.engine.store.host_cache, "pressure_evictions", 0)
-            for n in self.nodes
-            if getattr(n.engine.store, "host_cache", None) is not None)
-        # chaos ledger (DESIGN.md §15): zero-valued absent faults, so
-        # fault-free summaries stay bit-identical to their pre-chaos selves
-        out["dropped_requests"] = self._arrivals - len(self.sink.records)
-        out["engine_crashes"] = self.engine_crashes
-        out["engine_recoveries"] = self.engine_recoveries
-        out["requests_redriven"] = self.requests_redriven
-        out["requests_interrupted"] = self.requests_interrupted
-        out["migrations"] = self.migrations
+    def stats(self) -> FleetStats:
+        """Typed control-plane snapshot (repro.stats schema).  The chaos
+        ledger zero-values absent faults, so fault-free snapshots stay
+        bit-identical to their pre-chaos selves (DESIGN.md §15)."""
         fc: dict[str, float] = {}
         for n in self.nodes:  # per-engine injectors: summing never doubles
             fs = getattr(n.engine, "fault_summary", None)
@@ -750,8 +745,28 @@ class FleetGateway:
                         fc[key] = fc.get(key, 0) + c
                 else:
                     fc[k] = fc.get(k, 0) + v
-        out["fault_counters"] = fc
-        return out
+        return FleetStats(
+            expirations=self.lifecycle.summary()["expirations"],
+            prewarms=self.prewarms,
+            prewarm_hits=self.prewarm_hits,
+            prewarm_wasted=self.prewarm_wasted,
+            pressure_evictions=sum(
+                getattr(n.engine.store.host_cache, "pressure_evictions", 0)
+                for n in self.nodes
+                if getattr(n.engine.store, "host_cache", None) is not None),
+            dropped_requests=self._arrivals - len(self.sink.records),
+            engine_crashes=self.engine_crashes,
+            engine_recoveries=self.engine_recoveries,
+            requests_redriven=self.requests_redriven,
+            requests_interrupted=self.requests_interrupted,
+            migrations=self.migrations,
+            fault_counters=fc)
+
+    def summary(self) -> dict:
+        """Sink percentiles + the typed `stats()` snapshot, one flat dict.
+        Key names ARE the `FleetStats` field names — the schema cannot
+        drift from the typed surface (DESIGN.md §17)."""
+        return {**self.sink.summary(), **self.stats().as_dict()}
 
 
 class ModeledFleetGateway(FleetGateway):
@@ -761,7 +776,11 @@ class ModeledFleetGateway(FleetGateway):
 
     Builds its own engines from ``SimModel``s the way ``ClusterSim`` does
     (seeded ``synthetic_tensor_sizes`` records, one pool + host tier per
-    engine)."""
+    engine).  ``variants`` adds fine-tune variant fleets (DESIGN.md §17):
+    each ``VariantSpec`` becomes a routable model whose records share its
+    base's fingerprints outside the delta leaves, so the affinity score
+    steers it toward base-warm engines and a cold start moves only delta
+    bytes."""
 
     def __init__(self, models: Sequence[SimModel], *, n_engines: int = 2,
                  pool_bytes: int, host_cache_bytes: Optional[int] = None,
@@ -771,11 +790,13 @@ class ModeledFleetGateway(FleetGateway):
                  prewarm: bool = True, prewarm_min_benefit: float = 0.0,
                  policy: str = "eq3+queue",
                  faults: Optional[Sequence[FaultInjector]] = None,
-                 migrate: bool = False, migrate_replay_tokens: int = 4):
+                 migrate: bool = False, migrate_replay_tokens: int = 4,
+                 variants: Sequence[VariantSpec] = ()):
         hw = hw or paper_l40()
         costs = PhaseCosts(hw)
         rng = random.Random(seed + 17)  # the sim's record-size convention
         records: dict[str, list[TensorRecord]] = {}
+        specs: dict[str, ModelSpec | str] = {}
         for m in models:
             sizes = synthetic_tensor_sizes(m, rng)
             records[m.model_id] = [
@@ -783,6 +804,17 @@ class ModeledFleetGateway(FleetGateway):
                              dtype="bfloat16",
                              fingerprint=f"{m.model_id}/t{i}", nbytes=s)
                 for i, s in enumerate(sizes)]
+            specs[m.model_id] = m.model_id
+        sims = {m.model_id: m for m in models}
+        for v in variants:
+            assert v.base_id in records, f"unknown base {v.base_id}"
+            records[v.variant_id] = synthetic_variant_records(
+                v, records[v.base_id])
+            specs[v.variant_id] = v.to_model_spec()
+            b = sims[v.base_id]  # same geometry/decode rates as the base
+            sims[v.variant_id] = SimModel(v.variant_id, b.params,
+                                          b.n_tensors, b.alpha,
+                                          b.kv_bytes_per_token)
         if faults is not None:
             assert len(faults) == n_engines, "one injector per engine"
         engines = []
@@ -792,14 +824,14 @@ class ModeledFleetGateway(FleetGateway):
                                 host_keep_alive_s=host_keep_alive_s,
                                 faults=faults[i] if faults else None)
             for mid, recs in records.items():
-                eng.register(mid, recs)
+                eng.register(specs[mid], recs)
             engines.append(eng)
         super().__init__(engines, keep_alive=keep_alive, hw=hw,
                          prefetch=prefetch, prewarm=prewarm,
                          prewarm_min_benefit=prewarm_min_benefit,
                          policy=policy, migrate=migrate,
                          migrate_replay_tokens=migrate_replay_tokens)
-        self._sim = {m.model_id: m for m in models}
+        self._sim = sims
 
     def _migration_meta(self, req: Request) -> dict:
         """Modeled plane knows the decode's KV footprint up front: the
@@ -820,7 +852,7 @@ class ModeledFleetGateway(FleetGateway):
         # the load lands after queueing + init on the trace clock, so a
         # hint fired at routing time has (queue_s + init_s) of elapsed
         # background read when `take_prefetch` prices the overlap
-        rep = eng.load(req.model_id, now=start + init_s)
+        rep = submit_load(eng, LoadRequest(req.model_id, now=start + init_s))
         load_s = rep.load_seconds + rep.merge_seconds
         profile_s = self.costs.profile_time(m.bytes) if cold else 0.0
         prefill_s = self.costs.prefill_time(m.params, req.prompt_tokens,

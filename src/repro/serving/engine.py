@@ -52,8 +52,10 @@ from repro.core.reuse_store import LoadReport, ReuseStore
 from repro.kernels import ops as kops
 from repro.models import build_model, lm
 from repro.models.common import rms_norm
-from repro.models.tensors import (HostTensorStore, PersistentStore, StoreError,
-                                  TensorRecord, tensor_records)
+from repro.models.tensors import (HostTensorStore, ModelSpec, PersistentStore,
+                                  StoreError, TensorRecord, VariantSpec,
+                                  leaf_path, tensor_records)
+from repro.stats import snapshot_dict
 
 log = logging.getLogger(__name__)
 
@@ -78,6 +80,9 @@ class RegisteredModel:
     records: list[TensorRecord]
     init_fn: Callable[[], Any]  # materializes the full param tree (once, ever)
     treedef: Any  # pytree structure matching `records` leaf order
+    # identity policy the records were fingerprinted under (DESIGN.md §17);
+    # None only for pre-§17 constructions that bypassed register_model
+    spec: Optional[ModelSpec] = None
 
 
 @dataclass
@@ -126,6 +131,11 @@ class DataLoadStats:
     h2d_retries: int = 0  # failed h2d chunks retried
     transfer_timeouts: int = 0  # chunked-transfer deadline hits (retried)
     prefetch_failover: bool = False  # joined a dead/failed hint, went inline
+
+    def as_dict(self) -> dict[str, Any]:
+        """Stable field->value snapshot (repro.stats convention): the one
+        serialization benchmarks/report sinks consume."""
+        return snapshot_dict(self)
 
 
 @dataclass
@@ -702,19 +712,66 @@ class Engine:
         self.last_load: Optional[DataLoadStats] = None
 
     # ------------------------------------------------------------- registry
-    def register(self, model_id: str, cfg: ModelConfig,
-                 init_fn: Optional[Callable[[], Any]] = None):
+    def register_model(self, spec: ModelSpec | str, cfg: ModelConfig,
+                       init_fn: Optional[Callable[[], Any]] = None):
+        """Register a model under an explicit identity `spec` (DESIGN.md
+        §17).  The spec's `FingerprintPolicy` decides how the param tree's
+        leaves are fingerprinted — and therefore which leaves dedup against
+        other registered models in the device pool, host tier and
+        persistent store.  Registration runs under `jax.eval_shape`, so
+        CONTENT fingerprints fall back to identity here (no bytes exist
+        yet); variants use CONTENT_BASE_HINT, which needs only the base id.
+        A bare string means identity policy (the pre-§17 behavior)."""
+        spec = spec if isinstance(spec, ModelSpec) else ModelSpec(str(spec))
         model = build_model(cfg)
         if init_fn is None:
             # stable digest, NOT hash(): PYTHONHASHSEED randomizes str hashes
             # across processes, which would make default params (and any
             # content fingerprints derived from them) nondeterministic
-            seed = zlib.crc32(model_id.encode()) & 0xFFFF
+            seed = zlib.crc32(spec.model_id.encode()) & 0xFFFF
             init_fn = lambda: model.init(jax.random.PRNGKey(seed))
         tree = jax.eval_shape(init_fn)
-        records = tensor_records(model_id, tree)
-        self.models[model_id] = RegisteredModel(model_id, cfg, records, init_fn,
-                                                jax.tree.structure(tree))
+        records = tensor_records(spec, tree)
+        self.store.register_model(spec)
+        self.models[spec.model_id] = RegisteredModel(
+            spec.model_id, cfg, records, init_fn,
+            jax.tree.structure(tree), spec=spec)
+
+    def register(self, model_id: str, cfg: ModelConfig,
+                 init_fn: Optional[Callable[[], Any]] = None):
+        """Identity-policy shim for the pre-§17 call shape."""
+        self.register_model(ModelSpec(model_id), cfg, init_fn)
+
+    def register_variant(self, vspec: VariantSpec,
+                         cfg: Optional[ModelConfig] = None,
+                         init_fn: Optional[Callable[[], Any]] = None):
+        """Register a fine-tune variant of an already-registered base
+        (DESIGN.md §17): leaves outside `vspec.delta_names` carry the
+        BASE's fingerprints, so a load of the variant hits them in
+        whatever tier the base (or a sibling variant) left them, and only
+        the delta leaves move.  Without an explicit `init_fn` the variant's
+        params are the base's with the delta leaves deterministically
+        perturbed — shared leaves stay bit-identical to the base, which is
+        what makes cross-model dedup CORRECT, not just cheap."""
+        base = self.models[vspec.base_id]
+        spec = vspec.to_model_spec()
+        if init_fn is None:
+            base_init = base.init_fn
+
+            def init_fn(_spec=spec, _base_init=base_init):
+                def perturb(path, leaf):
+                    name = leaf_path(path)
+                    if (not _spec.is_delta(name)
+                            or not jnp.issubdtype(leaf.dtype, jnp.inexact)):
+                        return leaf
+                    seed = zlib.crc32(f"{_spec.model_id}|{name}".encode()) & 0xFFFF
+                    noise = jax.random.normal(jax.random.PRNGKey(seed),
+                                              leaf.shape, leaf.dtype)
+                    return leaf + jnp.asarray(0.02, leaf.dtype) * noise
+
+                return jax.tree_util.tree_map_with_path(perturb, _base_init())
+        self.register_model(spec, cfg if cfg is not None else base.cfg,
+                            init_fn)
 
     def records_of(self, model_id: str) -> list[TensorRecord]:
         """The model's tensor records (the fleet-protocol accessor shared
@@ -722,7 +779,8 @@ class Engine:
         return self.models[model_id].records
 
     # ------------------------------------------------------------------ load
-    def load(self, model_id: str, *, now: float = 0.0) -> LoadReport:
+    def load(self, model_id: str, *, now: float = 0.0,
+             overlap_s: float = 0.0) -> LoadReport:
         """Tensor-granular three-way load over the tiered model store.
 
         Every record resolves through exactly one path (DESIGN.md §11):
@@ -742,9 +800,15 @@ class Engine:
         for the in-flight promotion instead of re-reading the store, so the
         tensors it covered resolve as host hits and only the un-hidden tail
         of the store read shows up in wall time.
+        `overlap_s` is the modeled hideable window forwarded to the cost
+        plane's `ReuseStore.load_model` (the `LoadableEngine` protocol
+        shares one load signature across both planes); the data plane's own
+        overlap is the real prefetch join above, so it is not re-applied
+        here.
         """
         reg = self.models[model_id]
-        report = self.store.load_model(model_id, reg.records, now=now)
+        report = self.store.load_model(model_id, reg.records, now=now,
+                                       overlap_s=overlap_s)
         stats = DataLoadStats()
         t0 = _time.perf_counter()
         job = self.prefetcher.take(model_id)
@@ -812,13 +876,18 @@ class Engine:
 
     def _load_tensors(self, reg: RegisteredModel, stats: DataLoadStats):
         # tensors whose device buffer is absent (store misses, plus any buffer
-        # dropped by sync_evictions that the store re-admitted)
+        # dropped by sync_evictions that the store re-admitted); deduped by
+        # fingerprint — tied weights under a content policy move ONCE and
+        # later occurrences resolve off the same buffer (counted as device
+        # hits, matching the cost plane's hit-by-admission accounting)
         to_move = []
+        moving: set[str] = set()
         for r in reg.records:
-            if r.fingerprint in self._tensors:
+            if r.fingerprint in self._tensors or r.fingerprint in moving:
                 stats.tensors_device_hit += 1
                 stats.bytes_device_hit += r.nbytes
             else:
+                moving.add(r.fingerprint)
                 to_move.append(r)
         if to_move:
             with self._store_lock:

@@ -5,8 +5,8 @@ When the real package is unavailable, the property-test modules
 against seeded-random sampling instead of aborting the whole tier-1 run at
 collection.  Only the API surface those modules use is implemented:
 
-    given, settings, strategies.{integers, floats, booleans, lists, tuples,
-    sampled_from, randoms, composite}
+    given, settings, strategies.{integers, floats, booleans, binary, lists,
+    tuples, sampled_from, randoms, composite}
 
 Examples are drawn from a per-test deterministic RNG, so runs are
 reproducible; there is no shrinking and no database.  If real `hypothesis`
@@ -43,15 +43,33 @@ def booleans() -> SearchStrategy:
     return SearchStrategy(lambda rng: rng.random() < 0.5)
 
 
+def binary(*, min_size: int = 0, max_size: int = 10) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randbytes(
+        rng.randint(min_size, max_size)))
+
+
 def sampled_from(elements) -> SearchStrategy:
     elements = list(elements)
     return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))])
 
 
 def lists(elements: SearchStrategy, *, min_size: int = 0,
-          max_size: int = 10) -> SearchStrategy:
-    return SearchStrategy(lambda rng: [
-        elements.example(rng) for _ in range(rng.randint(min_size, max_size))])
+          max_size: int = 10, unique: bool = False) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        if not unique:
+            return [elements.example(rng) for _ in range(n)]
+        out, seen = [], set()
+        for _ in range(50 * max(n, 1)):  # bounded rejection sampling
+            if len(out) >= n:
+                break
+            x = elements.example(rng)
+            if x not in seen:
+                seen.add(x)
+                out.append(x)
+        assert len(out) >= min_size, "shim could not draw enough unique items"
+        return out
+    return SearchStrategy(draw)
 
 
 def tuples(*strategies: SearchStrategy) -> SearchStrategy:
@@ -97,8 +115,8 @@ def given(*strategies: SearchStrategy):
 
 def _build_strategies_module() -> types.ModuleType:
     mod = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
-                 "tuples", "randoms", "composite", "SearchStrategy"):
+    for name in ("integers", "floats", "booleans", "binary", "sampled_from",
+                 "lists", "tuples", "randoms", "composite", "SearchStrategy"):
         setattr(mod, name, globals()[name])
     return mod
 

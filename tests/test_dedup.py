@@ -1,0 +1,292 @@
+"""Cross-model tensor dedup + the redesigned model-identity API (§17).
+
+Property and unit tests for the content-capable fingerprint plane:
+
+  * `FingerprintPolicy` / `ModelSpec` / `VariantSpec` — validation, the
+    deprecation shim for the old stringly ``mode=`` kwarg, and the
+    fingerprint algebra (identical bytes dedup across model ids, distinct
+    bytes never collide, base-hint sharing without bytes);
+  * `ReuseStore` sharer refcounts — a tensor shared by several models is
+    admitted once, freed only when its LAST sharer departs, and never
+    evicted while any sharer is active;
+  * the `LoadableEngine` protocol — both engine flavours satisfy one
+    load-request shape (`submit_load`);
+  * real-plane variant loads — delta-only h2d with bit-identical shared
+    leaves (decode bit-identity is benchmarks/fig19_dedup.py's gate; no
+    decode compiles here, this module is in the fast subset).
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.costmodel import PhaseCosts, paper_l40, unique_bytes
+from repro.core.engine_api import LoadableEngine, LoadRequest, submit_load
+from repro.core.reuse_store import ReuseStore
+from repro.core.trace import SimModel, synthetic_variant_records
+from repro.models.tensors import (FingerprintPolicy, ModelSpec, TensorRecord,
+                                  VariantSpec, content_fingerprint,
+                                  fingerprint_of, tensor_records)
+
+
+def _recs(model_id, sizes, *, shared_with=None, delta=()):
+    """Identity records for a synthetic model; `shared_with` borrows the
+    other model's fingerprints outside `delta` (the §17 record shape)."""
+    out = []
+    for i, s in enumerate(sizes):
+        name = f"t{i}"
+        if shared_with is not None and name not in delta:
+            fp = shared_with[i].fingerprint
+        else:
+            fp = f"{model_id}/{name}"
+        out.append(TensorRecord(name=f"{model_id}/{name}", shape=(s,),
+                                dtype="uint8", fingerprint=fp, nbytes=s))
+    return out
+
+
+# ---------------------------------------------------------- fingerprints
+@given(st.binary(min_size=1, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_content_fingerprints_dedup_across_model_ids(raw):
+    """The SAME bytes fingerprint identically no matter which model id
+    carries them — that equality IS the cross-model dedup mechanism."""
+    arr = np.frombuffer(raw, dtype=np.uint8)
+    a = ModelSpec("modelA", FingerprintPolicy.CONTENT)
+    b = ModelSpec("modelB", FingerprintPolicy.CONTENT)
+    fa = a.leaf_fingerprint("w", arr.shape, arr.dtype, leaf=arr)
+    fb = b.leaf_fingerprint("w", arr.shape, arr.dtype, leaf=arr)
+    assert fa == fb == content_fingerprint(arr)
+    # identity policy keeps them distinct (the pre-§17 behavior)
+    ia = ModelSpec("modelA").leaf_fingerprint("w", arr.shape, arr.dtype)
+    ib = ModelSpec("modelB").leaf_fingerprint("w", arr.shape, arr.dtype)
+    assert ia != ib
+
+
+@given(st.lists(st.binary(min_size=1, max_size=48), min_size=2, max_size=12,
+                unique=True))
+@settings(max_examples=40, deadline=None)
+def test_content_fingerprints_never_collide_for_distinct_bytes(blobs):
+    arrs = [np.frombuffer(b, dtype=np.uint8) for b in blobs]
+    fps = [content_fingerprint(a) for a in arrs]
+    assert len(set(fps)) == len(arrs)
+
+
+def test_base_hint_shares_without_bytes():
+    """CONTENT_BASE_HINT derives shared fingerprints from the BASE's
+    identity — no leaf bytes needed, which is what makes registration
+    under `jax.eval_shape` work."""
+    v = VariantSpec("var", "base", ("t1",)).to_model_spec()
+    shared = v.leaf_fingerprint("t0", (4,), "uint8")
+    assert shared == fingerprint_of("base", "t0", (4,), "uint8")
+    delta = v.leaf_fingerprint("t1", (4,), "uint8")
+    assert delta == fingerprint_of("var", "t1", (4,), "uint8")
+    assert shared != delta
+
+
+def test_delta_patterns_match_whole_segments():
+    """`delta_names` match contiguous NAME segments — "t1" must not
+    swallow "t10", and a nested pattern anchors anywhere in the path."""
+    spec = VariantSpec("v", "b", ("t1", "attn/wq")).to_model_spec()
+    assert spec.is_delta("t1")
+    assert spec.is_delta("segments/0/t1")
+    assert not spec.is_delta("t10")
+    assert not spec.is_delta("at1")
+    assert spec.is_delta("segments/0/attn/wq")
+    assert not spec.is_delta("attn/wq2")
+
+
+# --------------------------------------------------- ModelSpec validation
+def test_model_spec_validation():
+    with pytest.raises(ValueError):  # base hint needs a base
+        ModelSpec("m", FingerprintPolicy.CONTENT_BASE_HINT)
+    with pytest.raises(ValueError):  # base of itself
+        ModelSpec("m", FingerprintPolicy.CONTENT_BASE_HINT, base_id="m")
+    with pytest.raises(ValueError):  # base_id is base-hint-only
+        ModelSpec("m", FingerprintPolicy.CONTENT, base_id="b")
+    spec = ModelSpec("m", "content")  # strings coerce to the enum
+    assert spec.policy is FingerprintPolicy.CONTENT
+
+
+def test_mode_kwarg_shim_warns_and_maps():
+    params = {"w": np.arange(6, dtype=np.uint8)}
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        recs = tensor_records("m", params, mode="content")
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert recs[0].fingerprint == content_fingerprint(params["w"])
+    with pytest.raises(TypeError):  # a spec carries its own policy
+        tensor_records(ModelSpec("m"), params, mode="content")
+    # no warning on the spec path
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        tensor_records(ModelSpec("m", FingerprintPolicy.CONTENT), params)
+    assert not caught
+
+
+def test_unique_bytes_counts_each_fingerprint_once():
+    base = _recs("b", [10, 20, 30])
+    assert unique_bytes(base) == 60
+    tied = base + [base[0]]  # tied weights: same fp twice
+    assert unique_bytes(tied) == 60 and sum(r.nbytes for r in tied) == 70
+
+
+# ------------------------------------------------- ReuseStore sharer plane
+def _store(cap=1000):
+    return ReuseStore(cap, PhaseCosts(paper_l40()))
+
+
+def test_shared_tensor_admitted_once_freed_last():
+    st_ = _store()
+    base = _recs("b", [100, 100, 100])
+    var = _recs("v", [100, 100, 100], shared_with=base, delta=("t2",))
+    st_.load_model("b", base, now=0.0)
+    rep = st_.load_model("v", var, now=1.0)
+    # only the delta moved; shared leaves were hits by sharing
+    assert rep.bytes_transferred == 100 and rep.bytes_hit == 200
+    ds = st_.dedup_stats()
+    assert ds.shared_tensors == 2 and ds.shared_bytes == 200
+    assert ds.unique_bytes == 400 and ds.logical_bytes == 600
+    assert ds.sharer_orphans == 0
+    # physical residency dedups; the per-model view counts every sharer
+    assert st_.resident_bytes() == 400
+    assert st_.resident_bytes("b") == 300 and st_.resident_bytes("v") == 300
+    # dropping one sharer frees ONLY its exclusive bytes
+    st_.release("b")
+    assert st_.drop_model("b") == 100
+    assert st_.resident_bytes("v") == 300  # the variant lost nothing
+    assert st_.dedup_stats().sharer_orphans == 0
+    st_.release("v")
+    assert st_.drop_model("v") == 300  # last sharer: shared leaves freed
+    assert st_.resident_bytes() == 0 and not st_.tensor_map
+
+
+def test_eviction_never_victimizes_active_sharers():
+    """Pressure from a third model must not evict leaves an ACTIVE model
+    still shares, even when the other sharer was released."""
+    st_ = _store(cap=500)
+    base = _recs("b", [150, 150])
+    var = _recs("v", [150, 150], shared_with=base, delta=("t1",))
+    st_.load_model("b", base, now=0.0)
+    st_.load_model("v", var, now=1.0)
+    st_.release("b")  # v stays active and shares t0 with b
+    other = _recs("o", [140])
+    st_.load_model("o", other, now=2.0)  # forces eviction
+    live = set(st_.tensor_map)
+    assert base[0].fingerprint in live, "evicted a leaf an active model shares"
+    assert var[1].fingerprint in live
+    assert st_.dedup_stats().sharer_orphans == 0
+
+
+@given(st.lists(st.sampled_from(["load_b", "load_v", "rel_b", "rel_v",
+                                 "drop_b", "drop_v", "press"]),
+                min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_sharer_refcounts_survive_interleaving(script):
+    """Random interleavings of load/release/drop/pressure over two models
+    sharing leaves: no resident tensor ever has an empty sharer set, the
+    pool's physical bytes always equal the deduped sum of residents, and
+    an active model's records stay resident."""
+    st_ = _store(cap=700)
+    base = _recs("b", [100, 100, 100])
+    var = _recs("v", [100, 100, 100], shared_with=base, delta=("t2",))
+    recs = {"b": base, "v": var}
+    active = set()
+    for op in script:
+        if op == "press":
+            st_.load_model("o", _recs("o", [150]), now=2.0)
+            st_.release("o")
+            st_.drop_model("o")
+        elif op.startswith("load"):
+            m = op[-1]
+            st_.load_model(m, recs[m], now=1.0)
+            active.add(m)
+        elif op.startswith("rel"):
+            st_.release(op[-1])
+            active.discard(op[-1])
+        else:
+            m = op[-1]
+            st_.release(m)
+            st_.drop_model(m)
+            active.discard(m)
+        ds = st_.dedup_stats()
+        assert ds.sharer_orphans == 0
+        assert ds.unique_bytes == sum(e.record.nbytes
+                                      for e in st_.tensor_map.values())
+        live = set(st_.tensor_map)
+        for m in active:
+            assert all(r.fingerprint in live for r in recs[m]), (op, m)
+
+
+def test_synthetic_variant_records_share_base_fps():
+    import random
+
+    from repro.core.trace import synthetic_tensor_sizes
+
+    m = SimModel("baseS", 1e6, 8)
+    sizes = synthetic_tensor_sizes(m, random.Random(3))
+    base = [TensorRecord(name=f"baseS/t{i}", shape=(s,), dtype="uint8",
+                         fingerprint=f"baseS/t{i}", nbytes=s)
+            for i, s in enumerate(sizes)]
+    v = VariantSpec("varS", "baseS", ("t2", "t3"))
+    recs = synthetic_variant_records(v, base)
+    assert len(recs) == len(base)
+    for b, r in zip(base, recs):
+        leaf = b.name.split("/", 1)[1]
+        assert r.name == f"varS/{leaf}" and r.nbytes == b.nbytes
+        if leaf in ("t2", "t3"):
+            assert r.fingerprint == f"varS/{leaf}"
+        else:
+            assert r.fingerprint == b.fingerprint
+
+
+# ------------------------------------------------ one load protocol, §17
+def test_both_engine_flavours_satisfy_loadable_engine():
+    from repro.serverless.fleet import ModeledEngine
+
+    me = ModeledEngine("e0", 10_000, costs=PhaseCosts(paper_l40()))
+    assert isinstance(me, LoadableEngine)
+    me.register(ModelSpec("m"), _recs("m", [50, 50]))
+    rep = submit_load(me, LoadRequest("m", now=0.0))
+    assert rep.bytes_transferred == 100
+    rep2 = submit_load(me, LoadRequest("m", now=1.0, overlap_s=2.0))
+    assert rep2.bytes_transferred == 0  # warm: everything reused
+
+
+def test_real_engine_satisfies_loadable_engine_and_variant_loads():
+    import jax
+
+    from repro.configs import all_configs
+    from repro.serving.engine import Engine
+
+    cfg = dataclasses.replace(all_configs()["llama3.2-1b"].smoke(),
+                              num_layers=2, vocab_size=512)
+    eng = Engine(256 << 20, engine_id="e0")
+    assert isinstance(eng, LoadableEngine)
+    eng.register("base", cfg)
+    names = [r.name.split("/", 1)[1] for r in eng.records_of("base")]
+    vspec = VariantSpec("var", "base", (names[0],))
+    eng.register_variant(vspec)
+    assert eng.models["var"].spec.policy \
+        is FingerprintPolicy.CONTENT_BASE_HINT
+    submit_load(eng, LoadRequest("base"))
+    rep = submit_load(eng, LoadRequest("var", now=1.0))
+    full = sum(r.nbytes for r in eng.records_of("var"))
+    assert 0 < rep.bytes_transferred < full  # delta only
+    # shared leaves are bit-identical; exactly one delta leaf differs
+    pb = jax.tree.leaves(eng.params_of("base"))
+    pv = jax.tree.leaves(eng.params_of("var"))
+    same = sum(bool((a == b).all()) for a, b in zip(pb, pv))
+    assert same == len(pb) - 1
+    ds = eng.store.dedup_stats()
+    assert ds.shared_tensors == len(pb) - 1 and ds.sharer_orphans == 0
+    # the engine-level stats surfaces carry the typed schema
+    assert eng.last_load.as_dict()["bytes_device_hit"] >= 0
+    # dropping the variant must not orphan or move the base
+    eng.drop_device_copies("var")
+    assert eng.store.dedup_stats().sharer_orphans == 0
+    rep_b = eng.load("base", now=2.0)
+    assert rep_b.bytes_transferred == 0
+    eng.close()

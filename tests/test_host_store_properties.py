@@ -446,3 +446,66 @@ def test_pin_safety_when_prefetch_promotion_faults():
     # be fully spilled (pinned bytes were the only thing keeping it full)
     assert eng.host_store.pinned_nbytes() == 0
     eng.close()
+
+
+# ------------------------- cross-model dedup: host pins count sharers (§17)
+def test_shared_leaf_pins_count_sharers_under_interleaved_churn():
+    """A base model and a variant share every non-delta content fingerprint.
+    `HostTensorStore.pins` is a refcount and `Engine._host_pins` tracks
+    per-MODEL pin sets, so the shared leaves carry one pin per active
+    sharer: interleaved load / release / drop / tenant-pressure churn by one
+    model must never spill (or strand) a shared leaf the other still pins.
+    Host cap 0 makes the invariant crisp — a fingerprint is host-resident
+    iff somebody pins it."""
+    import dataclasses
+
+    from repro.configs import all_configs
+    from repro.models.tensors import VariantSpec
+    from repro.serving.engine import Engine
+
+    cfg = dataclasses.replace(all_configs()["llama3.2-1b"].smoke(),
+                              num_layers=2, vocab_size=512)
+    eng = Engine(256 << 20, host_cache_bytes=0)
+    eng.register("base", cfg)
+    leaf = eng.records_of("base")[0].name.split("/", 1)[1]
+    eng.register_variant(VariantSpec("var", "base", (leaf,)))
+    shared = {r.fingerprint for r in eng.records_of("base")} \
+        & {r.fingerprint for r in eng.records_of("var")}
+    assert shared  # every non-delta leaf fingerprints under the base
+
+    def pinned(fp):
+        return eng.host_store._pins.get(fp, 0)
+
+    eng.load("base")
+    eng.load("var", now=1.0)
+    for fp in shared:  # one pin per sharer, not per first owner
+        assert pinned(fp) == 2
+    # four rounds of adversarial interleaving; each round releases/drops a
+    # DIFFERENT side first and squeezes the host tier in between
+    for i in range(4):
+        first, second = ("base", "var") if i % 2 else ("var", "base")
+        eng.drop_device_copies(first)  # releases + evicts first's exclusives
+        assert eng.set_host_capacity(0) >= 0  # pressure: pinned are exempt
+        for fp in shared:
+            # the surviving sharer's pin holds every shared leaf host-side
+            assert pinned(fp) == 1 and fp in eng.host_store, fp
+        assert eng.store.dedup_stats().sharer_orphans == 0
+        # reload of the dropped side re-pins; shared leaves never left
+        rep = eng.load(first, now=2.0 + i)
+        for fp in shared:
+            assert pinned(fp) == 2
+        assert rep.bytes_transferred < rep.bytes_total  # shared were hits
+        eng.release(second)
+        for fp in shared:
+            assert pinned(fp) == 1 and fp in eng.host_store, fp
+        eng.load(second, now=3.0 + i)
+    # both sharers gone: the last unpin releases the shared leaves too (cap
+    # 0 spills them), and nothing is left pinned or orphaned
+    eng.release("base")
+    eng.release("var")
+    for fp in shared:
+        assert pinned(fp) == 0 and fp not in eng.host_store, fp
+        assert eng.host_store.resolvable(fp)  # spilled, not lost
+    assert eng.host_store.pinned_nbytes() == 0
+    assert eng.store.dedup_stats().sharer_orphans == 0
+    eng.close()

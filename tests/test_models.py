@@ -120,19 +120,20 @@ def test_chunked_attention_equals_dense():
 
 
 def test_content_fingerprint_dedup_across_models():
-    """Beyond-paper: content-mode fingerprints let two model IDs share
-    identical base tensors in the pool (fine-tune dedup)."""
-    import numpy as np
-
-    from repro.models.tensors import tensor_records
+    """Content-policy fingerprints let two model IDs share identical base
+    tensors in the pool (fine-tune dedup, DESIGN.md §17)."""
+    from repro.models.tensors import (FingerprintPolicy, ModelSpec,
+                                      tensor_records)
 
     cfg = all_configs()["llama3.2-1b"].smoke()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    recs_a = tensor_records("model-a", params, mode="content")
-    recs_b = tensor_records("model-b", params, mode="content")
+    recs_a = tensor_records(ModelSpec("model-a", FingerprintPolicy.CONTENT),
+                            params)
+    recs_b = tensor_records(ModelSpec("model-b", FingerprintPolicy.CONTENT),
+                            params)
     assert [r.fingerprint for r in recs_a] == [r.fingerprint for r in recs_b]
-    # identity mode keeps them distinct
+    # the identity policy keeps them distinct
     ra = tensor_records("model-a", params)
     rb = tensor_records("model-b", params)
     assert all(x.fingerprint != y.fingerprint for x, y in zip(ra, rb))
