@@ -98,7 +98,8 @@ def _fleet_cell(models, trace, keep_alive, pressure, *, prewarm: bool,
     return fg.summary()
 
 
-def _fleet_sweep(models, *, n_requests: int, seed: int) -> dict:
+def _fleet_sweep(models, *, n_requests: int, seed: int,
+                 trace_out: str = "") -> dict:
     """Multi-engine fleet ablation (DESIGN.md §14): predictive pre-warm
     on/off x keep-alive x pressure over a predictable burst workload.
 
@@ -190,11 +191,47 @@ def _fleet_sweep(models, *, n_requests: int, seed: int) -> dict:
          f";cold_gain=x{h['cold_rate_gain_vs_reactive']:.2f}"
          f";p95_gain=x{h['p95_gain_vs_reactive']:.2f}"
          f";hits={h['prewarm_hits']:.0f}/{h['prewarms']:.0f}")
+
+    # ---- traced replay of the headline cell (DESIGN.md §18): re-run
+    # adaptive.prewarm.none with the span tracer attached, assert the
+    # span-accounting identity (every second of reported TTFT is owned by
+    # exactly one phase span) and that tracing itself is a structural
+    # no-op (bit-identical summary), then ship the obs section into the
+    # BENCH entry where check_bench gates it
+    from repro.obs import FlightRecorder, Tracer, obs_stats, write_chrome_trace
+    from repro.serverless import ModeledFleetGateway
+
+    tracer = Tracer(flight=FlightRecorder())
+    fg = ModeledFleetGateway(models, n_engines=2, pool_bytes=pool_bytes,
+                             host_cache_bytes=host_bytes, seed=seed,
+                             keep_alive=keep_alive("adaptive"), prewarm=True,
+                             prewarm_min_benefit=1.0, tracer=tracer)
+    fg.run_trace(trace)
+    assert fg.summary() == prew, \
+        "fleet: attaching the tracer perturbed the headline cell"
+    obs = obs_stats(tracer)
+    assert obs["n_requests"] == n_requests, \
+        f"fleet obs: traced {obs['n_requests']} of {n_requests} requests"
+    assert obs["violations"] == 0 and obs["unattributed_frac"] <= 0.02, \
+        (f"fleet obs: span accounting broke TTFT identity "
+         f"(unattributed={obs['unattributed_frac']:.4f}, "
+         f"violations={obs['violations']})")
+    for phase, ratio in obs["span_cost_ratio"].items():
+        assert math.isfinite(ratio), f"fleet obs: {phase} ratio non-finite"
+    fleet["obs"] = obs
+    emit("fig16.fleet.obs", obs["unattributed_frac"] * 1e6,
+         f"violations={obs['violations']:.0f}"
+         f";events={obs['trace_events']:.0f}"
+         f";dropped={obs['dropped_events']:.0f}")
+    if trace_out:
+        write_chrome_trace(tracer.events(), trace_out)
+        emit("fig16.fleet.trace", float(len(tracer.events())),
+             f"out={trace_out}")
     return fleet
 
 
-def run(*, smoke: bool = False,
-        merge_into: str = "BENCH_fastpath.json") -> dict:
+def run(*, smoke: bool = False, merge_into: str = "BENCH_fastpath.json",
+        trace_out: str = "") -> dict:
     from repro.core.trace import PAPER_MODELS
     from repro.serverless import make_trace, pressure_wave
 
@@ -289,7 +326,9 @@ def run(*, smoke: bool = False,
          f";cold_gain=x{h['cold_rate_gain_vs_zero']:.2f}"
          f";p95_gain=x{h['p95_gain_vs_zero']:.2f}")
 
-    out["fleet"] = _fleet_sweep(models, n_requests=n_requests, seed=seed)
+    out["fleet"] = _fleet_sweep(models, n_requests=n_requests, seed=seed,
+                                trace_out=trace_out)
+    out["obs"] = out["fleet"]["obs"]
 
     if merge_into:
         # attach to the newest BENCH entry (the fig15 run that preceded us
@@ -304,8 +343,10 @@ def run(*, smoke: bool = False,
         if history and history[-1].get("smoke") == smoke \
                 and "serverless" not in history[-1]:
             history[-1]["serverless"] = out
+            history[-1]["obs"] = out["obs"]
         else:
-            history.append({"smoke": smoke, "serverless": out})
+            history.append({"smoke": smoke, "serverless": out,
+                            "obs": out["obs"]})
         with open(merge_into, "w") as f:
             json.dump({"entries": history[-40:]}, f, indent=2)
         emit("fig16.json", 0.0, f"merged={merge_into};entries={len(history)}")
@@ -318,8 +359,11 @@ def main() -> None:
                     help="toy scale for CI (make bench-smoke)")
     ap.add_argument("--merge-into", default="BENCH_fastpath.json",
                     help="BENCH history to attach results to ('' disables)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto trace of the headline fleet cell")
     args = ap.parse_args()
-    run(smoke=args.smoke, merge_into=args.merge_into)
+    run(smoke=args.smoke, merge_into=args.merge_into,
+        trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,10 @@ commits to keeping green and monotone:
     no-dedup baseline, plus the absolute invariants that the variant
     moves strictly fewer bytes than the full model, decodes
     bit-identically, orphans no sharer, and colocates with its base
+  * observability (DESIGN.md §18): the traced replay of the fig16 fleet
+    headline cell must satisfy the span-accounting identity —
+    unattributed_frac <= 2%, zero per-request violations, and every
+    span/cost-model ratio finite
 
 Improvements always pass; a single entry (nothing to compare) passes.
 Threshold override: --threshold or BENCH_REGRESSION_THRESHOLD (fraction,
@@ -232,6 +236,38 @@ def dedup_invariants(entry: dict) -> list[str]:
     return failures
 
 
+def obs_invariants(entry: dict) -> list[str]:
+    """Hard observability gates on ONE entry's obs section (DESIGN.md §18),
+    produced by fig16's traced replay of the headline fleet cell: the
+    span-accounting identity must hold (every second of reported TTFT is
+    owned by exactly one phase span, within the 2% epsilon), the flight
+    recorder must not have dropped events, and every span/cost-model ratio
+    must be finite — a non-finite ratio means a phase span was emitted
+    against a zero or missing prediction, which is a producer bug, not a
+    perf result.  Entries that predate the obs plane pass vacuously."""
+    obs = entry.get("obs", {})
+    if not obs:
+        return []
+    failures = []
+    frac = obs.get("unattributed_frac", 0.0)
+    if not math.isfinite(frac) or frac > 0.02:
+        failures.append(f"obs.unattributed_frac = {frac} (> 2% of TTFT "
+                        "is owned by no phase span)")
+    violations = obs.get("violations", 0)
+    if violations != 0:
+        failures.append(f"obs.violations = {violations} (per-request span "
+                        "accounting identity broke)")
+    for phase, ratio in sorted(obs.get("span_cost_ratio", {}).items()):
+        if not math.isfinite(ratio):
+            failures.append(f"obs.span_cost_ratio.{phase} is non-finite: "
+                            f"{ratio}")
+    for name in ("ttft_total", "attributed_total"):
+        val = obs.get(name, 0.0)
+        if not math.isfinite(val):
+            failures.append(f"obs.{name} is non-finite: {val}")
+    return failures
+
+
 def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
     """Return regression messages (empty = pass)."""
     # absolute rates gate only when both entries ran in the same
@@ -311,6 +347,12 @@ def main() -> int:
     if dedup_failures:
         print("check_bench: FAIL — dedup correctness invariants:")
         for f in dedup_failures:
+            print(f"  - {f}")
+        return 1
+    obs_failures = obs_invariants(cur)
+    if obs_failures:
+        print("check_bench: FAIL — observability invariants:")
+        for f in obs_failures:
             print(f"  - {f}")
         return 1
     prev = next((e for e in reversed(entries[:-1])

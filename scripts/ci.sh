@@ -36,8 +36,13 @@ if [[ "${1:-}" == "bench-smoke" ]]; then
     # cross-model dedup sweep to that same entry, so ONE history gates
     # the load path, the control plane, the reliability metrics, and the
     # dedup/migration wins together.
+    # fig16 additionally re-runs its headline fleet cell with the span
+    # tracer attached (DESIGN.md §18): the obs section lands in the same
+    # BENCH entry (gated by check_bench's observability invariants) and
+    # the Perfetto trace is written for the workflow artifact upload.
     python -m benchmarks.fig15_fastpath --smoke --out BENCH_fastpath.json
-    python -m benchmarks.fig16_serverless --smoke --merge-into BENCH_fastpath.json
+    python -m benchmarks.fig16_serverless --smoke --merge-into BENCH_fastpath.json \
+        --trace-out fig16_fleet_trace.json
     python -m benchmarks.fig17_chaos --smoke --merge-into BENCH_fastpath.json
     python -m benchmarks.fig18_migration --smoke --merge-into BENCH_fastpath.json
     python -m benchmarks.fig19_dedup --smoke --merge-into BENCH_fastpath.json

@@ -46,6 +46,8 @@ from repro.core.trace import (Request, SimModel, percentile,
                               synthetic_tensor_sizes,
                               synthetic_variant_records)
 from repro.models.tensors import TensorRecord
+from repro.obs import NULL_TRACER, BoundedLog, trace_request
+from repro.stats import ClusterSummaryStats
 
 
 @dataclass(frozen=True)
@@ -454,8 +456,12 @@ class ClusterSim:
     def __init__(self, models: Sequence[SimModel], policy: SimPolicy, *,
                  n_workers: int = 1, hw: Optional[Hardware] = None, seed: int = 0,
                  pool_bytes: Optional[int] = None, indexed: bool = True,
-                 variants: Sequence = ()):
+                 variants: Sequence = (), tracer=None):
         self.hw = hw or paper_l40()
+        # obs plane (DESIGN.md §18): spans carry VIRTUAL trace-clock
+        # timestamps — the sim never reads a wall clock, so a replay at a
+        # fixed seed serializes a bit-identical trace
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.costs = PhaseCosts(self.hw, criu=policy.criu, medusa=policy.medusa)
         self.policy = policy
         self.models = {m.model_id: m for m in models}
@@ -501,9 +507,9 @@ class ClusterSim:
             w.lifecycle = self.lifecycle
             w.cluster = self  # migration target discovery (DESIGN.md §16)
         self.migrations = 0
-        # handoff log: (time, model, src, dst, stall_s, moved_done)
-        self.migrate_log: list[tuple[float, str, str, str, float,
-                                     float]] = []
+        # handoff log: (time, model, src, dst, stall_s, moved_done) —
+        # bounded ring with counted drops (DESIGN.md §18)
+        self.migrate_log: BoundedLog = BoundedLog(4096)
         # current fleet-wide host-tier budget: pressure events move it, and
         # a failed node that recovers must rejoin at the CURRENT budget,
         # not the policy's original one
@@ -773,6 +779,8 @@ class ClusterSim:
         done = now + res.ttft - res.queue_s + res.decode_s
         inst.expected_free = max(inst.expected_free, done)
         self.results.append(res)
+        if self.tracer.enabled:
+            self._trace_result(res, w.device_id)
         self._push(done, "request_done",
                    (w.device_id, req.model_id, req.batch_size, inst.seq))
         return True
@@ -800,8 +808,25 @@ class ClusterSim:
         done = now + res.ttft - res.queue_s + res.decode_s
         inst.expected_free = max(inst.expected_free, done)
         self.results.append(res)
+        if self.tracer.enabled:
+            self._trace_result(res, w.device_id)
         self._push(done, "request_done",
                    (w.device_id, req.model_id, req.batch_size, inst.seq))
+
+    def _trace_result(self, res: RequestResult, engine: str) -> None:
+        """Emit the request's span family on the virtual trace clock
+        (DESIGN.md §18).  The sim's priced phase durations double as their
+        own cost-model predictions (queue is emergent, not priced), so
+        ``span_cost_ratio`` pins at 1.0 here — any drift means a phase got
+        billed into TTFT without being priced, or vice versa."""
+        phases = [(name, getattr(res, f"{name}_s"))
+                  for name in ("queue", "init", "load", "merge", "profile",
+                               "prefill")]
+        trace_request(self.tracer, rid=len(self.results) - 1,
+                      model_id=res.model_id, arrival=res.arrival,
+                      ttft=res.ttft, phases=phases, decode_s=res.decode_s,
+                      cold=not res.warm, engine=engine,
+                      preds={n: d for n, d in phases if n != "queue"})
 
     # ------------------------------------------------ live KV migration §16
     def migration_target(self, src: SimWorker, victim: WorkerInstance,
@@ -869,6 +894,11 @@ class ClusterSim:
         self.migrate_log.append((round(now, 6), model_id, src.device_id,
                                  target.device_id, round(stall, 6),
                                  round(done, 6)))
+        if self.tracer.enabled:
+            self.tracer.instant("migrate", now, track="cluster",
+                                args={"model": model_id,
+                                      "src": src.device_id,
+                                      "dst": target.device_id})
 
     # ------------------------------------------------------------- main loop
     def inject_failure(self, time: float, worker_id: str,
@@ -962,6 +992,11 @@ class ClusterSim:
             elif kind == "fail":
                 wid, recover_after = payload
                 w = byid[wid]
+                if self.tracer.enabled:
+                    # flight-recorder hook: the dump snapshots the span
+                    # timeline that led into the node death
+                    self.tracer.record_fault("engine.crash", now,
+                                             args={"engine": wid})
                 if self.lifecycle is not None:
                     for model in w.instances:  # node death scales all to zero
                         self.lifecycle.on_expire(model, now)
@@ -994,6 +1029,10 @@ class ClusterSim:
             elif kind == "recover":
                 w = byid[payload]
                 w.failed = False
+                if self.tracer.enabled:
+                    self.tracer.instant("engine.recover", now,
+                                        track="faults",
+                                        args={"engine": payload})
                 # rejoin at the CURRENT budget in every policy: pressure
                 # events during the downtime already hit this worker (the
                 # pressure handler walks ALL workers), but re-applying here
@@ -1012,6 +1051,9 @@ class ClusterSim:
             elif kind == "pressure":
                 # co-located tenants resized the host tier on every node;
                 # eviction-on-shrink happens inside the cache (LRU spill)
+                if self.tracer.enabled:
+                    self.tracer.instant("pressure", now, track="cluster",
+                                        args={"capacity_bytes": payload})
                 self._host_cap = payload
                 for w in self.workers:
                     w.store.set_host_capacity(payload)
@@ -1025,18 +1067,22 @@ def summarize(results: Sequence[RequestResult]) -> dict[str, float]:
         return {}
     ttfts = sorted(r.ttft for r in results)
     makespan = max(r.done for r in results) - min(r.arrival for r in results)
-    return {
-        "n": len(results),
-        "ttft_mean": st.fmean(ttfts),
-        "ttft_p50": percentile(ttfts, 0.50),
-        "ttft_p99": percentile(ttfts, 0.99),
-        "load_mean": st.fmean(r.load_phase for r in results),
-        "warm_frac": sum(r.warm for r in results) / len(results),
-        "joined_frac": sum(r.joined for r in results) / len(results),
-        "reuse_frac_mean": st.fmean(r.reuse_fraction for r in results),
-        "bytes_from_store_total": sum(r.bytes_from_store for r in results),
-        "bytes_store_hidden_total": sum(r.bytes_store_hidden for r in results),
-        "prefetched_frac": sum(r.prefetched for r in results) / len(results),
-        "makespan": makespan,
-        "throughput_rps": len(results) / makespan if makespan > 0 else 0.0,
-    }
+    # typed snapshot (DESIGN.md §18): field order of ClusterSummaryStats IS
+    # this rollup's legacy key order, so as_dict() is bit-identical to the
+    # old literal
+    return ClusterSummaryStats(
+        n=len(results),
+        ttft_mean=st.fmean(ttfts),
+        ttft_p50=percentile(ttfts, 0.50),
+        ttft_p99=percentile(ttfts, 0.99),
+        load_mean=st.fmean(r.load_phase for r in results),
+        warm_frac=sum(r.warm for r in results) / len(results),
+        joined_frac=sum(r.joined for r in results) / len(results),
+        reuse_frac_mean=st.fmean(r.reuse_fraction for r in results),
+        bytes_from_store_total=sum(r.bytes_from_store for r in results),
+        bytes_store_hidden_total=sum(r.bytes_store_hidden
+                                     for r in results),
+        prefetched_frac=sum(r.prefetched for r in results) / len(results),
+        makespan=makespan,
+        throughput_rps=len(results) / makespan if makespan > 0 else 0.0,
+    ).as_dict()

@@ -36,7 +36,9 @@ from __future__ import annotations
 
 from collections import Counter, defaultdict
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
+
+from repro.obs import BoundedLog
 
 #: The named fault points the planes consult (see module docstring).
 FAULT_POINTS = ("store.read", "h2d.chunk", "prefetch.worker",
@@ -86,7 +88,15 @@ class FaultInjector:
         self._counts: Counter = Counter()  # point -> occurrences seen
         self._key_counts: Counter = Counter()  # (point, key) -> occurrences
         self.injected: Counter = Counter()  # point -> faults fired
-        self.log: list[tuple[str, int, str, str]] = []  # (point, idx, key, mode)
+        # (point, idx, key, mode) ring: bounded + drop-counted (DESIGN.md
+        # §18 shared helper; the old inline `del log[:2048]` trim is gone)
+        self.log: BoundedLog = BoundedLog(4096)
+        # flight-recorder hook (DESIGN.md §18): the engine that owns this
+        # injector points it at `tracer.record_fault`, so every injection
+        # auto-dumps the span timeline that led into it.  Survives `arm()`
+        # — re-arming replaces the schedule, not the observability wiring.
+        self.observer: Optional[Callable[[str, int, str, str], None]] = \
+            getattr(self, "observer", None)
 
     def fire(self, point: str, key: Optional[str] = None
              ) -> Optional[FaultSpec]:
@@ -109,8 +119,8 @@ class FaultInjector:
                 continue
             self.injected[point] += 1
             self.log.append((point, idx, key or "", spec.mode))
-            if len(self.log) > 4096:  # bounded, like the promote log
-                del self.log[:2048]
+            if self.observer is not None:
+                self.observer(point, idx, key or "", spec.mode)
             return spec
         return None
 
@@ -131,6 +141,8 @@ class FaultInjector:
         the injected==handled balance covers them too."""
         self.injected[point] += 1
         self.log.append((point, self._counts[point], key or "", mode))
+        if self.observer is not None:
+            self.observer(point, self._counts[point], key or "", mode)
         self._counts[point] += 1
 
     def injected_total(self) -> int:

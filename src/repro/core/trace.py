@@ -74,16 +74,10 @@ class Request:
     batch_size: int
 
 
-def percentile(xs: Sequence[float], q: float) -> float:
-    """The ONE percentile index convention every plane reports with:
-    sorted values, index ``min(n - 1, int(n * q))``, 0.0 on empty input.
-    ``core.cluster.summarize`` and the serverless ``MetricsSink`` both
-    route through here, so fig8/fig16 percentiles cannot drift apart
-    (tests/test_serverless.py pins the convention)."""
-    xs = sorted(xs)
-    if not xs:
-        return 0.0
-    return xs[min(len(xs) - 1, int(len(xs) * q))]
+# The ONE percentile convention now lives with the metrics registry
+# (DESIGN.md §18); re-exported here because core.cluster.summarize and the
+# serverless MetricsSink historically import it from this module.
+from repro.obs.metrics import percentile  # noqa: E402,F401
 
 
 def synthetic_tensor_sizes(model: SimModel, rng: random.Random) -> list[int]:

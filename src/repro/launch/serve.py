@@ -45,6 +45,53 @@ from repro.models import build_model
 from repro.serving.engine import Engine
 
 
+def _print_ttft_breakdown(records):
+    """Per-phase TTFT breakdown table over a replay's TTFTRecords: where
+    the time-to-first-token actually went, phase by phase (DESIGN.md §18)."""
+    from repro.core.trace import percentile
+
+    n = len(records)
+    if n == 0:
+        return
+    ttft_total = sum(r.ttft for r in records) or 1e-12
+    print("TTFT breakdown (decode excluded):")
+    print(f"  {'phase':8s} {'mean':>9s} {'p95':>9s} {'share':>7s}")
+    for phase in ("queue", "init", "load", "profile", "prefill"):
+        xs = sorted(getattr(r, f"{phase}_s") for r in records)
+        total = sum(xs)
+        print(f"  {phase:8s} {total / n:8.3f}s {percentile(xs, 0.95):8.3f}s "
+              f"{total / ttft_total:6.1%}")
+    print(f"  {'ttft':8s} {ttft_total / n:8.3f}s "
+          f"{percentile(sorted(r.ttft for r in records), 0.95):8.3f}s "
+          f"{1.0:6.1%}")
+
+
+def _export_obs(tracer, args, extra_summary=None):
+    """Write --trace-out (Perfetto JSON) and --metrics-out (unified metrics
+    snapshot) from the run's tracer."""
+    if tracer is None:
+        return
+    if args.trace_out:
+        from repro.obs import write_chrome_trace
+
+        write_chrome_trace(tracer.events(), args.trace_out)
+        print(f"trace written: {args.trace_out} "
+              f"({len(tracer.events())} events — load at ui.perfetto.dev)")
+    if args.metrics_out:
+        import json
+
+        from repro.obs import MetricsRegistry, obs_stats
+
+        reg = MetricsRegistry()
+        if extra_summary:
+            reg.absorb(extra_summary, prefix="summary")
+        snap = reg.snapshot().as_dict()
+        snap["obs"] = obs_stats(tracer)
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+        print(f"metrics written: {args.metrics_out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--models", default="llama3.2-1b,deepseek-7b")
@@ -80,6 +127,13 @@ def main():
                          "recover on the fleet path — and print the fault "
                          "ledger at the end")
     ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="FILE.json",
+                    help="write the run's span timeline as Chrome/Perfetto "
+                         "trace-event JSON (DESIGN.md §18) — load it at "
+                         "ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.json",
+                    help="write the unified metrics snapshot (summary "
+                         "counters + span accounting) as JSON")
     args = ap.parse_args()
     if args.n_engines < 1:
         ap.error("--n-engines must be >= 1")
@@ -105,12 +159,22 @@ def main():
         injectors = [FaultInjector(specs=tuple(s), seed=args.chaos_seed)
                      for s in specs]
 
+    # obs plane (DESIGN.md §18): one tracer across the engines and the
+    # gateway — engine spans stamp perf_counter walls, request span
+    # families ride the virtual trace clock, each on its own track
+    tracer = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import FlightRecorder, Tracer
+
+        tracer = Tracer(flight=FlightRecorder())
+
     names = args.models.split(",")
     host_bytes = (None if args.host_cache_mb is None
                   else args.host_cache_mb * 1024 * 1024)
     engines = [Engine(args.pool_mb * 1024 * 1024, host_cache_bytes=host_bytes,
                       engine_id=f"engine{i}",
-                      faults=injectors[i] if injectors else None)
+                      faults=injectors[i] if injectors else None,
+                      tracer=tracer)
                for i in range(args.n_engines)]
     engine = engines[0]
     cfgs = {}
@@ -139,7 +203,7 @@ def main():
             gw = FleetGateway(engines, keep_alive=args.keep_alive_policy,
                               prefetch=args.prefetch, prewarm=args.prewarm,
                               prompt_len=args.prompt_len,
-                              gen_tokens=args.gen_tokens)
+                              gen_tokens=args.gen_tokens, tracer=tracer)
             sink = gw.run_trace(trace, faults=fault_events)
             for i, (r, d) in enumerate(zip(sink.records, gw.decisions)):
                 print(f"req {i}: {r.model_id:16s} -> {d[2]} "
@@ -149,7 +213,7 @@ def main():
         else:
             gw = Gateway(engine, keep_alive=args.keep_alive_policy,
                          prefetch=args.prefetch, prompt_len=args.prompt_len,
-                         gen_tokens=args.gen_tokens)
+                         gen_tokens=args.gen_tokens, tracer=tracer)
             sink = gw.run_trace(trace)
             for i, r in enumerate(sink.records):
                 print(f"req {i}: {r.model_id:16s} "
@@ -183,6 +247,8 @@ def main():
                       f"crashes={fsum['engine_crashes']} "
                       f"recoveries={fsum['engine_recoveries']} "
                       f"redriven={fsum['requests_redriven']}")
+        _print_ttft_breakdown(sink.records)
+        _export_obs(tracer, args, extra_summary=s)
         for eng in engines:
             eng.close()
         return
@@ -222,6 +288,7 @@ def main():
               f"(modeled load {rep.load_seconds*1e3:6.1f}ms, wall {load_s:.2f}s) "
               f"prefill {prefill_s:.2f}s decode {decode_s/args.gen_tokens*1e3:.0f}ms/tok "
               f"pool_free={engine.store.free_bytes()/1e6:.0f}MB{pf}")
+    _export_obs(tracer, args)
 
 
 if __name__ == "__main__":

@@ -58,7 +58,8 @@ from repro.core.scheduler import ScheduleEntry, affinity_schedule
 from repro.core.trace import (Request, SimModel, synthetic_tensor_sizes,
                               synthetic_variant_records)
 from repro.models.tensors import ModelSpec, TensorRecord, VariantSpec
-from repro.stats import FleetStats
+from repro.obs import NULL_TRACER, BoundedLog, trace_request
+from repro.stats import FleetStats, ModeledFaultStats
 from repro.serverless.gateway import (MetricsSink, TTFTRecord,
                                       make_prefill_batch)
 from repro.serverless.lifecycle import LifecycleManager, make_keep_alive
@@ -80,8 +81,12 @@ class ModeledEngine:
                  host_cache_bytes: Optional[int] = None,
                  host_keep_alive_s: Optional[float] = None,
                  hint_ttl_s: Optional[float] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 tracer=None):
         self.engine_id = engine_id
+        # obs plane (DESIGN.md §18): modeled spans carry explicit virtual
+        # trace-clock stamps — this engine never reads a wall clock
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.store = ReuseStore(capacity_bytes,
                                 costs or PhaseCosts(paper_l40()))
         self.store.host_cache = SimHostCache(host_cache_bytes,
@@ -120,6 +125,11 @@ class ModeledEngine:
                 self.store_retries += 1
                 rep.load_seconds += self.store.costs.store_retry_time(
                     rep.bytes_from_store)
+                if self.tracer.enabled:
+                    self.tracer.instant("store.retry", now,
+                                        track=f"eng:{self.engine_id}",
+                                        cat="fault",
+                                        args={"model": model_id})
         self.last_report = rep
         return rep
 
@@ -139,12 +149,13 @@ class ModeledEngine:
         self.last_report = None
 
     def fault_summary(self) -> dict:
-        return {
-            "injected": (self.faults.ledger() if self.faults is not None
-                         else {}),
-            "store_retries": self.store_retries,
-            "crashes": self.crashes,
-        }
+        # typed snapshot (DESIGN.md §18): field order = legacy key order
+        return ModeledFaultStats(
+            injected=(self.faults.ledger() if self.faults is not None
+                      else {}),
+            store_retries=self.store_retries,
+            crashes=self.crashes,
+        ).as_dict()
 
     def prefetch(self, model_id: str, *, now: float = 0.0):
         self.store.hint_prefetch(model_id, self.models[model_id], now)
@@ -253,8 +264,15 @@ class FleetGateway:
                  prewarm: bool = True, prewarm_min_benefit: float = 0.0,
                  policy: str = "eq3+queue", prompt_len: int = 16,
                  gen_tokens: int = 4, num_pages: int = 64,
-                 migrate: bool = False, migrate_replay_tokens: int = 4):
+                 migrate: bool = False, migrate_replay_tokens: int = 4,
+                 tracer=None):
         assert len(engines) >= 1
+        # obs plane (DESIGN.md §18): per-request span families on the
+        # virtual trace clock + fault/migration instants; `_last_preds` is
+        # the serve seam's side channel carrying each phase's cost-model
+        # prediction into the request's spans (the span/cost cross-check)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._last_preds: Optional[dict] = None
         self.nodes = [EngineNode(e, prefetch=prefetch) for e in engines]
         ids = [n.device_id for n in self.nodes]
         assert len(set(ids)) == len(ids), f"duplicate engine ids: {ids}"
@@ -292,9 +310,9 @@ class FleetGateway:
         self.migrate_enabled = migrate
         self.migrate_replay_tokens = migrate_replay_tokens
         self.migrations = 0
-        # handoff log: (time, model, src, dst, stall_s, moved_done)
-        self.migrate_log: list[tuple[float, str, str, str, float,
-                                     float]] = []
+        # handoff log: (time, model, src, dst, stall_s, moved_done) —
+        # bounded ring with counted drops (DESIGN.md §18)
+        self.migrate_log: BoundedLog = BoundedLog(4096)
         self._seq = itertools.count()
         self._req_seq = itertools.count()  # prefill batch seeds (real plane)
 
@@ -442,6 +460,11 @@ class FleetGateway:
         self.migrate_log.append((round(now, 6), entry["model"],
                                  node.device_id, target.device_id,
                                  round(stall, 6), round(moved_done, 6)))
+        if self.tracer.enabled:
+            self.tracer.instant("migrate", now, track="fleet",
+                                args={"model": entry["model"],
+                                      "src": node.device_id,
+                                      "dst": target.device_id})
 
     # ------------------------------------------------------------ lifecycle
     def _expire_all(self, now: float):
@@ -580,6 +603,11 @@ class FleetGateway:
             node.engine.crash()  # cold tiers at the CURRENT capacity budget
             self.log.append(("crash", round(now, 6), "", engine_id, 0.0))
             self.sink.record_fault(now, "crash", engine_id)
+            if self.tracer.enabled:
+                # flight-recorder dump on the TRACE clock (the real plane's
+                # Engine.crash also records, on its wall clock)
+                self.tracer.record_fault("engine.crash", now,
+                                         args={"engine": engine_id})
         else:
             node.failed = False
             self.engine_recoveries += 1
@@ -592,6 +620,9 @@ class FleetGateway:
                 injector.record("engine.recover", key=engine_id)
             self.log.append(("recover", round(now, 6), "", engine_id, 0.0))
             self.sink.record_fault(now, "recover", engine_id)
+            if self.tracer.enabled:
+                self.tracer.instant("engine.recover", now, track="faults",
+                                    args={"engine": engine_id})
 
     def _advance(self, now: float, press: Sequence[PressureEvent],
                  pi: int) -> int:
@@ -681,6 +712,20 @@ class FleetGateway:
             self.decisions.append((round(now, 6), model, node.device_id,
                                    cold, round(queue_s, 6)))
             self.sink.add(rec)
+            if self.tracer.enabled:
+                # span-accounting identity (DESIGN.md §18): the parent span
+                # is the REPORTED ttft, children are the phase fields — a
+                # phase folded into the sum without a span shows up as
+                # unattributed time, and check_bench fails the entry
+                trace_request(
+                    self.tracer, rid=len(self.sink.records) - 1,
+                    model_id=model, arrival=now, ttft=rec.ttft,
+                    phases=[("queue", rec.queue_s), ("init", rec.init_s),
+                            ("load", rec.load_s),
+                            ("profile", rec.profile_s),
+                            ("prefill", rec.prefill_s)],
+                    decode_s=rec.decode_s, cold=cold,
+                    engine=node.device_id, preds=self._last_preds)
             # post-serve keep-alive: the warm entry was popped at admission,
             # so a stale warm-until can never truncate the fresh TTL (the
             # same idle_epoch-style guard the Gateway and sim carry)
@@ -703,7 +748,7 @@ class FleetGateway:
 
         eng = node.engine
         t0 = _time.perf_counter()
-        submit_load(eng, LoadRequest(req.model_id, now=now))
+        rep = submit_load(eng, LoadRequest(req.model_id, now=now))
         load_s = _time.perf_counter() - t0
         stats = eng.last_load
         load_s = max(0.0, load_s - stats.init_seconds
@@ -726,6 +771,9 @@ class FleetGateway:
             profile_s=stats.profile_seconds, prefill_s=prefill_s,
             decode_s=decode_s, prefetched=stats.bytes_prefetched > 0,
             bytes_from_store=stats.bytes_store)
+        # span/cost cross-check: the measured load wall vs the cost plane's
+        # tiered price for the same bytes (the only phase both planes state)
+        self._last_preds = {"load": rep.load_seconds}
         return rec, service_s
 
     # -------------------------------------------------------------- summary
@@ -791,7 +839,7 @@ class ModeledFleetGateway(FleetGateway):
                  policy: str = "eq3+queue",
                  faults: Optional[Sequence[FaultInjector]] = None,
                  migrate: bool = False, migrate_replay_tokens: int = 4,
-                 variants: Sequence[VariantSpec] = ()):
+                 variants: Sequence[VariantSpec] = (), tracer=None):
         hw = hw or paper_l40()
         costs = PhaseCosts(hw)
         rng = random.Random(seed + 17)  # the sim's record-size convention
@@ -822,7 +870,8 @@ class ModeledFleetGateway(FleetGateway):
             eng = ModeledEngine(f"engine{i}", pool_bytes, costs=costs,
                                 host_cache_bytes=host_cache_bytes,
                                 host_keep_alive_s=host_keep_alive_s,
-                                faults=faults[i] if faults else None)
+                                faults=faults[i] if faults else None,
+                                tracer=tracer)
             for mid, recs in records.items():
                 eng.register(specs[mid], recs)
             engines.append(eng)
@@ -830,7 +879,8 @@ class ModeledFleetGateway(FleetGateway):
                          prefetch=prefetch, prewarm=prewarm,
                          prewarm_min_benefit=prewarm_min_benefit,
                          policy=policy, migrate=migrate,
-                         migrate_replay_tokens=migrate_replay_tokens)
+                         migrate_replay_tokens=migrate_replay_tokens,
+                         tracer=tracer)
         self._sim = sims
 
     def _migration_meta(self, req: Request) -> dict:
@@ -864,5 +914,10 @@ class ModeledFleetGateway(FleetGateway):
             prefill_s=prefill_s, decode_s=decode_s,
             prefetched=rep.prefetched,
             bytes_from_store=rep.bytes_from_store)
+        # modeled phases ARE their own predictions (queue is emergent), so
+        # span_cost_ratio pins at 1.0 — drift means a phase was billed into
+        # TTFT without being priced
+        self._last_preds = {"init": init_s, "load": load_s,
+                            "profile": profile_s, "prefill": prefill_s}
         service_s = init_s + load_s + profile_s + prefill_s + decode_s
         return rec, service_s

@@ -28,6 +28,7 @@ from typing import Optional, Sequence
 # core.cluster.summarize cannot drift apart); re-exported here because the
 # serverless package is where metrics consumers historically import it from
 from repro.core.trace import percentile  # noqa: F401
+from repro.obs import NULL_TRACER, trace_request
 from repro.serverless.lifecycle import LifecycleManager, make_keep_alive
 from repro.serverless.workload import PressureEvent
 
@@ -155,8 +156,11 @@ class Gateway:
 
     def __init__(self, engine, *, keep_alive: str = "fixed:60",
                  prefetch: bool = True, prompt_len: int = 16,
-                 gen_tokens: int = 4, num_pages: int = 64):
+                 gen_tokens: int = 4, num_pages: int = 64, tracer=None):
         self.engine = engine
+        # obs plane (DESIGN.md §18): per-request span families keyed by the
+        # trace clock; the engine's own spans ride its injected tracer
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.lifecycle = LifecycleManager(make_keep_alive(keep_alive))
         self.prefetch = prefetch
         self.prompt_len = prompt_len
@@ -240,7 +244,7 @@ class Gateway:
             queue_s = max(0.0, self._busy_until - now)
 
             t0 = _time.perf_counter()
-            self.engine.load(model, now=now)
+            rep = self.engine.load(model, now=now)
             load_s = _time.perf_counter() - t0
             stats = self.engine.last_load
             # keep the phase split disjoint (one vocabulary with the sim
@@ -270,11 +274,27 @@ class Gateway:
             self._busy_until = now + queue_s + service_s
 
             self._finish_request(model, now)
-            self.sink.add(TTFTRecord(
+            rec = TTFTRecord(
                 model_id=model, arrival=now, cold=cold, queue_s=queue_s,
                 init_s=stats.init_seconds, load_s=load_s,
                 profile_s=stats.profile_seconds,
                 prefill_s=prefill_s, decode_s=decode_s,
                 prefetched=stats.bytes_prefetched > 0,
-                bytes_from_store=stats.bytes_store))
+                bytes_from_store=stats.bytes_store)
+            self.sink.add(rec)
+            if self.tracer.enabled:
+                # span-accounting identity (DESIGN.md §18): parent span is
+                # the REPORTED ttft, children the measured phase walls laid
+                # on the trace clock; the engine's cost plane supplies the
+                # load prediction for the span/cost cross-check
+                trace_request(
+                    self.tracer, rid=len(self.sink.records) - 1,
+                    model_id=model, arrival=now, ttft=rec.ttft,
+                    phases=[("queue", rec.queue_s), ("init", rec.init_s),
+                            ("load", rec.load_s),
+                            ("profile", rec.profile_s),
+                            ("prefill", rec.prefill_s)],
+                    decode_s=rec.decode_s, cold=cold,
+                    engine=self.engine.engine_id,
+                    preds={"load": rep.load_seconds})
         return self.sink

@@ -55,7 +55,8 @@ from repro.models.common import rms_norm
 from repro.models.tensors import (HostTensorStore, ModelSpec, PersistentStore,
                                   StoreError, TensorRecord, VariantSpec,
                                   leaf_path, tensor_records)
-from repro.stats import snapshot_dict
+from repro.obs import NULL_TRACER, BoundedLog
+from repro.stats import EngineFaultStats, snapshot_dict
 
 log = logging.getLogger(__name__)
 
@@ -184,7 +185,8 @@ class ChunkedTransfer:
     def __init__(self, *, chunk_bytes: int = 16 << 20, depth: int = 2,
                  max_retries: int = 2, timeout_s: Optional[float] = None,
                  faults: Optional[FaultInjector] = None,
-                 fault_stats: Optional[FaultStats] = None):
+                 fault_stats: Optional[FaultStats] = None,
+                 tracer=NULL_TRACER, track: str = "h2d"):
         assert depth >= 1
         self.chunk_bytes = chunk_bytes
         self.depth = depth
@@ -192,6 +194,10 @@ class ChunkedTransfer:
         self.timeout_s = timeout_s
         self.faults = faults
         self.fault_stats = fault_stats
+        # obs plane (DESIGN.md §18): per-chunk h2d spans on the owning
+        # engine's track; NULL_TRACER keeps the hot path branch-only
+        self.tracer = tracer
+        self.track = track
 
     def _put(self, host_slice, stats: Optional[DataLoadStats]) -> jax.Array:
         """One chunk's h2d with bounded retries (each attempt re-consults
@@ -208,6 +214,10 @@ class ChunkedTransfer:
                             _time.sleep(spec.delay_s)
                         else:
                             raise TransferError("injected h2d chunk failure")
+                if self.tracer.enabled:
+                    with self.tracer.span("h2d.chunk", track=self.track,
+                                          cat="h2d"):
+                        return jax.device_put(host_slice)
                 return jax.device_put(host_slice)
             except TransferError as e:
                 # count BEFORE the limit check: the final, re-raised failure
@@ -347,7 +357,9 @@ class Prefetcher:
         self.restarts = 0  # worker deaths the supervisor recovered from
         self.join_timeouts = 0  # close() joins that left the worker running
         self.join_timeout_s = 5.0  # close() join budget before declaring hung
-        self.promote_log: list[tuple[str, str]] = []  # (model, fp) in order
+        # (model, fp) in promotion order — bounded ring with counted drops
+        # (DESIGN.md §18; the old inline `del promote_log[:2048]` is gone)
+        self.promote_log: BoundedLog = BoundedLog(4096)
 
     def close(self):
         """Stop the worker thread (idempotent).  Pending jobs complete their
@@ -516,9 +528,10 @@ class Prefetcher:
                 job.cursor += 1
             eng = self.engine
             # getattr: tests drive the Prefetcher with duck-typed engine
-            # stubs that predate the chaos plane
+            # stubs that predate the chaos and obs planes
             faults = getattr(eng, "faults", None)
             fault_stats = getattr(eng, "fault_stats", None)
+            tracer = getattr(eng, "tracer", NULL_TRACER)
             try:
                 if faults is not None:
                     spec = faults.fire("prefetch.worker",
@@ -531,6 +544,7 @@ class Prefetcher:
                 with eng._store_lock:
                     if (fp in eng.persistent_store
                             and fp not in eng.host_store):
+                        tb = _time.perf_counter() if tracer.enabled else 0.0
                         arr = eng.host_store.fetch(fp)
                         job.promoted.append((fp, arr.nbytes))
                         job.tensors_promoted += 1
@@ -540,10 +554,15 @@ class Prefetcher:
                         # the partial read's bytes
                         self.bytes_promoted += arr.nbytes
                         self.promote_log.append((job.model_id, fp))
-                        if len(self.promote_log) > 4096:
-                            # bounded: long-lived engines must not grow an
-                            # audit trail nothing in production reads
-                            del self.promote_log[:2048]
+                        if tracer.enabled:
+                            # worker-thread emit: the tracer's lock makes
+                            # this safe against a concurrent load's spans
+                            tracer.emit("prefetch.promote", tb,
+                                        _time.perf_counter(),
+                                        track=getattr(eng, "_track",
+                                                      "prefetch"),
+                                        cat="prefetch",
+                                        args={"model": job.model_id})
             except WorkerDeath:
                 # kills THIS worker: the job fails over (finally fires its
                 # event so joiners go inline) and the supervisor restarts
@@ -661,15 +680,28 @@ class Engine:
                  host_keep_alive_s: Optional[float] = None,
                  engine_id: str = "engine0",
                  faults: Optional[FaultInjector] = None,
-                 transfer_timeout_s: Optional[float] = None):
+                 transfer_timeout_s: Optional[float] = None,
+                 tracer=None):
         # stable identity for fleet routing (the DeviceView's device_id)
         self.engine_id = engine_id
+        # obs plane (DESIGN.md §18): the engine's spans land on its own
+        # track, stamped with `tracer.clock` (perf_counter walls by default)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._track = f"eng:{engine_id}"
         self.store = ReuseStore(capacity_bytes, costs or PhaseCosts(paper_l40()))
         self.block_tokens = block_tokens
         self.models: dict[str, RegisteredModel] = {}
         # chaos plane (DESIGN.md §15): one injector shared by every fault
         # point in this engine's data plane; the ledger of outcomes
         self.faults = faults
+        if faults is not None and self.tracer.enabled:
+            # flight-recorder hook: every injected fault auto-dumps the
+            # span timeline that led into it (last engine wins when several
+            # engines share one injector — the dump still has every track)
+            self.faults.observer = (
+                lambda point, idx, key, mode: self.tracer.record_fault(
+                    point, args={"idx": idx, "key": key, "mode": mode,
+                                 "engine": engine_id}))
         self.fault_stats = FaultStats()
         self.crashes = 0  # Engine.crash() invocations (fleet chaos events)
         # default transfer deadline: explicit wins; under chaos a stalled
@@ -697,7 +729,8 @@ class Engine:
                                      depth=transfer_depth,
                                      timeout_s=self.transfer_timeout_s,
                                      faults=faults,
-                                     fault_stats=self.fault_stats)
+                                     fault_stats=self.fault_stats,
+                                     tracer=self.tracer, track=self._track)
         self._tensors: dict[str, jax.Array] = {}  # fingerprint -> live buffer
         self._params_cache: dict[str, Any] = {}  # model_id -> assembled tree
         self._slabs: dict[tuple, SharedKVSlab] = {}  # KV geometry -> slab
@@ -824,6 +857,11 @@ class Engine:
             tw = _time.perf_counter()
             joined = job.done.wait(timeout=self.join_timeout_s)
             stats.prefetch_wait_seconds = _time.perf_counter() - tw
+            if self.tracer.enabled:
+                self.tracer.emit("prefetch.join", tw,
+                                 tw + stats.prefetch_wait_seconds,
+                                 track=self._track, cat="prefetch",
+                                 args={"model": model_id})
             if not joined or job.failed:
                 self.fault_stats.join_failovers += 1
                 stats.prefetch_failover = True
@@ -872,6 +910,13 @@ class Engine:
         report.load_seconds = self.store.costs.load_time_tiered(
             report.bytes_from_host, report.bytes_from_store)
         self.last_load = stats
+        if self.tracer.enabled:
+            # measured load wall vs the cost plane's tiered prediction —
+            # the real-plane half of the span/cost cross-check (§18)
+            self.tracer.emit("load", t0, t0 + stats.total_seconds,
+                             track=self._track, cat="engine",
+                             args={"model": model_id,
+                                   "pred": report.load_seconds})
         return report
 
     def _load_tensors(self, reg: RegisteredModel, stats: DataLoadStats):
@@ -904,6 +949,10 @@ class Engine:
                         reg.records, params)
                 stats.init_seconds = _time.perf_counter() - tm
                 del params
+                if self.tracer.enabled:
+                    self.tracer.emit("init", tm, tm + stats.init_seconds,
+                                     track=self._track, cat="engine",
+                                     args={"model": reg.model_id})
             stats.tensors_host_hit = len(host_hits)
             stats.bytes_host_hit = sum(r.nbytes for r in host_hits)
             if spilled:
@@ -928,6 +977,13 @@ class Engine:
                 stats.store_retries = (self.host_store.read_retries
                                        - retries0)
                 stats.store_seconds = _time.perf_counter() - ts
+                if self.tracer.enabled:
+                    self.tracer.emit("store.read", ts,
+                                     ts + stats.store_seconds,
+                                     track=self._track, cat="engine",
+                                     args={"model": reg.model_id,
+                                           "bytes": promoted_bytes,
+                                           "retries": stats.store_retries})
                 stats.tensors_store = len(spilled) - len(quarantined)
                 stats.bytes_store = promoted_bytes
                 if quarantined:
@@ -945,6 +1001,11 @@ class Engine:
                     del params
                     stats.tensors_reinit = len(quarantined)
                     self.fault_stats.tensors_reinit += len(quarantined)
+                    if self.tracer.enabled:
+                        self.tracer.emit("init", tm, _time.perf_counter(),
+                                         track=self._track, cat="engine",
+                                         args={"model": reg.model_id,
+                                               "reinit": len(quarantined)})
             tt = _time.perf_counter()
             with self._store_lock:  # snapshot host buffers for the pipeline
                 items = [(r.fingerprint, self.host_store.get(r.fingerprint))
@@ -963,6 +1024,12 @@ class Engine:
                  stats.chunks_h2d) = h2d_snapshot  # don't double-count
                 moved = self._xfer.transfer(items, stats)
             stats.transfer_seconds = _time.perf_counter() - tt
+            if self.tracer.enabled:
+                self.tracer.emit("h2d", tt, tt + stats.transfer_seconds,
+                                 track=self._track, cat="engine",
+                                 args={"model": reg.model_id,
+                                       "bytes": stats.bytes_h2d,
+                                       "chunks": stats.chunks_h2d})
             self._tensors.update(moved)
         if to_move or reg.model_id not in self._params_cache:
             # assemble the param tree from resident buffers (no copies) —
@@ -971,6 +1038,10 @@ class Engine:
             self._params_cache[reg.model_id] = jax.tree.unflatten(
                 reg.treedef, [self._tensors[r.fingerprint] for r in reg.records])
             stats.profile_seconds = _time.perf_counter() - tp
+            if self.tracer.enabled:
+                self.tracer.emit("profile", tp, tp + stats.profile_seconds,
+                                 track=self._track, cat="engine",
+                                 args={"model": reg.model_id})
 
     # -------------------------------------------------------------- prefetch
     def prefetch(self, model_id: str, *, now: float = 0.0) -> PrefetchJob:
@@ -1028,6 +1099,11 @@ class Engine:
         next load.  The host tier's fault counters are folded into
         `fault_stats` first so the chaos ledger survives the object swap."""
         self.crashes += 1
+        if self.tracer.enabled:
+            # flight-recorder dump BEFORE the state swap: the timeline that
+            # led into the crash survives it (DESIGN.md §18)
+            self.tracer.record_fault("engine.crash",
+                                     args={"engine": self.engine_id})
         self.fault_stats.store_retries += self.host_store.read_retries
         self.fault_stats.store_quarantines += self.host_store.quarantines
         # in-flight prefetch hints own host-tier pins that nothing will ever
@@ -1066,28 +1142,30 @@ class Engine:
         handled/quarantined/failed-over outcome.  fig17 asserts the balance
         injected == sum(outcomes) — a fault the planes swallowed would show
         up here as an imbalance."""
-        fs, ps, hs, pf = (self.fault_stats, self.persistent_store,
-                          self.host_store, self.prefetcher)
-        return {
-            "injected": (self.faults.ledger() if self.faults is not None
-                         else {}),
-            "store_read_errors": ps.read_errors,
-            "store_checksum_failures": ps.checksum_failures,
-            "store_quarantined": ps.quarantined,
-            "store_retries": fs.store_retries + hs.read_retries,
-            "store_quarantines": fs.store_quarantines + hs.quarantines,
-            "h2d_retries": fs.h2d_retries,
-            "h2d_stalls": fs.h2d_stalls,
-            "transfer_timeouts": fs.transfer_timeouts,
-            "prefetch_errors": fs.prefetch_errors,
-            "worker_restarts": fs.worker_restarts,
-            "join_failovers": fs.join_failovers,
-            "load_errors": fs.load_errors,
-            "shutdown_join_timeouts": fs.shutdown_join_timeouts,
-            "prefetch_pins_dropped": fs.prefetch_pins_dropped,
-            "tensors_reinit": fs.tensors_reinit,
-            "crashes": self.crashes,
-        }
+        fs, ps, hs = (self.fault_stats, self.persistent_store,
+                      self.host_store)
+        # typed snapshot (DESIGN.md §18): EngineFaultStats' field order IS
+        # the legacy literal's key order, so as_dict() is bit-identical
+        return EngineFaultStats(
+            injected=(self.faults.ledger() if self.faults is not None
+                      else {}),
+            store_read_errors=ps.read_errors,
+            store_checksum_failures=ps.checksum_failures,
+            store_quarantined=ps.quarantined,
+            store_retries=fs.store_retries + hs.read_retries,
+            store_quarantines=fs.store_quarantines + hs.quarantines,
+            h2d_retries=fs.h2d_retries,
+            h2d_stalls=fs.h2d_stalls,
+            transfer_timeouts=fs.transfer_timeouts,
+            prefetch_errors=fs.prefetch_errors,
+            worker_restarts=fs.worker_restarts,
+            join_failovers=fs.join_failovers,
+            load_errors=fs.load_errors,
+            shutdown_join_timeouts=fs.shutdown_join_timeouts,
+            prefetch_pins_dropped=fs.prefetch_pins_dropped,
+            tensors_reinit=fs.tensors_reinit,
+            crashes=self.crashes,
+        ).as_dict()
 
     def cancel_prefetch(self, model_id: str):
         """Withdraw an abandoned hint: stop the in-flight promotion and drop
@@ -1338,6 +1416,9 @@ class Engine:
         interleaved in the same buffers.  Same-model instances on one slab
         are FUSED into a single dispatch (their batches concatenate along B;
         per-row numerics are unchanged).  Returns per-instance logits."""
+        # hot path: with tracing disabled this is one attribute load and a
+        # branch at entry/exit, zero allocations (tests/test_obs.py pins it)
+        tb = _time.perf_counter() if self.tracer.enabled else 0.0
         out: list[Optional[jnp.ndarray]] = [None] * len(steps)
         groups: dict[tuple, list[int]] = {}
         for i, (inst, _tok) in enumerate(steps):
@@ -1355,6 +1436,10 @@ class Engine:
             out_slices = self._decode_fused([steps[i] for i in idxs])
             for i, logits in zip(idxs, out_slices):
                 out[i] = logits
+        if self.tracer.enabled:
+            self.tracer.emit("decode.step", tb, _time.perf_counter(),
+                             track=self._track, cat="decode",
+                             args={"instances": len(steps)})
         return out  # type: ignore[return-value]
 
     def _decode_fused(self, group: list[tuple["Instance", jnp.ndarray]]
@@ -1460,6 +1545,16 @@ class Instance:
     # ---------------------------------------------------------------- prefill
     def prefill(self, batch: dict, *, lengths: Optional[Sequence[int]] = None
                 ) -> jnp.ndarray:
+        """Traced entry point — see `_prefill_impl` for the semantics."""
+        eng = self.engine
+        if eng.tracer.enabled:
+            with eng.tracer.span("prefill", track=eng._track, cat="engine",
+                                 args={"model": self.reg.model_id}):
+                return self._prefill_impl(batch, lengths=lengths)
+        return self._prefill_impl(batch, lengths=lengths)
+
+    def _prefill_impl(self, batch: dict, *,
+                      lengths: Optional[Sequence[int]] = None) -> jnp.ndarray:
         """Run the prompt; populate paged KV (or state cache).
 
         `lengths`: optional per-sequence prompt lengths (<= padded S) for

@@ -79,6 +79,81 @@ class DedupStats(Snapshot):
 
 
 @dataclass(frozen=True)
+class ClusterSummaryStats(Snapshot):
+    """`core.cluster.summarize` schema (DESIGN.md §18): the whole-run sim
+    rollup the fig benchmarks consume.  Field order IS the legacy dict's
+    key order — `summarize()` now builds this and returns `as_dict()`, so
+    the keys are bit-identical to the pre-§18 literal."""
+
+    n: int = 0
+    ttft_mean: float = 0.0
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    load_mean: float = 0.0
+    warm_frac: float = 0.0
+    joined_frac: float = 0.0
+    reuse_frac_mean: float = 0.0
+    bytes_from_store_total: int = 0
+    bytes_store_hidden_total: int = 0
+    prefetched_frac: float = 0.0
+    makespan: float = 0.0
+    throughput_rps: float = 0.0
+
+
+@dataclass(frozen=True)
+class EngineFaultStats(Snapshot):
+    """`Engine.fault_summary()` schema — the real plane's chaos ledger
+    (DESIGN.md §15).  fig17 balances ``injected`` against the outcome
+    counters; field order matches the legacy dict literal bit-for-bit."""
+
+    injected: dict = None  # type: ignore[assignment]  # per-point counts
+    store_read_errors: int = 0
+    store_checksum_failures: int = 0
+    store_quarantined: int = 0
+    store_retries: int = 0
+    store_quarantines: int = 0
+    h2d_retries: int = 0
+    h2d_stalls: int = 0
+    transfer_timeouts: int = 0
+    prefetch_errors: int = 0
+    worker_restarts: int = 0
+    join_failovers: int = 0
+    load_errors: int = 0
+    shutdown_join_timeouts: int = 0
+    prefetch_pins_dropped: int = 0
+    tensors_reinit: int = 0
+    crashes: int = 0
+
+
+@dataclass(frozen=True)
+class ModeledFaultStats(Snapshot):
+    """`ModeledEngine.fault_summary()` schema — the modeled plane tracks
+    the subset of the ledger it can observe (priced retries + crashes)."""
+
+    injected: dict = None  # type: ignore[assignment]
+    store_retries: int = 0
+    crashes: int = 0
+
+
+@dataclass(frozen=True)
+class ObsStats(Snapshot):
+    """The bench entry's ``obs`` section (DESIGN.md §18): span-accounting
+    identity + cost-model cross-check + tracer health.  check_bench
+    hard-fails ``unattributed_frac > 0.02`` and any non-finite
+    ``span_cost_ratio`` value on new entries."""
+
+    n_requests: int = 0
+    ttft_total: float = 0.0
+    attributed_total: float = 0.0
+    unattributed_frac: float = 0.0
+    violations: int = 0  # requests whose own identity broke epsilon
+    phase_seconds: dict = None  # type: ignore[assignment]
+    span_cost_ratio: dict = None  # type: ignore[assignment]
+    trace_events: int = 0
+    dropped_events: int = 0
+
+
+@dataclass(frozen=True)
 class FleetStats(Snapshot):
     """Control-plane counters of a fleet gateway run (DESIGN.md §14–§16).
 
